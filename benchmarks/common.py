@@ -1,0 +1,38 @@
+"""Shared benchmark plumbing: timing + CSV row conventions.
+
+Every benchmark module exposes ``rows() -> List[Row]``; ``run.py``
+aggregates and prints ``name,us_per_call,derived`` CSV.  ``us_per_call``
+is measured on this CPU host (harness cost); ``derived`` carries the
+modeled/derived quantity the paper's artifact is about (TFLOPS, tokens/s,
+tokens/W, ...).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+              **kwargs) -> float:
+    """Median wall-time per call in microseconds (jits on the warmup)."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

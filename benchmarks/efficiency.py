@@ -1,0 +1,49 @@
+"""Paper Graph 4-3: decode power efficiency (tokens/s/W).
+
+Claims checked:
+
+* CMP 170HX decode efficiency is A100-comparable (within 0.6-1.2x of the
+  A100-scaled theoretical efficiency) for the memory-bound formats
+  (F32/F16/Q8) -- the paper's "energy efficiency consistent with GA100".
+* the noFMA build does NOT improve efficiency (the mul+add path costs
+  ~2 instructions/MAC); the paper measured a small decline.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.device_profile import (A100_40G, CMP_170HX, CMP_170HX_NOFMA)
+from repro.core.energy import efficiency
+from repro.core.perf_model import InferencePerfModel
+
+FMTS = ("f32", "f16", "q8_0", "q6_k", "q4_k", "q2_k")
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    ratios = {}
+    declines = {}
+    for fmt in FMTS:
+        e_c = efficiency(CMP_170HX, fmt)
+        e_n = efficiency(CMP_170HX_NOFMA, fmt)
+        e_a = efficiency(A100_40G, fmt)
+        ratios[fmt] = e_c.tokens_per_joule / e_a.tokens_per_joule
+        declines[fmt] = e_n.tokens_per_joule / e_c.tokens_per_joule
+        out.append(Row(f"efficiency[cmp/{fmt}]", 0.0,
+                       f"{e_c.tokens_per_joule:.2f}t/J @{e_c.watts:.0f}W "
+                       f"vsA100={ratios[fmt]:.2f}x"))
+        out.append(Row(f"efficiency[cmp-nofma/{fmt}]", 0.0,
+                       f"{e_n.tokens_per_joule:.2f}t/J "
+                       f"vs_default={declines[fmt]:.2f}x"))
+    comparable = all(0.6 <= ratios[f] <= 1.2 for f in ("f32", "f16", "q8_0"))
+    out.append(Row("claim_4-3_a100_comparable", 0.0,
+                   " ".join(f"{f}={ratios[f]:.2f}" for f in
+                            ("f32", "f16", "q8_0"))
+                   + (" (PASS)" if comparable else " (FAIL)")))
+    no_gain = all(declines[f] <= 1.02 for f in FMTS)
+    out.append(Row("claim_4-3_nofma_no_efficiency_gain", 0.0,
+                   " ".join(f"{f}={declines[f]:.2f}" for f in FMTS)
+                   + (" (PASS)" if no_gain else " (FAIL)")))
+    return out

@@ -1,0 +1,33 @@
+"""Paper Graph EX.2: interconnect bandwidth (PCIe 1.1 x4 -> TPU ICI).
+
+The CMP 170HX's PCIe 1.1 x4 (~1 GB/s) is its deployment Achilles' heel
+(model load time, multi-board scaling); the TPU target's ICI is three
+orders of magnitude faster, which is what makes the multi-pod collective
+roofline term viable at all.  Rows: per-device link bandwidths + derived
+model-load and all-reduce time for the paper's 1.5B model.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.device_profile import (A100_40G, CMP_170HX, TPU_V5E)
+from repro.core.perf_model import QWEN25_1P5B
+from repro.quant.formats import bytes_per_weight
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    model_bytes = QWEN25_1P5B.params_total * bytes_per_weight("q8_0")
+    for prof in (CMP_170HX, A100_40G, TPU_V5E):
+        bw = prof.total_interconnect_gbps() * 1e9
+        load_s = model_bytes / bw
+        out.append(Row(f"interconnect[{prof.name}]", 0.0,
+                       f"{prof.total_interconnect_gbps():.0f}GB/s "
+                       f"load_1.5B_q8={load_s:.2f}s"))
+    # ring all-reduce of 1 GiB grads across 256 chips on ICI
+    n, payload = 256, 1 << 30
+    ring = 2 * (n - 1) / n * payload / (TPU_V5E.interconnect_gbps * 1e9)
+    out.append(Row("allreduce_1GiB_256chips", 0.0, f"{ring*1e3:.1f}ms"))
+    return out

@@ -1,0 +1,50 @@
+"""Paper Graph 4-2: llama-bench decode speed, Qwen2.5-1.5B x 6 formats.
+
+Decode is bandwidth-bound; the theoretical ceiling is the paper's
+A100-measured x (1493/1555) scaling.  Claims checked:
+
+* default build lands in the 39-78% band
+* noFMA lands in the 50-78% band
+* f32/f16/q8_0 decode is FMA-insensitive
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.device_profile import CMP_170HX, CMP_170HX_NOFMA
+from repro.core.perf_model import InferencePerfModel
+
+FMTS = ("f32", "f16", "q8_0", "q6_k", "q4_k", "q2_k")
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    md = InferencePerfModel(CMP_170HX)
+    mn = InferencePerfModel(CMP_170HX_NOFMA)
+    frac_d, frac_n = {}, {}
+    for fmt in FMTS:
+        dd = md.decode(fmt).tokens_per_s
+        dn = mn.decode(fmt).tokens_per_s
+        theo = md.theoretical_decode_tps(fmt)
+        frac_d[fmt] = dd / theo
+        frac_n[fmt] = dn / theo
+        out.append(Row(f"decode[cmp-170hx/{fmt}]", 0.0,
+                       f"{dd:.0f}t/s frac={dd/theo:.0%} "
+                       f"bound={md.decode(fmt).bound}"))
+        out.append(Row(f"decode[cmp-170hx-nofma/{fmt}]", 0.0,
+                       f"{dn:.0f}t/s frac={dn/theo:.0%} gain={dn/dd:.2f}x"))
+    band_d = all(0.35 <= frac_d[f] <= 0.80 for f in FMTS)
+    band_n = all(0.50 <= frac_n[f] <= 0.80 for f in FMTS)
+    out.append(Row("claim_4-2_default_band_39_78", 0.0,
+                   " ".join(f"{f}={frac_d[f]:.0%}" for f in FMTS)
+                   + (" (PASS)" if band_d else " (FAIL)")))
+    out.append(Row("claim_4-2_nofma_band_50_78", 0.0,
+                   " ".join(f"{f}={frac_n[f]:.0%}" for f in FMTS)
+                   + (" (PASS)" if band_n else " (FAIL)")))
+    stable = all(abs(frac_n[f] / frac_d[f] - 1) < 0.02
+                 for f in ("f32", "f16", "q8_0"))
+    out.append(Row("claim_4-2_dense_q8_fma_insensitive", 0.0,
+                   "PASS" if stable else "FAIL"))
+    return out

@@ -1,0 +1,55 @@
+"""Paper Graph 4-1: llama-bench prefill speed, Qwen2.5-1.5B x 6 formats.
+
+Rows per (profile, format): modeled tokens/s + fraction of the paper's
+theoretical ceiling (A100-measured x 70/108 SMs).  Claims checked:
+
+* noFMA prefill gains are quantized-only (f32/f16 = 1.00x)
+* Q2_K shows the largest gain, ~2.31x
+* noFMA prefill lands within the paper's 14-45% of theoretical band
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.device_profile import (A100_40G, CMP_170HX, CMP_170HX_NOFMA)
+from repro.core.perf_model import InferencePerfModel
+
+FMTS = ("f32", "f16", "q8_0", "q6_k", "q4_k", "q2_k")
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    md = InferencePerfModel(CMP_170HX)
+    mn = InferencePerfModel(CMP_170HX_NOFMA)
+    ma = InferencePerfModel(A100_40G)
+    gains = {}
+    fracs = {}
+    for fmt in FMTS:
+        pd_ = md.prefill(fmt).tokens_per_s
+        pn = mn.prefill(fmt).tokens_per_s
+        pa = ma.prefill(fmt).tokens_per_s
+        theo = md.theoretical_prefill_tps(fmt)
+        gains[fmt] = pn / pd_
+        fracs[fmt] = pn / theo
+        out.append(Row(f"prefill[cmp-170hx/{fmt}]", 0.0,
+                       f"{pd_:.0f}t/s"))
+        out.append(Row(f"prefill[cmp-170hx-nofma/{fmt}]", 0.0,
+                       f"{pn:.0f}t/s gain={pn/pd_:.2f}x "
+                       f"frac={pn/theo:.0%}"))
+        out.append(Row(f"prefill[a100/{fmt}]", 0.0, f"{pa:.0f}t/s"))
+    ok_dense = abs(gains["f32"] - 1) < 0.01 and abs(gains["f16"] - 1) < 0.01
+    out.append(Row("claim_4-1_dense_no_gain", 0.0,
+                   f"f32={gains['f32']:.2f}x f16={gains['f16']:.2f}x "
+                   f"{'(PASS)' if ok_dense else '(FAIL)'}"))
+    best = max(gains, key=gains.get)
+    ok_q2 = best == "q2_k" and 2.0 < gains["q2_k"] < 2.6
+    out.append(Row("claim_4-1_q2k_max_gain", 0.0,
+                   f"best={best} gain={gains['q2_k']:.2f}x (paper 2.31x) "
+                   f"{'(PASS)' if ok_q2 else '(FAIL)'}"))
+    in_band = all(0.14 <= fracs[f] <= 0.45 for f in FMTS)
+    out.append(Row("claim_4-1_band_14_45", 0.0,
+                   " ".join(f"{f}={fracs[f]:.0%}" for f in FMTS)
+                   + (" (PASS)" if in_band else " (FAIL)")))
+    return out

@@ -1,0 +1,36 @@
+"""Paper Graph 3-5: memory bandwidth (+ EX.2 interconnect in interconnect.py).
+
+The mining SKU retains its full HBM2e bandwidth -- the paper's central
+asset.  Rows give the per-profile achievable stream bandwidth (GEMV
+efficiency included) and run a low-intensity mixbench point (iters=1 ->
+0.5 flops/byte, pure streaming) as the functional artifact.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_call
+from repro.core.device_profile import (A100_40G, CMP_170HX, CMP_170HX_NOFMA,
+                                       TPU_V5E)
+from repro.kernels.mixbench import mixbench
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    x = jnp.linspace(0, 1, 1 << 16, dtype=jnp.float32)
+    us = time_call(mixbench, x, iters=1, variant="fma", interpret=True)
+    out.append(Row("membw_stream_kernel", us,
+                   f"bytes={x.nbytes * 2}"))
+    for prof in (CMP_170HX, CMP_170HX_NOFMA, A100_40G, TPU_V5E):
+        out.append(Row(f"membw[{prof.name}]", 0.0,
+                       f"{prof.hbm_bw_gbps:.0f}GB/s"
+                       f"(gemv={prof.hbm_bw_gbps * prof.gemv_efficiency:.0f})"))
+    # claim: CMP retains ~A100-class bandwidth (ratio vs 1555)
+    ratio = CMP_170HX.hbm_bw_gbps / A100_40G.hbm_bw_gbps
+    out.append(Row("claim_3-5", 0.0,
+                   f"cmp/a100_bw={ratio:.2f}"
+                   f"{'(PASS>0.8)' if ratio > 0.8 else '(FAIL)'}"))
+    return out

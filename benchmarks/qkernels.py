@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks: quantized matmul + path-variant matmul +
+decode attention, timed on this host (XLA-CPU via the jnp reference
+path; interpret-mode Pallas timings are reported separately because the
+interpreter is not a performance proxy).
+
+Derived column: correctness vs the pure-jnp oracle + modeled TPU-v5e
+time from the compute-path policy.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_call
+from repro.core.compute_path import PathPolicy, matmul_descriptor
+from repro.core.device_profile import CMP_170HX, CMP_170HX_NOFMA, TPU_V5E
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_q8,
+                                            quantize_kv_q8)
+from repro.kernels.fma_matmul import matmul_ref, matmul_variant
+from repro.kernels.qmatmul import qmatmul_ref, qmatmul_variant
+from repro.quant import quantize
+
+M, K, N = 128, 1024, 512
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    ref = matmul_ref(x, w)
+
+    for variant in ("mxu", "mul_add"):
+        us = time_call(matmul_variant, x, w, variant=variant,
+                       interpret=True, iters=2)
+        got = matmul_variant(x, w, variant=variant, interpret=True)
+        err = float(jnp.max(jnp.abs(got - ref)) / jnp.max(jnp.abs(ref)))
+        out.append(Row(f"fma_matmul[{variant}]", us, f"rel_err={err:.1e}"))
+
+    for fmt in ("q8_0", "q6_k", "q4_k", "q2_k"):
+        qt = quantize(w, fmt)
+        us = time_call(qmatmul_variant, x, qt, variant="dequant_dot",
+                       interpret=True, iters=2)
+        got = qmatmul_variant(x, qt, variant="dequant_dot", interpret=True)
+        r = qmatmul_ref(x, qt)
+        err = float(jnp.max(jnp.abs(got - r)) / jnp.max(jnp.abs(r)))
+        out.append(Row(f"qmatmul[{fmt}/dequant_dot]", us,
+                       f"rel_err={err:.1e}"))
+    qt8 = quantize(w, "q8_0")
+    us = time_call(qmatmul_variant, x, qt8, variant="dot_i8",
+                   interpret=True, iters=2)
+    out.append(Row("qmatmul[q8_0/dot_i8]", us, "int8-MXU path"))
+
+    # decode attention dense vs q8 KV
+    B, H, Hkv, S, D = 2, 8, 2, 1024, 64
+    q = jax.random.normal(key, (B, H, D), jnp.float32)
+    kc = jax.random.normal(jax.random.PRNGKey(2), (B, Hkv, S, D), jnp.float32)
+    vc = jax.random.normal(jax.random.PRNGKey(3), (B, Hkv, S, D), jnp.float32)
+    lens = jnp.full((B,), S, jnp.int32)
+    us = time_call(decode_attention, q, kc, vc, lens, iters=3)
+    out.append(Row("decode_attention[dense]", us, f"S={S}"))
+    kq, ks = quantize_kv_q8(kc)
+    vq, vs = quantize_kv_q8(vc)
+    us = time_call(decode_attention_q8, q, kq, ks, vq, vs, lens, iters=3)
+    dense = decode_attention(q, kc, vc, lens)
+    q8 = decode_attention_q8(q, kq, ks, vq, vs, lens)
+    err = float(jnp.max(jnp.abs(q8 - dense)))
+    out.append(Row("decode_attention[q8_kv]", us,
+                   f"abs_err_vs_dense={err:.3f} traffic=0.27x"))
+
+    # path-policy decisions (the C2 reroute, programmatically)
+    desc = matmul_descriptor(M, N, K, "f32")
+    for prof in (CMP_170HX, CMP_170HX_NOFMA, TPU_V5E):
+        d = PathPolicy(prof).decide(desc)
+        out.append(Row(f"path_policy[{prof.name}/f32]", 0.0,
+                       f"variant={d.variant} "
+                       f"modeled={d.modeled_seconds*1e6:.1f}us "
+                       f"bound={d.bound}"))
+    return out

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+
+  compute_sweep  -> Graphs 3-1..3-4, EX.1 (per-path compute peaks)
+  membw          -> Graph 3-5 (HBM bandwidth)
+  interconnect   -> Graph EX.2 (PCIe/ICI)
+  llm_prefill    -> Graph 4-1 (prefill t/s x quant formats)
+  llm_decode     -> Graph 4-2 (decode t/s x quant formats)
+  efficiency     -> Graph 4-3 (tokens/W)
+  cost_model     -> Tables 1-1/1-2 (fleet economics)
+  hetero_serving -> SS6.2 operationalized (beyond paper)
+  qkernels       -> kernel micro-benchmarks (Pallas artifacts)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (compute_sweep, cost_model, efficiency,
+                            hetero_serving, interconnect, llm_decode,
+                            llm_prefill, membw, qkernels)
+    modules = [compute_sweep, membw, interconnect, llm_prefill, llm_decode,
+               efficiency, cost_model, hetero_serving, qkernels]
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in modules:
+        try:
+            for row in mod.rows():
+                derived = str(row.derived).replace(",", ";")
+                print(f"{row.name},{row.us_per_call:.1f},{derived}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{mod.__name__},0.0,ERROR")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Heterogeneous fleet planning: the paper's SS6.2 recommendation, run.
+
+Sweeps fleet compositions (A100s + reclaimed CMP 170HX boards) and
+prints the optimal prefill/decode disaggregation for each, showing when
+adding e-waste mining boards beats buying another datacenter GPU.
+
+Run:  PYTHONPATH=src python examples/hetero_fleet.py
+"""
+
+from repro.serving.disaggregation import (Workload, homogeneous_baseline,
+                                          plan_fleet)
+
+WL = Workload(prompt_len=512, gen_len=128, fmt="q8_0")
+
+
+def show(tag, plan):
+    roles = ", ".join(f"{a.count}x{a.profile}->{a.role}"
+                      for a in plan.assignments)
+    print(f"  {tag:28s} {plan.requests_per_s:7.2f} req/s  "
+          f"${plan.usd_per_mtok:7.3f}/Mtok  [{roles}]")
+
+
+def main():
+    print(f"workload: prompt={WL.prompt_len} gen={WL.gen_len} fmt={WL.fmt}\n")
+    print("homogeneous baselines:")
+    show("4x A100", homogeneous_baseline("a100-40g", 4, WL))
+    show("16x CMP-170HX(noFMA)", homogeneous_baseline(
+        "cmp-170hx-nofma", 16, WL))
+    print("\nmixed fleets (optimal role assignment):")
+    for a100s, cmps in [(1, 4), (2, 8), (2, 16), (4, 16)]:
+        plan = plan_fleet({"a100-40g": a100s,
+                           "cmp-170hx-nofma": cmps}, WL)
+        show(f"{a100s}x A100 + {cmps}x CMP", plan)
+    print("\nreading: the planner sends compute-bound prefill to the "
+          "A100s and\nbandwidth-bound decode to the mining boards -- "
+          "the paper's SS6.2 thesis.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_step,
+                                           prune, restore, restore_latest,
+                                           save)
+
+__all__ = ["AsyncCheckpointer", "latest_step", "prune", "restore",
+           "restore_latest", "save"]

@@ -1,0 +1,58 @@
+"""Assigned-architecture configs (``--arch <id>``) + the paper's own model.
+
+Each module exports ``CONFIG`` (the exact published configuration) and
+``SMOKE`` (a reduced same-family config for CPU smoke tests).  The FULL
+configs are only ever exercised via the dry-run (ShapeDtypeStruct level).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "qwen1.5-110b": "repro.configs.qwen1_5_110b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "phi-3-vision-4.2b": "repro.configs.phi_3_vision_4_2b",
+    "whisper-base": "repro.configs.whisper_base",
+    # the paper's evaluation model (section 4.1)
+    "qwen2.5-1.5b": "repro.configs.qwen2_5_1_5b",
+}
+
+ARCH_IDS: List[str] = [k for k in _MODULES if k != "qwen2.5-1.5b"]
+
+#: the four assigned input-shape cells (LM-family shapes).
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+#: sub-quadratic families that run the long_500k cell (DESIGN.md SS4).
+LONG_CONTEXT_ARCHS = ("mamba2-780m", "hymba-1.5b")
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def shape_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True
+
+
+def all_cells():
+    """Every applicable (arch, shape) pair -- the dry-run matrix."""
+    return [(a, s) for a in ARCH_IDS for s in SHAPES
+            if shape_applicable(a, s)]

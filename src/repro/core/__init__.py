@@ -1,0 +1,23 @@
+"""Core layer: the paper's contribution, generalized.
+
+C1 capability characterization -> :mod:`repro.core.device_profile`
+C2 compute-path rerouting      -> :mod:`repro.core.compute_path`
+C3/C4 phase + format modeling  -> :mod:`repro.core.perf_model`
+C5 energy / fleet economics    -> :mod:`repro.core.energy`
+Roofline (dry-run analysis)    -> :mod:`repro.core.roofline`, ``hlo_analysis``
+"""
+
+from repro.core.compute_path import (OpDescriptor, PathDecision, PathPolicy,
+                                     matmul_descriptor)
+from repro.core.device_profile import (A100_40G, CMP_170HX, CMP_170HX_NOFMA,
+                                       PROFILES, TPU_V5E, DeviceProfile, Path,
+                                       get_profile, register_profile)
+from repro.core.perf_model import (InferencePerfModel, LLMSpec, PhaseEstimate,
+                                   QWEN25_1P5B, sweep)
+
+__all__ = [
+    "OpDescriptor", "PathDecision", "PathPolicy", "matmul_descriptor",
+    "A100_40G", "CMP_170HX", "CMP_170HX_NOFMA", "PROFILES", "TPU_V5E",
+    "DeviceProfile", "Path", "get_profile", "register_profile",
+    "InferencePerfModel", "LLMSpec", "PhaseEstimate", "QWEN25_1P5B", "sweep",
+]

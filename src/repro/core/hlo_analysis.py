@@ -1,0 +1,151 @@
+"""HLO-text analysis: collective bytes, remat duplication, op census.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes but *not* collective
+traffic, so the roofline's third term is derived here by parsing the
+(stable)HLO text of a lowered/compiled program: we sum operand sizes of
+every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all``
+/ ``collective-permute`` op.
+
+The parser is intentionally tolerant: it works on both
+``lowered.as_text()`` (StableHLO) and ``compiled.as_text()`` (post-SPMD
+HLO), and counts per-partition traffic (the dry-run compiles with
+``num_partitions = mesh size``, so op shapes are already per-shard).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Mapping, Tuple
+
+_DTYPE_BYTES: Mapping[str, int] = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+#: HLO / StableHLO spellings of the collectives we count.
+_COLLECTIVE_KINDS: Tuple[str, ...] = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+    # stablehlo spellings
+    "all_gather", "all_reduce", "reduce_scatter", "all_to_all",
+    "collective_permute",
+)
+
+_CANON = {
+    "all_gather": "all-gather", "all_reduce": "all-reduce",
+    "reduce_scatter": "reduce-scatter", "all_to_all": "all-to-all",
+    "collective_permute": "collective-permute",
+}
+
+# e.g. "f32[8,128]{1,0}" or "bf16[2,4,128]"
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+# result shape of an HLO instruction line: "  %x = f32[8,128]{1,0} all-gather(...)"
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[a-z][a-z0-9]*\[[^=]*?)\s+([a-z][a-z0-9\-_]*)\(")
+
+# stablehlo: `"stablehlo.all_gather"(%arg) ... : (tensor<8x128xf32>) -> ...`
+_MLIR_OP_RE = re.compile(
+    r"stablehlo\.([a-z_]+)[\"']?\(.*?:\s*\(([^)]*)\)\s*->\s*(.*)")
+_MLIR_TENSOR_RE = re.compile(r"tensor<([0-9x]*)x?([a-z][a-z0-9]*)>")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _mlir_tensor_bytes(text: str) -> int:
+    total = 0
+    for dims, dtype in _MLIR_TENSOR_RE.findall(text):
+        n = 1
+        for d in [x for x in dims.split("x") if x]:
+            n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-kind collective byte counts for one compiled program."""
+
+    bytes_by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
+    count_by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def add(self, kind: str, nbytes: int) -> None:
+        kind = _CANON.get(kind, kind)
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0) + nbytes
+        self.count_by_kind[kind] = self.count_by_kind.get(kind, 0) + 1
+
+    def summary(self) -> str:
+        parts = [f"{k}: n={self.count_by_kind[k]} "
+                 f"bytes={self.bytes_by_kind[k]:,}"
+                 for k in sorted(self.bytes_by_kind)]
+        return "; ".join(parts) if parts else "no collectives"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective in an HLO/StableHLO dump.
+
+    We use the *result* shape as the traffic proxy: for all-gather the
+    result is the gathered (full) buffer, for reduce-scatter the operand
+    would be; result-shape is the standard single-number approximation
+    used by roofline dashboards and is within 2x of exact link traffic
+    for every kind.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # post-SPMD HLO text
+        m = _INSTR_RE.search(ls)
+        if m:
+            opname = m.group(2)
+            if any(opname.startswith(k) for k in _COLLECTIVE_KINDS):
+                nbytes = sum(
+                    _shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(m.group(1)))
+                if opname.endswith("-start"):
+                    opname = opname[:-len("-start")]
+                stats.add(opname, nbytes)
+                continue
+        # stablehlo MLIR text
+        m2 = _MLIR_OP_RE.search(ls)
+        if m2 and m2.group(1) in _CANON:
+            stats.add(m2.group(1), _mlir_tensor_bytes(m2.group(3)))
+    return stats
+
+
+# ----------------------------------------------------------------------
+# secondary diagnostics used by the perf loop
+# ----------------------------------------------------------------------
+
+def op_census(hlo_text: str) -> Dict[str, int]:
+    """Instruction-count histogram (spotting remat-duplicated fusions)."""
+    census: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line.strip())
+        if m:
+            op = m.group(2)
+            census[op] = census.get(op, 0) + 1
+    return census
+
+
+def count_convert_pairs(hlo_text: str) -> int:
+    """Layout-churn smell: reshape/transpose/copy op count."""
+    census = op_census(hlo_text)
+    return sum(census.get(k, 0) for k in ("reshape", "transpose", "copy",
+                                          "bitcast"))

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (each: kernel.py + ops.py wrapper + ref.py oracle).
+
+``fma_matmul``      -- compute-path-selectable matmul (paper C2)
+``qmatmul``         -- dequant-in-kernel block-quantized matmul (C4)
+``mixbench``        -- arithmetic-intensity sweep (C1)
+``flash_attention`` -- prefill attention (causal / GQA / sliding window)
+``decode_attention``-- split-K decode attention, dense + q8 KV (C3)
+"""

@@ -1,0 +1,186 @@
+"""Split-K decode attention Pallas kernel (the paper's key phase, C3).
+
+LLM decode reads one query token against a long KV cache -- *pure
+bandwidth*, the workload where the paper shows a mining GPU matching an
+A100.  The TPU kernel streams the KV cache through VMEM in key blocks
+(grid ``(B, H, Sk/bk)``) with a running-softmax state in VMEM scratch --
+i.e. FlashDecoding adapted to the HBM->VMEM hierarchy.
+
+A quantized-KV variant (q8_0 per-32-block scales along the key axis)
+halves the cache traffic: the dequantize happens on the VPU right after
+the VMEM load, upstream of the (tiny) MXU dots.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale: float, bk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (1, bk)
+
+    # mask beyond the live cache length (ragged batches)
+    kv_len = len_ref[0]
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    mask = k_pos < kv_len
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    l_prev = l_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)         # (1, bk)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = (l_prev * alpha + jnp.sum(p))[None, None]
+    m_ref[...] = m_new[None, None]
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _store():
+        l = l_ref[0, 0]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                            kv_lengths: jnp.ndarray, *, scale=None,
+                            bk: int = 512,
+                            interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, D); k/v: (B, Hkv, S, D); kv_lengths: (B,) int32."""
+    b, h, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    bk = min(bk, sk)
+    assert sk % bk == 0
+    scale = float(scale if scale is not None else d ** -0.5)
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk)
+    q4 = q[:, :, None, :]                                 # (B, H, 1, D)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bb, hh, j: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, j: (bb, hh // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, j: (bb, hh // group, j, 0)),
+            pl.BlockSpec((1,), lambda bb, hh, j: (bb,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda bb, hh, j: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q4, k, v, kv_lengths)[:, :, 0, :]
+
+
+# ----------------------------------------------------------------------
+# quantized-KV variant (q8_0 along the key axis)
+# ----------------------------------------------------------------------
+
+def _decode_q8_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, len_ref, o_ref,
+                      acc_ref, m_ref, l_ref, *, scale: float, bk: int,
+                      qblock: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    # dequantize KV tile on the VPU, straight out of VMEM
+    kqv = kq_ref[0, 0].astype(jnp.float32)                # (bk, d) int8
+    ksc = jnp.repeat(ks_ref[0, 0], qblock, axis=0)        # (bk, 1) -> rows
+    k = kqv * ksc
+    vqv = vq_ref[0, 0].astype(jnp.float32)
+    vsc = jnp.repeat(vs_ref[0, 0], qblock, axis=0)
+    v = vqv * vsc
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+    kv_len = len_ref[0]
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    mask = k_pos < kv_len
+    s = jnp.where(mask, s, _NEG_INF)
+    m_prev, l_prev = m_ref[0, 0], l_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = (l_prev * alpha + jnp.sum(p))[None, None]
+    m_ref[...] = m_new[None, None]
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _store():
+        l = l_ref[0, 0]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_q8_pallas(q, k_q, k_scale, v_q, v_scale, kv_lengths, *,
+                               scale=None, bk: int = 512, qblock: int = 32,
+                               interpret: bool = False):
+    """Quantized-KV decode.
+
+    k_q/v_q: (B, Hkv, S, D) int8; k_scale/v_scale: (B, Hkv, S/qblock, 1)
+    f32 per-32-key-block scales (per head, shared across D).
+    """
+    b, h, d = q.shape
+    _, hkv, sk, _ = k_q.shape
+    group = h // hkv
+    bk = min(bk, sk)
+    assert sk % bk == 0 and bk % qblock == 0
+    scale = float(scale if scale is not None else d ** -0.5)
+    srows = bk // qblock
+    kernel = functools.partial(_decode_q8_kernel, scale=scale, bk=bk,
+                               qblock=qblock)
+    q4 = q[:, :, None, :]
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bb, hh, j: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, j: (bb, hh // group, j, 0)),
+            pl.BlockSpec((1, 1, srows, 1),
+                         lambda bb, hh, j: (bb, hh // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, j: (bb, hh // group, j, 0)),
+            pl.BlockSpec((1, 1, srows, 1),
+                         lambda bb, hh, j: (bb, hh // group, j, 0)),
+            pl.BlockSpec((1,), lambda bb, hh, j: (bb,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda bb, hh, j: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q4, k_q, k_scale, v_q, v_scale, kv_lengths)[:, :, 0, :]

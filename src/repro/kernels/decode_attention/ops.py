@@ -1,0 +1,34 @@
+"""Jitted wrapper for decode attention, dense + quantized-KV."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import (decode_attention_pallas,
+                                                   decode_attention_q8_pallas)
+from repro.kernels.decode_attention.ref import (decode_attention_q8_ref,
+                                                decode_attention_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bk"))
+def decode_attention(q, k, v, kv_lengths, *, use_pallas: bool = False,
+                     interpret: bool = False, bk: int = 512):
+    if use_pallas:
+        return decode_attention_pallas(q, k, v, kv_lengths, bk=bk,
+                                       interpret=interpret)
+    return decode_attention_ref(q, k, v, kv_lengths)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bk",
+                                             "qblock"))
+def decode_attention_q8(q, k_q, k_scale, v_q, v_scale, kv_lengths, *,
+                        use_pallas: bool = False, interpret: bool = False,
+                        bk: int = 512, qblock: int = 32):
+    if use_pallas:
+        return decode_attention_q8_pallas(q, k_q, k_scale, v_q, v_scale,
+                                          kv_lengths, bk=bk, qblock=qblock,
+                                          interpret=interpret)
+    return decode_attention_q8_ref(q, k_q, k_scale, v_q, v_scale, kv_lengths,
+                                   qblock=qblock)

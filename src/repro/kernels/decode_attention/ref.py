@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for decode attention (dense + q8 KV)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_lengths, *, scale=None):
+    """q: (B, H, D); k/v: (B, Hkv, S, D); kv_lengths: (B,).
+
+    GQA is computed grouped (q reshaped to (B, Hkv, G, D)) -- no KV head
+    replication is materialized, which both saves memory and keeps GSPMD
+    shardings aligned to the Hkv axis for every head count (40H, 25H...).
+    """
+    b, h, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = h // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(sk)[None, None, None, :] < \
+        kv_lengths[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    out = jnp.einsum("bkgs,bksd->bkgd", p / denom, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def dequant_kv_q8(k_q, k_scale, qblock: int = 32):
+    """(B, Hkv, S, D) int8 + (B, Hkv, S/qblock, 1) f32 -> f32 KV."""
+    scales = jnp.repeat(k_scale, qblock, axis=2)
+    return k_q.astype(jnp.float32) * scales
+
+
+def quantize_kv_q8(k, qblock: int = 32):
+    """Per-(head, 32-key-block) symmetric int8 KV quantization."""
+    b, hkv, s, d = k.shape
+    kb = k.astype(jnp.float32).reshape(b, hkv, s // qblock, qblock, d)
+    amax = jnp.max(jnp.abs(kb), axis=(3, 4), keepdims=True)
+    scale = (amax / 127.0).reshape(b, hkv, s // qblock, 1)
+    scale = jnp.where(scale == 0, 1.0, scale)
+    kq = jnp.clip(jnp.round(
+        kb / scale[..., None, :]), -127, 127).astype(jnp.int8)
+    return kq.reshape(b, hkv, s, d), scale
+
+
+def decode_attention_q8_ref(q, k_q, k_scale, v_q, v_scale, kv_lengths, *,
+                            scale=None, qblock: int = 32):
+    k = dequant_kv_q8(k_q, k_scale, qblock)
+    v = dequant_kv_q8(v_q, v_scale, qblock)
+    return decode_attention_ref(q, k, v, kv_lengths, scale=scale)

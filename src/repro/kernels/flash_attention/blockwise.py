@@ -1,0 +1,78 @@
+"""Blockwise (flash-style) attention in pure jnp: O(Sq x block) memory.
+
+This is the XLA-lowered sibling of the Pallas kernel: a ``lax.scan`` over
+key blocks with an online-softmax carry.  It exists because
+
+* the dry-run compiles 32k/500k-sequence cells on the CPU backend, where
+  a naive (Sq x Sk) score tensor would be hundreds of GiB -- the scan
+  bounds every intermediate to (B, H, Sq, block);
+* under GSPMD it shards cleanly: with q/k/v sequence-sharded over the
+  `model` axis, each scan step all-gathers only one KV block -- a
+  ring-attention-like schedule the partitioner derives automatically.
+
+GQA is computed grouped (no KV head replication is materialized).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        scale=None, block: int = 512,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D) -> (B, H, Sq, D).
+
+    ``q_offset`` positions the query block globally (used by chunked
+    prefill where Sq < Sk).
+    """
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    block = min(block, sk)
+    assert sk % block == 0, (sk, block)
+    nblk = sk // block
+    scale = float(scale if scale is not None else d ** -0.5)
+
+    qg = q.reshape(b, hkv, group, sq, d).astype(jnp.float32) * scale
+    kb = k.reshape(b, hkv, nblk, block, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nblk, block, d).transpose(2, 0, 1, 3, 4)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        j, kj, vj = inp
+        kj = kj.astype(jnp.float32)
+        vj = vj.astype(jnp.float32)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kj)
+        k_pos = j * block + jnp.arange(block)
+        mask = jnp.ones((sq, block), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vj)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, group, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(nblk), kb, vb))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).reshape(b, h, sq, d)
+    return out.astype(q.dtype)

@@ -1,0 +1,104 @@
+"""Flash attention (prefill) Pallas kernel: causal, GQA, sliding-window.
+
+Streaming-softmax attention with the canonical TPU schedule: grid
+``(batch, q_heads, Sq/bq, Sk/bk)`` with the key dimension innermost and a
+VMEM-resident running (max, sum, accumulator) carried across key blocks.
+GQA is handled in the BlockSpec index maps (``kv_head = h // group``), so
+no KV replication is materialized.  ``window`` enables the
+sliding-window mask used by the hybrid (Hymba-style) architectures at
+long context.
+
+Block shapes are MXU/VPU aligned ((8,128) multiples); head_dim is the
+lane dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window, bq: int, bk: int):
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...][:, 0]                          # (bq,)
+    l_prev = l_ref[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)                        # kill masked cols
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_ref[...] = m_new[:, None]
+    l_ref[...] = l_new[:, None]
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _store():
+        l = l_ref[...][:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)                # fully-masked rows
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, window=None,
+                           scale=None, bq: int = 128, bk: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D) -> (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    scale = float(scale if scale is not None else d ** -0.5)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, sq // bq, sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, hh, i, j: (bb, hh, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, i, j: (bb, hh // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, i, j: (bb, hh // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bb, hh, i, j: (bb, hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

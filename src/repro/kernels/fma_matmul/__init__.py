@@ -1,0 +1,5 @@
+from repro.kernels.fma_matmul.kernel import fma_matmul_pallas
+from repro.kernels.fma_matmul.ops import matmul, matmul_variant
+from repro.kernels.fma_matmul.ref import matmul_ref
+
+__all__ = ["fma_matmul_pallas", "matmul", "matmul_variant", "matmul_ref"]

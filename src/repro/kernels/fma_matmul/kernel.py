@@ -1,0 +1,80 @@
+"""Pallas matmul with selectable compute path (paper C2, TPU-native).
+
+The paper restores the CMP 170HX's FP32 throughput by recompiling with
+``-fmad=false`` so multiply-accumulate decomposes into separate multiply
+and add instructions, dodging the throttled FMA pipe.  The TPU analogue
+of "which pipe does the MAC go down" is **MXU vs VPU**:
+
+* ``variant="mxu"``    -- ``jnp.dot`` on the block tile: lowers to the
+  128x128 systolic array (the "fused" path).
+* ``variant="mul_add"``-- explicit broadcast-multiply + reduce-add on the
+  VPU: *no matrix unit involved*, mirroring the no-FMA build.  This is
+  the path a capability-aware scheduler picks when the matrix unit is
+  throttled/unavailable for a precision (the CMP's situation), at the
+  cost of the VPU's lower ceiling.
+
+Both variants share one grid/BlockSpec schedule: ``(M/bm, N/bn, K/bk)``
+with K innermost so a VMEM accumulator carries partial sums across the
+K-steps (standard TPU matmul pattern; block shapes are (8,128)-aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, variant: str):
+    """One (bm, bn) output tile; accumulates over the K grid dimension."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    if variant == "mxu":
+        acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    elif variant == "mul_add":
+        # Decomposed multiply + add on the VPU: broadcast partial products
+        # then reduce.  No dot/MXU op is emitted -- the TPU reading of the
+        # paper's -fmad=false reroute.
+        prod = x[:, :, None].astype(jnp.float32) * w[None, :, :].astype(
+            jnp.float32)                      # (bm, bk, bn) elementwise mul
+        acc_ref[...] += jnp.sum(prod, axis=1)  # separate adds
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def fma_matmul_pallas(x: jnp.ndarray, w: jnp.ndarray, *, variant: str = "mxu",
+                      bm: int = 128, bk: int = 128, bn: int = 128,
+                      out_dtype=jnp.float32,
+                      interpret: bool = False) -> jnp.ndarray:
+    """(M, K) @ (K, N) with an explicit compute-path choice."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"shape ({m},{k},{n}) not divisible by blocks ({bm},{bk},{bn})")
+    kernel = functools.partial(_matmul_kernel, variant=variant)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

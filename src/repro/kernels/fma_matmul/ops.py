@@ -1,0 +1,51 @@
+"""Jitted public wrapper: capability-aware matmul (paper C2).
+
+``matmul(x, w, policy=...)`` consults the
+:class:`~repro.core.compute_path.PathPolicy` for the target device
+profile and dispatches to the corresponding Pallas variant -- the
+framework-level equivalent of the paper's "recompile with -fmad=false".
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compute_path import PathPolicy, matmul_descriptor
+from repro.kernels.fma_matmul.kernel import fma_matmul_pallas
+
+_VARIANTS = ("mxu", "mul_add")
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret", "bm",
+                                             "bk", "bn"))
+def matmul_variant(x: jnp.ndarray, w: jnp.ndarray, *, variant: str = "mxu",
+                   bm: int = 128, bk: int = 128, bn: int = 128,
+                   interpret: bool = False) -> jnp.ndarray:
+    return fma_matmul_pallas(x, w, variant=variant, bm=bm, bk=bk, bn=bn,
+                             interpret=interpret)
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray,
+           policy: Optional[PathPolicy] = None,
+           interpret: bool = False) -> jnp.ndarray:
+    """Path-policy-dispatched matmul.
+
+    With no policy (or a TPU profile) this takes the MXU path; with a
+    CMP-170HX-style profile whose matrix path is throttled for the
+    activation precision, the policy reroutes onto the decomposed
+    multiply+add (VPU) variant.
+    """
+    variant = "mxu"
+    if policy is not None:
+        m, k = x.shape
+        n = w.shape[1]
+        prec = {"float32": "f32", "bfloat16": "bf16",
+                "float16": "f16"}.get(str(x.dtype), "f32")
+        desc = matmul_descriptor(m, n, k, prec, supports=("fma", "mul_add"))
+        decision = policy.decide(desc)
+        variant = "mxu" if decision.variant == "fma" else "mul_add"
+    return matmul_variant(x, w, variant=variant, interpret=interpret)

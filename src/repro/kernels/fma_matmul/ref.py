@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the path-selectable matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
+               out_dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)

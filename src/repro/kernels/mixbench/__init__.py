@@ -1,0 +1,6 @@
+from repro.kernels.mixbench.kernel import arithmetic_intensity, mixbench_pallas
+from repro.kernels.mixbench.ops import mixbench, sweep_points
+from repro.kernels.mixbench.ref import mixbench_ref
+
+__all__ = ["arithmetic_intensity", "mixbench_pallas", "mixbench",
+           "sweep_points", "mixbench_ref"]

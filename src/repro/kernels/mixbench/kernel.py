@@ -1,0 +1,67 @@
+"""mixbench-style arithmetic-intensity sweep kernel (paper C1).
+
+MixBench (paper §1.3.1) measures a device's compute/memory balance by
+running, per element loaded from memory, a configurable number of
+multiply-accumulate iterations -- sweeping ``compute_iters`` traces out
+the roofline knee.  This is the kernel the paper uses to expose the
+CMP 170HX's FMA throttle (Graphs 3-1..3-4).
+
+TPU version: grid over 1-D blocks; each block is loaded from HBM into
+VMEM once, then the VPU runs ``iters`` dependent multiply-add steps:
+
+* ``variant="fma"``     -- ``y = y * a + b`` written so XLA may emit a
+  fused multiply-add.
+* ``variant="mul_add"`` -- explicitly decomposed: ``t = y * a`` then
+  ``y = t + b`` with an intervening use that blocks fusion (the
+  ``-fmad=false`` analogue).
+
+Arithmetic intensity = ``2 * iters / dtype_bytes`` flops/byte.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mixbench_kernel(x_ref, o_ref, *, iters: int, variant: str):
+    y = x_ref[...]
+    a = jnp.asarray(0.999, y.dtype)
+    b = jnp.asarray(1e-3, y.dtype)
+
+    def fma_step(_, y):
+        return y * a + b
+
+    def mul_add_step(_, y):
+        t = y * a              # separate multiply ...
+        y = t + b              # ... separate add (no fused op)
+        return y
+
+    step = fma_step if variant == "fma" else mul_add_step
+    y = jax.lax.fori_loop(0, iters, step, y)
+    o_ref[...] = y
+
+
+def mixbench_pallas(x: jnp.ndarray, *, iters: int = 64,
+                    variant: str = "fma", block: int = 1024,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Run the intensity-sweep kernel over a flat array."""
+    (n,) = x.shape
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    kernel = functools.partial(_mixbench_kernel, iters=iters, variant=variant)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def arithmetic_intensity(iters: int, dtype=jnp.float32) -> float:
+    return 2.0 * iters / jnp.dtype(dtype).itemsize

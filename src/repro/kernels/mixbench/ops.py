@@ -1,0 +1,51 @@
+"""Jitted wrapper + analytic throughput for the mixbench sweep (C1).
+
+``sweep_points`` returns, for a device profile and precision, the modeled
+GFLOPS/GBps at each compute-iters setting -- reproducing the paper's
+Graphs 3-1..3-5 without the hardware; the kernel itself validates the
+numerics (tests) and is the artifact you would run on a real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device_profile import DeviceProfile, Path
+from repro.kernels.mixbench.kernel import arithmetic_intensity, mixbench_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("iters", "variant", "interpret", "block"))
+def mixbench(x: jnp.ndarray, *, iters: int = 64, variant: str = "fma",
+             block: int = 1024, interpret: bool = False) -> jnp.ndarray:
+    return mixbench_pallas(x, iters=iters, variant=variant, block=block,
+                           interpret=interpret)
+
+
+def sweep_points(profile: DeviceProfile, precision: str, path: Path,
+                 iters_list=(1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024),
+                 dtype_bytes: int = 4) -> List[Dict[str, float]]:
+    """Modeled roofline sweep: throughput(iters) for one (precision, path).
+
+    At low intensity the point sits on the bandwidth roof, at high
+    intensity on the path's compute roof -- with the CMP 170HX's crippled
+    FMA path the compute roof is 0.39 TFLOPS and the knee moves far right;
+    the mul_add path restores it to 6.2 (paper Graph 3-1).
+    """
+    peak = profile.throughput(precision, path) * 1e12
+    bw = profile.hbm_bw_gbps * 1e9
+    out = []
+    for iters in iters_list:
+        ai = 2.0 * iters / dtype_bytes
+        gflops = min(peak, ai * bw)
+        out.append({
+            "compute_iters": iters,
+            "flops_per_byte": ai,
+            "gflops": gflops / 1e9,
+            "gbps": gflops / ai / 1e9,
+        })
+    return out

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the mixbench sweep kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mixbench_ref(x: jnp.ndarray, iters: int) -> jnp.ndarray:
+    a = jnp.asarray(0.999, x.dtype)
+    b = jnp.asarray(1e-3, x.dtype)
+    return jax.lax.fori_loop(0, iters, lambda _, y: y * a + b, x)

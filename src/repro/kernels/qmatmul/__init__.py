@@ -1,0 +1,6 @@
+from repro.kernels.qmatmul.kernel import qmatmul_pallas
+from repro.kernels.qmatmul.ops import qmatmul, qmatmul_variant, select_variant
+from repro.kernels.qmatmul.ref import qmatmul_i8_ref, qmatmul_ref
+
+__all__ = ["qmatmul_pallas", "qmatmul", "qmatmul_variant", "select_variant",
+           "qmatmul_i8_ref", "qmatmul_ref"]

@@ -1,0 +1,201 @@
+"""Dequantize-in-kernel matmul for ggml-family block formats (paper C4).
+
+The paper's AI workload is llama.cpp quantized inference; its hot kernel
+is "activation row x block-quantized weight matrix".  TPU adaptation:
+
+* weights arrive as structure-of-arrays planes (see ``repro.quant``):
+  an int8 / packed-uint8 value plane plus small scale planes, all tiled
+  cleanly into VMEM via BlockSpecs (k-blocks are multiples of the
+  256-element super-block so scale tiles align);
+* ``variant="dequant_dot"`` dequantizes the (bk, bn) weight tile on the
+  VPU (unpack shifts + two-level scale multiply) and feeds the MXU --
+  llama.cpp's "dequantize + GEMM" prompt path;
+* ``variant="dot_i8"`` (q8_0 only) quantizes the activation tile to int8
+  per 32-element k-block inside the kernel and runs the int8 MXU path
+  with an f32 rescale epilogue -- llama.cpp's dp4a vec_dot path, i.e.
+  the integer pipe the CMP 170HX leaves unthrottled.
+
+Grid: (M/bm, N/bn, K/bk), K innermost, f32 VMEM accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.quant.formats import get_format
+from repro.quant.quantize import QTensor
+
+
+def _dequant_tile(fmt_name, v, sub_s, sub_m, sup_s, sup_m):
+    """Dequantize one (bk, bn) weight tile from its VMEM planes (f32)."""
+    fmt = get_format(fmt_name)
+    if fmt_name == "q8_0":
+        scale = jnp.repeat(sup_s, fmt.block, axis=0)
+        return v.astype(jnp.float32) * scale
+    sub = fmt.sub_block
+    per = fmt.block // sub
+    if fmt_name == "q6_k":
+        eff = sub_s.astype(jnp.float32) * jnp.repeat(sup_s, per, axis=0)
+        eff = jnp.where(eff == 0, 1.0, eff)
+        return v.astype(jnp.float32) * jnp.repeat(eff, sub, axis=0)
+    # q4_k / q2_k: packed values + asymmetric two-level scales
+    bits = fmt.bits
+    n_per_byte = 8 // bits
+    mask = (1 << bits) - 1
+    kp, bn = v.shape
+    parts = [(v >> (bits * i)) & mask for i in range(n_per_byte)]
+    q = jnp.stack(parts, axis=1).reshape(kp * n_per_byte, bn).astype(
+        jnp.float32)
+    eff_d = sub_s.astype(jnp.float32) * jnp.repeat(sup_s, per, axis=0)
+    eff_d = jnp.where(eff_d == 0, 1.0, eff_d)
+    eff_m = sub_m.astype(jnp.float32) * jnp.repeat(sup_m, per, axis=0)
+    return q * jnp.repeat(eff_d, sub, axis=0) - jnp.repeat(eff_m, sub, axis=0)
+
+
+def _qmatmul_dequant_kernel(fmt_name, x_ref, v_ref, sub_s_ref, sub_m_ref,
+                            sup_s_ref, sup_m_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _dequant_tile(
+        fmt_name, v_ref[...],
+        None if sub_s_ref is None else sub_s_ref[...],
+        None if sub_m_ref is None else sub_m_ref[...],
+        sup_s_ref[...],
+        None if sup_m_ref is None else sup_m_ref[...])
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _qmatmul_i8_kernel(x_ref, v_ref, sup_s_ref, o_ref, acc_ref, *,
+                       qblock: int):
+    """int8 x int8 -> int32 MXU path with f32 rescale (q8_0 only).
+
+    The activation tile is quantized per (row, 32-wide k-block) inside the
+    kernel; the dot is decomposed per k-block so each int32 partial can be
+    rescaled by (x_scale * w_scale) -- the f32 epilogue whose cost the
+    paper's -fmad story is about.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (bm, bk)
+    bm, bk = x.shape
+    nq = bk // qblock
+    xb = x.reshape(bm, nq, qblock)
+    x_scale = jnp.max(jnp.abs(xb), axis=2) / 127.0        # (bm, nq)
+    x_scale = jnp.where(x_scale == 0, 1.0, x_scale)
+    xq = jnp.clip(jnp.round(xb / x_scale[:, :, None]), -127, 127
+                  ).astype(jnp.int8)
+    wq = v_ref[...]                                        # (bk, bn) int8
+    bn = wq.shape[1]
+    wqb = wq.reshape(nq, qblock, bn)
+    w_scale = sup_s_ref[...]                               # (nq, bn) f32
+    # batched int8 dot per 32-block: (nq, bm, qblock) x (nq, qblock, bn)
+    xqb = jnp.swapaxes(xq, 0, 1)                           # (nq, bm, qblock)
+    part = jax.lax.dot_general(
+        xqb.astype(jnp.int32), wqb.astype(jnp.int32),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)                  # (nq, bm, bn)
+    # f32 rescale epilogue
+    part_f = part.astype(jnp.float32)
+    part_f *= jnp.swapaxes(x_scale, 0, 1)[:, :, None]      # x scales
+    part_f *= w_scale[:, None, :]                          # w scales
+    acc_ref[...] += jnp.sum(part_f, axis=0)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def qmatmul_pallas(x: jnp.ndarray, qt: QTensor, *, variant: str = "dequant_dot",
+                   bm: int = 128, bk: int = 512, bn: int = 128,
+                   out_dtype=jnp.float32,
+                   interpret: bool = False) -> jnp.ndarray:
+    """(M, K) activations x block-quantized (K, N) weights."""
+    m, k = x.shape
+    k2, n = qt.shape
+    assert k == k2, (x.shape, qt.shape)
+    fmt = qt.format
+    bm, bn = min(bm, m), min(bn, n)
+    bk = min(bk, k)
+    bk = max(fmt.block, (bk // fmt.block) * fmt.block)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"({m},{k},{n}) vs blocks ({bm},{bk},{bn})")
+    grid = (m // bm, n // bn, k // bk)
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    out_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+
+    if variant == "dot_i8":
+        if qt.fmt != "q8_0":
+            raise ValueError("dot_i8 variant requires q8_0 weights")
+        v_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+        s_rows = bk // fmt.block
+        s_spec = pl.BlockSpec((s_rows, bn), lambda i, j, kk: (kk, j))
+        kernel = functools.partial(_qmatmul_i8_kernel, qblock=fmt.block)
+        return pl.pallas_call(
+            kernel, grid=grid,
+            in_specs=[x_spec, v_spec, s_spec],
+            out_specs=out_spec, out_shape=out_shape,
+            scratch_shapes=scratch, interpret=interpret,
+        )(x, qt.values, qt.super_scales)
+
+    if variant != "dequant_dot":
+        raise ValueError(f"unknown variant {variant!r}")
+
+    # --- dequant_dot: assemble per-format plane specs -------------------
+    vals_per_byte = fmt.values_per_byte
+    v_rows = bk // vals_per_byte
+    v_spec = pl.BlockSpec((v_rows, bn), lambda i, j, kk: (kk, j))
+    sup_rows = bk // fmt.block
+    sup_spec = pl.BlockSpec((sup_rows, bn), lambda i, j, kk: (kk, j))
+    operands = [x, qt.values]
+    in_specs = [x_spec, v_spec]
+    has_sub = qt.sub_scales is not None
+    has_min = qt.sub_mins is not None
+    if has_sub:
+        sub_rows = bk // fmt.sub_block
+        sub_spec = pl.BlockSpec((sub_rows, bn), lambda i, j, kk: (kk, j))
+        operands.append(qt.sub_scales)
+        in_specs.append(sub_spec)
+        if has_min:
+            operands.append(qt.sub_mins)
+            in_specs.append(sub_spec)
+    operands.append(qt.super_scales)
+    in_specs.append(sup_spec)
+    if has_min:
+        operands.append(qt.super_mins)
+        in_specs.append(sup_spec)
+
+    def kernel(x_ref, *refs):
+        # refs layout: v, [sub_s, [sub_m]], sup_s, [sup_m], o, acc
+        o_ref, acc_ref = refs[-2], refs[-1]
+        i = 0
+        v_ref = refs[i]; i += 1
+        sub_s_ref = refs[i] if has_sub else None
+        i += int(has_sub)
+        sub_m_ref = refs[i] if has_min else None
+        i += int(has_min)
+        sup_s_ref = refs[i]; i += 1
+        sup_m_ref = refs[i] if has_min else None
+        _qmatmul_dequant_kernel(qt.fmt, x_ref, v_ref, sub_s_ref, sub_m_ref,
+                                sup_s_ref, sup_m_ref, o_ref, acc_ref)
+
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=in_specs, out_specs=out_spec, out_shape=out_shape,
+        scratch_shapes=scratch, interpret=interpret,
+    )(*operands)

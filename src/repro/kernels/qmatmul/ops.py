@@ -1,0 +1,46 @@
+"""Jitted wrapper: capability-aware quantized matmul (paper C4).
+
+On a profile with an unthrottled int8 path and a throttled f32 path (the
+CMP 170HX), the policy picks ``dot_i8`` for q8_0 weights; on a TPU it
+also picks ``dot_i8`` (int8 MXU = 2x bf16 throughput); formats without an
+int8 plane fall back to ``dequant_dot``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device_profile import DeviceProfile, Path
+from repro.kernels.qmatmul.kernel import qmatmul_pallas
+from repro.quant.quantize import QTensor
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret",
+                                             "bm", "bk", "bn"))
+def qmatmul_variant(x: jnp.ndarray, qt: QTensor, *,
+                    variant: str = "dequant_dot",
+                    bm: int = 128, bk: int = 512, bn: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    return qmatmul_pallas(x, qt, variant=variant, bm=bm, bk=bk, bn=bn,
+                          interpret=interpret)
+
+
+def select_variant(qt_fmt: str, profile: Optional[DeviceProfile]) -> str:
+    if qt_fmt != "q8_0" or profile is None:
+        return "dequant_dot"
+    i8 = profile.throughput("i8", Path.DOT_I8)
+    f16 = max(profile.throughput("f16", Path.FMA),
+              profile.throughput("bf16", Path.TENSOR),
+              profile.throughput("f16", Path.MUL_ADD))
+    return "dot_i8" if i8 > f16 * 0.5 else "dequant_dot"
+
+
+def qmatmul(x: jnp.ndarray, qt: QTensor,
+            profile: Optional[DeviceProfile] = None,
+            interpret: bool = False) -> jnp.ndarray:
+    variant = select_variant(qt.fmt, profile)
+    return qmatmul_variant(x, qt, variant=variant, interpret=interpret)

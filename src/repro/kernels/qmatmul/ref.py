@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the quantized matmul kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.quantize import QTensor, dequantize
+
+
+def qmatmul_ref(x: jnp.ndarray, qt: QTensor,
+                out_dtype=jnp.float32) -> jnp.ndarray:
+    """Dequantize-then-matmul oracle (exact for dequant_dot)."""
+    w = dequantize(qt)
+    return jnp.dot(x.astype(jnp.float32), w).astype(out_dtype)
+
+
+def qmatmul_i8_ref(x: jnp.ndarray, qt: QTensor, qblock: int = 32,
+                   out_dtype=jnp.float32) -> jnp.ndarray:
+    """Activation-quantized int8 dot oracle (exact for dot_i8, q8_0)."""
+    assert qt.fmt == "q8_0"
+    m, k = x.shape
+    nq = k // qblock
+    xb = x.astype(jnp.float32).reshape(m, nq, qblock)
+    x_scale = jnp.max(jnp.abs(xb), axis=2) / 127.0
+    x_scale = jnp.where(x_scale == 0, 1.0, x_scale)
+    xq = jnp.clip(jnp.round(xb / x_scale[:, :, None]), -127, 127)
+    wq = qt.values.astype(jnp.float32).reshape(nq, qblock, -1)
+    w_scale = qt.super_scales                          # (nq, n)
+    part = jnp.einsum("mqk,qkn->qmn", xq, wq)
+    part = part * x_scale.T[:, :, None] * w_scale[:, None, :]
+    return jnp.sum(part, axis=0).astype(out_dtype)

@@ -1,0 +1,6 @@
+from repro.kernels.ssd_scan.kernel import ssd_chunk_pallas
+from repro.kernels.ssd_scan.ops import ssd_pallas
+from repro.kernels.ssd_scan.ref import ssd_chunked, ssd_intra_ref, ssd_naive
+
+__all__ = ["ssd_chunk_pallas", "ssd_pallas", "ssd_chunked", "ssd_intra_ref",
+           "ssd_naive"]

@@ -1,0 +1,90 @@
+"""Pallas SSD (Mamba-2) chunk kernel: intra-chunk dual form in VMEM.
+
+The SSD layer splits into (a) an intra-chunk quadratic term that is
+attention-like and MXU-friendly and (b) a cheap inter-chunk state
+recurrence.  This kernel computes (a) plus each chunk's contribution to
+the boundary state, blocked so one (chunk x chunk) tile lives in VMEM:
+
+grid (B, H, n_chunks); per step it loads the chunk's x/dt/B/C tiles,
+forms the log-decay cumulative sums on the VPU, runs the two einsums on
+the MXU, and writes  y_intra  and the per-chunk boundary state S_z.  The
+O(n_chunks) sequential state recurrence stays in jnp (ops.py) -- it is
+0.1% of the FLOPs and latency-bound, exactly what the paper's roofline
+logic says to leave off the matrix unit.
+
+Shapes: x (B,S,H,P); dt (B,S,H); a_log (H,); b/c (B,S,N).
+Outputs: y_intra (B,S,H,P); states (B,NC,H,N,P); chunk_decay (B,NC,H).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref,
+                      y_ref, s_ref, dec_ref, *, q: int):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    a = alog_ref[0]                                    # scalar (per head)
+    b = b_ref[0].astype(jnp.float32)                   # (Q, N)
+    c = c_ref[0].astype(jnp.float32)                   # (Q, N)
+
+    la = dt * a                                        # (Q,) log decay
+    cum = jnp.cumsum(la)                               # (Q,)
+    # lower-tri decay matrix L[i,j] = exp(cum_i - cum_j), j<=i
+    seg = cum[:, None] - cum[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_mat = jnp.where(mask, jnp.exp(seg), 0.0)
+
+    xdt = x * dt[:, None]                              # (Q, P)
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)   # (Q, Q)
+    w = cb * l_mat
+    y_ref[0, :, 0, :] = jnp.dot(
+        w, xdt, preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    # chunk boundary state: S = sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[-1] - cum)              # (Q,)
+    bw = b * decay_to_end[:, None]                     # (Q, N)
+    s_ref[0, 0, 0] = jnp.dot(
+        bw.T, xdt, preferred_element_type=jnp.float32).astype(s_ref.dtype)
+    dec_ref[0, 0, 0] = jnp.exp(cum[-1]).astype(dec_ref.dtype)
+
+
+def ssd_chunk_pallas(x, dt, a_log, b, c, *, chunk: int = 128,
+                     interpret: bool = False):
+    """Intra-chunk SSD pass. Returns (y_intra, states, chunk_decay)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+    kernel = functools.partial(_ssd_chunk_kernel, q=q)
+    grid = (bsz, h, nc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bb, hh, z: (bb, z, hh, 0)),
+            pl.BlockSpec((1, q, 1), lambda bb, hh, z: (bb, z, hh)),
+            pl.BlockSpec((1,), lambda bb, hh, z: (hh,)),
+            pl.BlockSpec((1, q, n), lambda bb, hh, z: (bb, z, 0)),
+            pl.BlockSpec((1, q, n), lambda bb, hh, z: (bb, z, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bb, hh, z: (bb, z, hh, 0)),
+            pl.BlockSpec((1, 1, 1, n, p),
+                         lambda bb, hh, z: (bb, z, hh, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bb, hh, z: (bb, z, hh)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a_log, b, c)

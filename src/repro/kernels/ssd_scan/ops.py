@@ -1,0 +1,42 @@
+"""Full SSD via the Pallas chunk kernel + jnp inter-chunk recurrence."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_chunk_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x, dt, a_log, b, c, *, chunk: int = 128,
+               interpret: bool = False):
+    """Drop-in equivalent of models.ssm.ssd_chunked using the kernel."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    y_intra, states, chunk_decay = ssd_chunk_pallas(
+        x, dt, a_log, b, c, chunk=q, interpret=interpret)
+
+    # inter-chunk recurrence (latency-bound, off the matrix unit)
+    def step(hstate, inp):
+        s_z, dec = inp
+        h_in = hstate
+        hstate = hstate * dec[..., None, None] + s_z
+        return hstate, h_in
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, h_starts = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_starts = h_starts.swapaxes(0, 1)                 # (B,NC,H,N,P)
+
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    la = (dtc * a_log[None, None, None, :]).transpose(0, 1, 3, 2)
+    cum = jnp.cumsum(la, axis=-1)
+    cc = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+    y_inter = jnp.einsum("bzhq,bzqn,bzhnp->bzqhp", jnp.exp(cum), cc,
+                         h_starts)
+    return (y_intra + y_inter.reshape(bsz, s, h, p)).astype(x.dtype)

@@ -1,0 +1,35 @@
+"""Oracle for the SSD chunk kernel: the jnp chunked implementation."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked, ssd_naive  # re-export oracles
+
+__all__ = ["ssd_chunked", "ssd_naive", "ssd_intra_ref"]
+
+
+def ssd_intra_ref(x, dt, a_log, b, c, chunk: int):
+    """Intra-chunk-only reference (inter-chunk state zeroed)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = chunk
+    nc = s // q
+    f32 = jnp.float32
+    xc = x.reshape(bsz, nc, q, h, p).astype(f32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(f32)
+    bc = b.reshape(bsz, nc, q, n).astype(f32)
+    cc = c.reshape(bsz, nc, q, n).astype(f32)
+    la = (dtc * a_log[None, None, None, :]).transpose(0, 1, 3, 2)
+    cum = jnp.cumsum(la, axis=-1)
+    seg = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(mask, jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bzqn,bzkn->bzqk", cc, bc)
+    w = cb[:, :, None] * l_mat
+    xdt = xc * dtc[..., None]
+    y = jnp.einsum("bzhqk,bzkhp->bzqhp", w, xdt)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)
+    states = jnp.einsum("bzhq,bzqn,bzqhp->bzhnp", decay_to_end, bc, xdt)
+    chunk_decay = jnp.exp(cum[..., -1])
+    return (y.reshape(bsz, s, h, p), states, chunk_decay)

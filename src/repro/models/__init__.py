@@ -1,0 +1,6 @@
+from repro.models.common import (ModelConfig, MoEConfig, SSMConfig,
+                                 cross_entropy, pad_vocab)
+from repro.models.registry import Model, build_model
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "cross_entropy",
+           "pad_vocab", "Model", "build_model"]

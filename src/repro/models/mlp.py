@@ -1,0 +1,47 @@
+"""Feed-forward blocks: SwiGLU (LM default) and GELU MLP (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+from repro.parallel.sharding import constrain
+
+
+def init_swiglu(key, d_model: int, d_ff: int):
+    kg, ku, kd = split_keys(key, 3)
+    return {
+        "w_gate": dense_init(kg, (d_model, d_ff)),
+        "w_up": dense_init(ku, (d_model, d_ff)),
+        "w_down": dense_init(kd, (d_ff, d_model)),
+    }
+
+
+def swiglu(p, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    # pin the hidden activation to d_ff-over-model (Megatron TP): guides
+    # the bwd dW dot to reduce-scatter instead of gathering h.
+    h = constrain(h, *(("batch",) + (None,) * (h.ndim - 2) + ("tp",)))
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(x.dtype))
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int):
+    k1, k2 = split_keys(key, 2)
+    return {
+        "w1": dense_init(k1, (d_model, d_ff)),
+        "b1": jnp.zeros((d_ff,), jnp.float32),
+        "w2": dense_init(k2, (d_ff, d_model)),
+        "b2": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def gelu_mlp(p, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, p["w1"].astype(x.dtype))
+    h = h + p["b1"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = constrain(h, *(("batch",) + (None,) * (h.ndim - 2) + ("tp",)))
+    return jnp.einsum("...f,fd->...d", h, p["w2"].astype(x.dtype)) + \
+        p["b2"].astype(x.dtype)

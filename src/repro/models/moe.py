@@ -1,0 +1,140 @@
+"""Mixture-of-Experts layer: top-k routing, sort-based capacity dispatch.
+
+Covers both assigned MoE architectures:
+
+* **arctic-480b** -- 128 experts, top-2, plus a *dense residual* FFN in
+  parallel (Snowflake Arctic's dense-MoE hybrid).
+* **moonshot-v1-16b-a3b** -- 64 experts, top-6 (Moonlight/DeepSeek
+  family), optional shared experts.
+
+Dispatch is sort-based (Megablocks-style) rather than one-hot-einsum
+(GShard): a (tokens x k) assignment list is sorted by expert id and
+scattered into an (E, C, d) buffer -- memory O(E*C*d), not O(T*E*C) --
+which is what makes 1M-token batches with 128 experts compileable.  The
+expert dimension shards over the `model` mesh axis (expert parallelism);
+GSPMD turns the scatter/gather into all-to-alls.
+
+Aux losses: switch-style load-balance loss + router z-loss, returned to
+the caller for accumulation.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import MoEConfig, dense_init, split_keys
+from repro.parallel.sharding import constrain
+from repro.models.mlp import init_swiglu, swiglu
+
+
+def init_moe(key, d_model: int, moe: MoEConfig):
+    kr, ke, ks = split_keys(key, 3)
+    E, f = moe.n_experts, moe.d_expert_ff
+    keys = split_keys(ke, 3)
+    p = {
+        "router": dense_init(kr, (d_model, E), scale=0.02),
+        "w_gate": dense_init(keys[0], (E, d_model, f)),
+        "w_up": dense_init(keys[1], (E, d_model, f)),
+        "w_down": dense_init(keys[2], (E, f, d_model)),
+    }
+    if moe.n_shared_experts:
+        p["shared"] = init_swiglu(ks, d_model, f * moe.n_shared_experts)
+    return p
+
+
+def _capacity(n_tokens: int, moe: MoEConfig) -> int:
+    c = int(moe.capacity_factor * n_tokens * moe.top_k / moe.n_experts)
+    return max(8, (c + 7) // 8 * 8)  # 8-aligned for TPU sublanes
+
+
+def moe_forward(p, x: jnp.ndarray, moe: MoEConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Million-token batches (32k prefill) are dispatched in fixed-size
+    token chunks (lax.scan) so the (E, C, d) buffers stay bounded --
+    REPRO_MOE_CHUNK tokens per chunk (0 disables; the dry-run cost pass
+    disables it because an un-chunked graph is compile-only there).
+    """
+    import os
+    b, s, d = x.shape
+    t = b * s
+    chunk = int(os.environ.get("REPRO_MOE_CHUNK", "65536"))
+    if chunk and t > chunk and t % chunk == 0:
+        from repro.models.common import layer_scan
+        xc = x.reshape(t // chunk, 1, chunk, d)
+
+        def body(aux, xi):
+            out, a = _moe_tokens(p, xi, moe)
+            return aux + a, out
+
+        aux, outs = layer_scan(body, jnp.zeros((), jnp.float32), xc)
+        return (outs.reshape(b, s, d),
+                aux * (chunk / float(t)))
+    return _moe_tokens(p, x, moe)
+
+
+def _moe_tokens(p, x: jnp.ndarray, moe: MoEConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    E, k, C = moe.n_experts, moe.top_k, _capacity(t, moe)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (t, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- load-balance + z losses (Switch Transformer eqs) ----
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = moe.router_aux_weight * E * jnp.sum(me * ce)
+    aux = aux + 1e-4 * jnp.mean(
+        jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- sort-based dispatch with capacity ----
+    flat_expert = expert_ids.reshape(-1)                     # (t*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_expert)                         # stable
+    se, st, sg = (flat_expert[order], flat_token[order], flat_gate[order])
+    # position within expert: rank - segment_start
+    seg_start = jnp.searchsorted(se, jnp.arange(E), side="left")
+    pos = jnp.arange(t * k) - seg_start[se]
+    keep = pos < C
+    # scatter tokens into (E, C, d); dropped tokens scatter to a dump row
+    e_idx = jnp.where(keep, se, E - 1)
+    c_idx = jnp.where(keep, pos, C)                          # C = dump slot
+    buf = constrain(jnp.zeros((E, C + 1, d), x.dtype),
+                    "expert", None, "fsdp")
+    buf = buf.at[e_idx, c_idx].add(jnp.where(keep[:, None],
+                                             xf[st], 0).astype(x.dtype))
+    buf = constrain(buf, "expert", None, "fsdp")
+    # d-dim sharded like the expert weights' contraction dim: the expert
+    # einsums then produce partial sums (psum of the small activations)
+    # instead of all-gathering the expert weights -- which GSPMD would
+    # hoist out of the layer scan, materializing every layer's experts.
+    ebuf = constrain(buf[:, :C, :], "expert", None, "fsdp")  # (E, C, d)
+
+    # ---- expert computation (E sharded over `model`) ----
+    g = jnp.einsum("ecd,edf->ecf", ebuf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", ebuf, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    eout = constrain(eout, "expert", None, "fsdp")
+
+    # ---- combine back to token order, weighted by gates ----
+    gathered = eout[e_idx, c_idx]                            # (t*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    out = constrain(jnp.zeros((t, d), x.dtype), "batch", None).at[st].add(
+        gathered * sg[:, None].astype(x.dtype))
+
+    if moe.n_shared_experts:
+        out = out + swiglu(p["shared"], xf)
+    return out.reshape(b, s, d), aux

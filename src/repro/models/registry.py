@@ -1,0 +1,63 @@
+"""Model registry: uniform init / loss / decode entry points per family."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.models import transformer, whisper
+from repro.models.common import ModelConfig
+
+
+class Model:
+    """Thin dispatcher binding a ModelConfig to its family's functions."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init ------------------------------------------------------------
+    def init(self, rng):
+        if self.cfg.is_encdec:
+            return whisper.init_whisper(rng, self.cfg)
+        return transformer.init_lm(rng, self.cfg)
+
+    # -- training --------------------------------------------------------
+    def loss(self, params, batch: Dict[str, jnp.ndarray],
+             remat: bool = False) -> jnp.ndarray:
+        if self.cfg.is_encdec:
+            return whisper.whisper_loss(params, batch, self.cfg, remat=remat)
+        return transformer.lm_loss(params, batch, self.cfg, remat=remat)
+
+    def forward(self, params, batch: Dict[str, jnp.ndarray]):
+        if self.cfg.is_encdec:
+            enc = whisper.encode(params, batch["frames"], self.cfg)
+            return whisper.decode_forward(params, batch["tokens"], enc,
+                                          self.cfg)
+        logits, _ = transformer.lm_forward(
+            params, batch["tokens"], self.cfg,
+            vision_embeds=batch.get("vision_embeds"))
+        return logits
+
+    # -- serving ---------------------------------------------------------
+    def init_cache(self, params, batch: int, max_len: int,
+                   enc: jnp.ndarray = None):
+        if self.cfg.is_encdec:
+            assert enc is not None, "whisper cache needs encoder states"
+            return whisper.init_whisper_cache(params, enc, self.cfg, batch,
+                                              max_len)
+        return transformer.init_cache(self.cfg, batch, max_len)
+
+    def decode_step(self, params, cache, tokens):
+        if self.cfg.is_encdec:
+            return whisper.whisper_decode_step(params, self.cfg, cache,
+                                               tokens)
+        return transformer.lm_decode_step(params, self.cfg, cache, tokens)
+
+    def encode(self, params, frames):
+        assert self.cfg.is_encdec
+        return whisper.encode(params, frames, self.cfg)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

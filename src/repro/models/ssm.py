@@ -1,0 +1,242 @@
+"""Mamba-2 (SSD, state-space duality) block: chunked scan + decode step.
+
+Implements the SSD algorithm of arXiv:2405.21060 with scalar-per-head A
+and a single B/C group (n_groups=1), the mamba2-780m configuration:
+
+  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T        (state: H x N x P)
+  y_t = C_t . h_t + D x_t
+
+Training uses the chunked dual form: intra-chunk attention-like term
+``(L o C B^T) (dt*X)`` plus an inter-chunk state recurrence (lax.scan over
+chunks), giving O(S Q) work with chunk Q.  Decode carries the (H, N, P)
+state -- O(1) per token, which is what qualifies the SSM families for the
+``long_500k`` shape (DESIGN.md SS4).
+
+The block follows mamba_ssm's Mamba2: in_proj -> [z | x | B | C | dt],
+causal depthwise conv on (x,B,C), SSD, gated RMSNorm, out_proj.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, SSMConfig, dense_init, split_keys
+
+
+# ----------------------------------------------------------------------
+# SSD core
+# ----------------------------------------------------------------------
+
+def ssd_naive(x, dt, a_log, b, c):
+    """Reference recurrence. x: (B,S,H,P); dt: (B,S,H); a_log: (H,);
+    b/c: (B,S,N). Returns y: (B,S,H,P)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    decay = jnp.exp(dt * a_log[None, None, :])            # (B,S,H)
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct, dect = inp
+        hstate = hstate * dect[..., None, None] + \
+            dtt[..., None, None] * bt[:, None, :, None] * xt[:, :, None, :]
+        yt = jnp.einsum("bn,bhnp->bhp", ct, hstate)
+        return hstate, yt
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          b.swapaxes(0, 1).astype(jnp.float32),
+          c.swapaxes(0, 1).astype(jnp.float32),
+          decay.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1)                               # (B,S,H,P)
+
+
+def _segsum(la):
+    """Stable segment-sum: la (..., Q) -> (..., Q, Q) lower-tri cum-decays."""
+    q = la.shape[-1]
+    cum = jnp.cumsum(la, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :] + la[..., None, :] * 0
+    # exp(la_i .. la_j window) = cum_i - cum_j + la_j ... we want
+    # sum_{m=j+1..i} la_m = cum_i - cum_j
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int = 256):
+    """Chunked SSD (the dual form). Same signature as ssd_naive.
+
+    Sequences not divisible by the chunk are zero-padded: padded steps
+    carry dt=0 => decay exp(0)=1 and zero input, so the recurrence is
+    unchanged.
+    """
+    bsz, s0, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s0)
+    pad = (-s0) % q
+    if pad:
+        zp = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +  # noqa: E731
+                               [(0, 0)] * (t.ndim - 2))
+        x, dt, b, c = zp(x), zp(dt), zp(b), zp(c)
+    s = s0 + pad
+    nc = s // q
+    f32 = jnp.float32
+    xc = x.reshape(bsz, nc, q, h, p).astype(f32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(f32)
+    bc = b.reshape(bsz, nc, q, n).astype(f32)
+    cc = c.reshape(bsz, nc, q, n).astype(f32)
+    la = dtc * a_log[None, None, None, :]                  # (B,NC,Q,H) log-decay
+    la = la.transpose(0, 1, 3, 2)                          # (B,NC,H,Q)
+    cum = jnp.cumsum(la, axis=-1)                          # within-chunk
+
+    # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (C_i.B_j) x_j
+    seg = _segsum(la)                                      # (B,NC,H,Q,Q)
+    l_mat = jnp.exp(seg)
+    cb = jnp.einsum("bzqn,bzkn->bzqk", cc, bc)             # (B,NC,Q,Q)
+    w = cb[:, :, None] * l_mat                             # (B,NC,H,Q,Q)
+    xdt = xc * dtc[..., None]                              # (B,NC,Q,H,P)
+    y_intra = jnp.einsum("bzhqk,bzkhp->bzqhp", w, xdt)
+
+    # chunk-final states: S_z = sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)            # (B,NC,H,Q)
+    sz = jnp.einsum("bzhq,bzqn,bzqhp->bzhnp",
+                    decay_to_end, bc, xdt)                 # (B,NC,H,N,P)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[..., -1])                    # (B,NC,H)
+
+    def step(hstate, inp):
+        s_z, dec = inp                                     # (B,H,N,P),(B,H)
+        h_in = hstate
+        hstate = hstate * dec[..., None, None] + s_z
+        return hstate, h_in
+
+    h0 = jnp.zeros((bsz, h, n, p), f32)
+    _, h_starts = jax.lax.scan(
+        step, h0, (sz.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_starts = h_starts.swapaxes(0, 1)                     # (B,NC,H,N,P)
+
+    # inter-chunk output: y_i += exp(cum_i) C_i . h_start
+    decay_in = jnp.exp(cum)                                # (B,NC,H,Q)
+    y_inter = jnp.einsum("bzhq,bzqn,bzhnp->bzqhp",
+                         decay_in, cc, h_starts)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    if pad:
+        y = y[:, :s0]
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Mamba2 block
+# ----------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm or SSMConfig()
+    d_inner = s.d_inner_override or (s.expand * cfg.d_model)
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.state_dim
+    return s, d_inner, n_heads, conv_ch
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    s, d_inner, nh, conv_ch = _dims(cfg)
+    kin, kout, kconv, kdt = split_keys(key, 4)
+    d_in_proj = 2 * d_inner + 2 * s.state_dim + nh
+    p = {
+        "in_proj": dense_init(kin, (cfg.d_model, d_in_proj)),
+        "out_proj": dense_init(kout, (d_inner, cfg.d_model)),
+        "conv_w": dense_init(kconv, (s.conv_width, conv_ch), scale=0.2),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.full((nh,), 0.01, jnp.float32))),  # softplus^-1(dt_init)
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+    }
+    return p
+
+
+def _split_in_proj(zxbcdt, cfg: ModelConfig):
+    s, d_inner, nh, _ = _dims(cfg)
+    z, xin, bc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * s.state_dim],
+        axis=-1)
+    b, c = jnp.split(bc, 2, axis=-1)
+    return z, xin, b, c, dt
+
+
+def _gated_norm(p, y, z, eps=1e-5):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    rms = jnp.sqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + eps)
+    return (yf / rms * p["norm_scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba2_forward(p, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, d_model) -> (B, S, d_model)."""
+    s_cfg, d_inner, nh, conv_ch = _dims(cfg)
+    bsz, s, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xin, b, c, dt = _split_in_proj(zxbcdt, cfg)
+
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([xin, b, c], axis=-1)            # (B,S,conv_ch)
+    w = p["conv_w"].astype(xbc.dtype)
+    pad = s_cfg.conv_width - 1
+    xp = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    conv = sum(xp[:, i:i + s, :] * w[i][None, None, :]
+               for i in range(s_cfg.conv_width))
+    xbc = jax.nn.silu((conv + p["conv_b"].astype(conv.dtype)
+                       ).astype(jnp.float32)).astype(x.dtype)
+    xin, b, c = jnp.split(xbc, [d_inner, d_inner + s_cfg.state_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])    # (B,S,H)
+    xh = xin.reshape(bsz, s, nh, s_cfg.head_dim)
+    y = ssd_chunked(xh, dt, -jnp.exp(p["a_log"]), b, c, chunk=s_cfg.chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = _gated_norm(p, y, z)
+    return jnp.einsum("bse,ed->bsd", y,
+                      p["out_proj"].astype(x.dtype)).astype(x.dtype)
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int):
+    s, d_inner, nh, conv_ch = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nh, s.state_dim, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), jnp.float32),
+    }
+
+
+def mamba2_decode(p, x: jnp.ndarray, cfg: ModelConfig, state
+                  ) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, 1, d_model); state: {'h', 'conv'} -> (y, new_state)."""
+    s_cfg, d_inner, nh, conv_ch = _dims(cfg)
+    bsz = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xin, b, c, dt = _split_in_proj(zxbcdt[:, 0], cfg)   # (B, ...)
+
+    xbc = jnp.concatenate([xin, b, c], axis=-1)            # (B,conv_ch)
+    hist = jnp.concatenate([state["conv"],
+                            xbc[:, None, :].astype(jnp.float32)], axis=1)
+    w = p["conv_w"].astype(jnp.float32)                    # (W, ch)
+    conv = jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"]
+    xbc = jax.nn.silu(conv).astype(x.dtype)
+    new_conv = hist[:, 1:, :]
+    xin, b, c = jnp.split(xbc, [d_inner, d_inner + s_cfg.state_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    a = jnp.exp(dt * (-jnp.exp(p["a_log"]))[None, :])      # (B,H)
+    xh = xin.reshape(bsz, nh, s_cfg.head_dim).astype(jnp.float32)
+    h = state["h"] * a[..., None, None] + \
+        dt[..., None, None] * b.astype(jnp.float32)[:, None, :, None] * \
+        xh[:, :, None, :]
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), h)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = _gated_norm(p, y, z[:, None, :])
+    out = jnp.einsum("bse,ed->bsd", y,
+                     p["out_proj"].astype(x.dtype)).astype(x.dtype)
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,7 @@
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_update,
+                               global_norm, init_adamw, lr_schedule)
+from repro.optim.compression import compress_roundtrip_error, compressed_psum
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_update", "global_norm",
+           "init_adamw", "lr_schedule", "compress_roundtrip_error",
+           "compressed_psum"]

@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (batch_shardings, cache_shardings,
+                                     constrain, current_mesh,
+                                     mesh_logical_axes, param_shardings,
+                                     param_spec, replicated, use_mesh)
+
+__all__ = ["batch_shardings", "cache_shardings", "constrain", "current_mesh",
+           "mesh_logical_axes", "param_shardings", "param_spec",
+           "replicated", "use_mesh"]

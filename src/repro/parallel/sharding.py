@@ -1,0 +1,296 @@
+"""Sharding rules: FSDP + TP + EP + SP over the production mesh.
+
+Logical axes and their mesh mapping:
+
+=========  =====================  ======================================
+logical    mesh axes              used for
+=========  =====================  ======================================
+``batch``  ("pod", "data")        data parallelism (activations, tokens)
+``fsdp``   ("pod", "data")        weight/optimizer sharding (ZeRO-3)
+``tp``     ("model",)             d_ff / flattened head / vocab dims
+``seq``    ("model",)             sequence parallelism inside attention
+``expert`` ("model",)             MoE expert parallelism
+=========  =====================  ======================================
+
+Every rule degrades gracefully: if a tensor dim is not divisible by the
+mesh axis size (e.g. Hymba's 6482-wide in_proj), the axis is dropped for
+that dim rather than relying on GSPMD padding -- keeps memory analysis
+honest.  A process-global mesh context (``use_mesh``) lets model code
+call :func:`constrain` without threading mesh objects through every
+layer; outside the context it is the identity, so single-device smoke
+tests are untouched.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def mesh_logical_axes(mesh: Mesh, mode: str = "train") -> Dict[str, Any]:
+    """Logical-axis -> mesh-axis mapping.
+
+    ``train``: FSDP over (pod, data) + TP over model + SP over model.
+    ``serve``: weight-stationary 2-D TP -- feature dims shard over
+    (data, model) jointly, NO fsdp gathering (decode must never stream
+    whole layers over the interconnect); batch rides the pod axis when
+    present (the KV cache keeps its own batch/data sharding).
+    """
+    names = mesh.axis_names
+    dp: Tuple[str, ...] = tuple(a for a in ("pod", "data") if a in names)
+    dp_ax: Any = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp = "model" if "model" in names else None
+    flat = tuple(names) or None
+    if mode == "serve":
+        tp2 = tuple(a for a in ("data", "model") if a in names) or None
+        return {"batch": "pod" if "pod" in names else None,
+                "fsdp": None, "tp": tp2, "seq": tp, "expert": tp,
+                "edata": "data" if "data" in names else None,
+                "flat": flat}
+    return {"batch": dp_ax, "fsdp": dp_ax, "tp": tp, "seq": tp,
+            "expert": tp, "flat": flat}
+
+
+# ----------------------------------------------------------------------
+# global mesh context
+# ----------------------------------------------------------------------
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], mode: str = "train"):
+    prev = getattr(_ctx, "mesh", None)
+    prev_mode = getattr(_ctx, "mode", "train")
+    _ctx.mesh = mesh
+    _ctx.mode = mode
+    try:
+        yield
+    finally:
+        _ctx.mesh = prev
+        _ctx.mode = prev_mode
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+def current_mode() -> str:
+    return getattr(_ctx, "mode", "train")
+
+
+def _fallback_axes(mesh: Mesh, dim: int, axes):
+    """Progressively drop leading axes of a tuple until divisible."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(axes)
+    while axes:
+        if dim % _axis_size(mesh, axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+        axes = axes[1:]
+    return None
+
+
+def constrain(x, *logical: Optional[str]):
+    """with_sharding_constraint by logical axis names (None = unsharded).
+
+    Identity when no mesh context is active or when a dim is not
+    divisible by its mesh axes.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    la = mesh_logical_axes(mesh, current_mode())
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        axes = la.get(name) if name else None
+        spec.append(_fallback_axes(mesh, dim, axes))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# ----------------------------------------------------------------------
+# parameter sharding rules
+# ----------------------------------------------------------------------
+
+#: param-name -> logical axes per dim (matched by the *last* path element,
+#: with container names joined for disambiguation).
+_PARAM_RULES: Dict[str, Sequence[Optional[str]]] = {
+    # embedding / head
+    "tok": ("tp", "fsdp"),
+    "head": ("fsdp", "tp"),
+    # attention
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",), "bk": ("tp",), "bv": ("tp",),
+    # dense mlp
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    "w1": ("fsdp", "tp"), "b1": ("tp",),
+    "w2": ("tp", "fsdp"), "b2": (None,),
+    # moe (3-D expert tensors; matched with the moe/ prefix below)
+    "router": ("fsdp", None),
+    "moe/w_gate": ("expert", "fsdp", None),
+    "moe/w_up": ("expert", "fsdp", None),
+    "moe/w_down": ("expert", None, "fsdp"),
+    # mamba2
+    "in_proj": ("fsdp", "tp"), "out_proj": ("tp", "fsdp"),
+    "conv_w": (None, "tp"), "conv_b": ("tp",),
+    "a_log": (None,), "dt_bias": (None,), "d_skip": (None,),
+    "norm_scale": ("tp",),
+    # norms
+    "scale": (None,), "bias": (None,),
+}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):          # GetAttrKey (NamedTuple fields)
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _rule_for(path_str: str, ndim: int) -> Sequence[Optional[str]]:
+    leaf = path_str.rsplit("/", 1)[-1]
+    # int8-Adam moments keep the parameter's shape: route "q"/"scale"
+    # leaves to the parent parameter's rule (scale has last dim 1, which
+    # the divisibility fallback leaves unsharded automatically).
+    if (("/mu/" in path_str or path_str.startswith("mu/")
+         or "/nu/" in path_str or path_str.startswith("nu/"))
+            and leaf in ("q", "scale")):
+        return _rule_for(path_str.rsplit("/", 1)[0], ndim)
+    # stacked layer params gain a leading layer dim
+    lead = 1 if ("blocks/" in path_str or "encoder/" in path_str
+                 or "decoder/" in path_str) else 0
+    if "moe/" in path_str and "moe/" + leaf in _PARAM_RULES:
+        rule = _PARAM_RULES["moe/" + leaf]
+    elif leaf in _PARAM_RULES:
+        rule = _PARAM_RULES[leaf]
+    else:
+        rule = (None,) * (ndim - lead)
+    full = (None,) * lead + tuple(rule)
+    if len(full) < ndim:   # e.g. shared-expert swiglu under moe
+        full = full + (None,) * (ndim - len(full))
+    return full[:ndim]
+
+
+#: serve-mode overrides: expert weights stay resident -- experts over
+#: `model`, expert-ff over `data` (never gathered during decode).
+_SERVE_OVERRIDES: Dict[str, Sequence[Optional[str]]] = {
+    "moe/w_gate": ("expert", None, "edata"),
+    "moe/w_up": ("expert", None, "edata"),
+    "moe/w_down": ("expert", "edata", None),
+}
+
+
+def param_spec(mesh: Mesh, path, leaf, mode: str = "train") -> P:
+    la = mesh_logical_axes(mesh, mode)
+    rule = _rule_for(_path_str(path), leaf.ndim)
+    if mode == "serve":
+        ps = _path_str(path)
+        leaf_name = ps.rsplit("/", 1)[-1]
+        key = "moe/" + leaf_name if "moe/" in ps else leaf_name
+        if key in _SERVE_OVERRIDES:
+            lead = 1 if ("blocks/" in ps or "encoder/" in ps
+                         or "decoder/" in ps) else 0
+            rule = (None,) * lead + tuple(_SERVE_OVERRIDES[key])
+            rule = rule[:leaf.ndim]
+    spec = []
+    for dim, name in zip(leaf.shape, rule):
+        axes = la.get(name) if name else None
+        spec.append(_fallback_axes(mesh, dim, axes))
+    return P(*spec)
+
+
+def param_shardings(mesh: Mesh, params_tree, mode: str = "train"):
+    """Tree of NamedShardings mirroring a (possibly abstract) param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(mesh, path, leaf, mode)), params_tree)
+
+
+# ----------------------------------------------------------------------
+# batch / cache shardings
+# ----------------------------------------------------------------------
+
+def _spec_with_div(mesh: Mesh, shape, logical, mode: str = "train") -> P:
+    la = mesh_logical_axes(mesh, mode)
+    out = []
+    for dim, name in zip(shape, logical):
+        axes = la.get(name) if name else None
+        out.append(_fallback_axes(mesh, dim, axes))
+    return P(*out)
+
+
+_BATCH_RULES = {
+    "tokens": ("batch", None),
+    "labels": ("batch", None),
+    "loss_mask": ("batch", None),
+    "frames": ("batch", None, None),
+    "vision_embeds": ("batch", None, None),
+}
+
+_CACHE_RULES = {
+    "k": (None, "kv_batch", None, "seq", None),
+    "v": (None, "kv_batch", None, "seq", None),
+    "k_scale": (None, "kv_batch", None, "seq", None),
+    "v_scale": (None, "kv_batch", None, "seq", None),
+    "cross_k": (None, "kv_batch", None, "seq", None),
+    "cross_v": (None, "kv_batch", None, "seq", None),
+    "ssm_h": (None, "kv_batch", None, "tp", None),
+    "ssm_conv": (None, "kv_batch", None, "tp"),
+    "len": (None,),
+}
+
+
+def batch_shardings(mesh: Mesh, batch_tree):
+    def f(path, leaf):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        rule = _BATCH_RULES.get(name, ("batch",) + (None,) * (leaf.ndim - 1))
+        return NamedSharding(mesh, _spec_with_div(mesh, leaf.shape, rule))
+    return jax.tree_util.tree_map_with_path(f, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cache_tree):
+    """KV/state cache shardings: batch over (pod, data), seq over model --
+    identical in train and serve modes (the cache IS the decode working
+    set; weight-stationary serving leaves it untouched)."""
+    la = {"kv_batch": tuple(a for a in ("pod", "data")
+                            if a in mesh.axis_names) or None,
+          "seq": "model" if "model" in mesh.axis_names else None,
+          "tp": "model" if "model" in mesh.axis_names else None}
+
+    def f(path, leaf):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        rule = _CACHE_RULES.get(name, (None,) * leaf.ndim)
+        spec = [
+            _fallback_axes(mesh, dim, la.get(r) if r else None)
+            for dim, r in zip(leaf.shape, rule)]
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(f, cache_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,12 @@
+from repro.quant.formats import (DENSE_BPW, FORMATS, QuantFormat,
+                                 bits_per_weight, bytes_per_weight,
+                                 get_format)
+from repro.quant.quantize import (QTensor, dequantize, pack_nibbles,
+                                  quantization_rmse, quantize,
+                                  unpack_nibbles)
+
+__all__ = [
+    "DENSE_BPW", "FORMATS", "QuantFormat", "bits_per_weight",
+    "bytes_per_weight", "get_format", "QTensor", "dequantize",
+    "pack_nibbles", "quantization_rmse", "quantize", "unpack_nibbles",
+]

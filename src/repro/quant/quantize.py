@@ -1,0 +1,265 @@
+"""Quantize / dequantize reference implementations (pure jnp).
+
+These are the oracles for the Pallas ``qmatmul`` kernels and the
+functional weight store for quantized serving.  Layouts are the TPU
+structure-of-arrays planes described in :mod:`repro.quant.formats`.
+
+All functions operate on the *last* axis being the quantized (reduction)
+axis of a weight matrix ``w[k, n]`` -> we quantize along ``k`` so the
+matmul kernel can dequantize a (bk, bn) tile with per-k-block scales.
+Weights whose k is not a multiple of the block size must be padded by the
+caller (all model dims in this repo are multiples of 256).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import QuantFormat, get_format
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """A block-quantized 2-D tensor in TPU plane layout.
+
+    values:      int8 (q8_0/q6_k) or packed uint8 (q4_k: 2/byte,
+                 q2_k: 4/byte), shape (k_packed, n).
+    sub_scales:  int8, shape (k/sub, n)   -- None for q8_0.
+    sub_mins:    int8, shape (k/sub, n)   -- only asymmetric formats.
+    super_scales:f32, shape (k/block, n)  -- per-block scale of sub_scales.
+    super_mins:  f32, shape (k/block, n)  -- per-block scale of sub_mins.
+    """
+
+    fmt: str
+    shape: tuple
+    values: jnp.ndarray
+    super_scales: jnp.ndarray
+    sub_scales: Optional[jnp.ndarray] = None
+    sub_mins: Optional[jnp.ndarray] = None
+    super_mins: Optional[jnp.ndarray] = None
+
+    # pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        children = (self.values, self.super_scales, self.sub_scales,
+                    self.sub_mins, self.super_mins)
+        return children, (self.fmt, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fmt, shape = aux
+        values, super_scales, sub_scales, sub_mins, super_mins = children
+        return cls(fmt=fmt, shape=shape, values=values,
+                   super_scales=super_scales, sub_scales=sub_scales,
+                   sub_mins=sub_mins, super_mins=super_mins)
+
+    @property
+    def format(self) -> QuantFormat:
+        return get_format(self.fmt)
+
+    def nbytes(self) -> int:
+        n = self.values.size * self.values.dtype.itemsize
+        for t in (self.super_scales, self.sub_scales, self.sub_mins,
+                  self.super_mins):
+            if t is not None:
+                n += t.size * t.dtype.itemsize
+        return n
+
+
+# ----------------------------------------------------------------------
+# packing helpers
+# ----------------------------------------------------------------------
+
+def pack_nibbles(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack unsigned ints (< 2**bits) along axis 0 into uint8."""
+    per = 8 // bits
+    k, n = v.shape
+    assert k % per == 0
+    v = v.astype(jnp.uint8).reshape(k // per, per, n)
+    out = jnp.zeros((k // per, n), jnp.uint8)
+    for i in range(per):
+        out = out | (v[:, i, :] << (bits * i))
+    return out
+
+
+def unpack_nibbles(p: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_nibbles` -> uint8 in [0, 2**bits)."""
+    per = 8 // bits
+    mask = (1 << bits) - 1
+    parts = [(p >> (bits * i)) & mask for i in range(per)]
+    kp, n = p.shape
+    return jnp.stack(parts, axis=1).reshape(kp * per, n)
+
+
+# ----------------------------------------------------------------------
+# quantizers
+# ----------------------------------------------------------------------
+
+def _blockwise_absmax_scale(w, block, qmax):
+    """Per-(block,n) scale mapping w -> integers in [-qmax, qmax]."""
+    k, n = w.shape
+    wb = w.reshape(k // block, block, n)
+    amax = jnp.max(jnp.abs(wb), axis=1)
+    scale = amax / qmax
+    scale = jnp.where(scale == 0, 1.0, scale)
+    return wb, scale
+
+
+def quantize_q8_0(w: jnp.ndarray) -> QTensor:
+    """Symmetric int8, block 32, one f32 scale per block (ggml Q8_0)."""
+    fmt = get_format("q8_0")
+    wb, scale = _blockwise_absmax_scale(w.astype(jnp.float32), fmt.block, 127.0)
+    q = jnp.clip(jnp.round(wb / scale[:, None, :]), -127, 127).astype(jnp.int8)
+    k, n = w.shape
+    return QTensor(fmt="q8_0", shape=(k, n),
+                   values=q.reshape(k, n),
+                   super_scales=scale.astype(jnp.float32))
+
+
+def _two_level_symmetric(w, fmt, qmax):
+    """Shared machinery for symmetric k-quants (q6_k)."""
+    k, n = w.shape
+    sub = fmt.sub_block
+    w32 = w.astype(jnp.float32)
+    # inner: per-sub-block f32 scale
+    wsb = w32.reshape(k // sub, sub, n)
+    amax = jnp.max(jnp.abs(wsb), axis=1)
+    d_sub = amax / qmax                                  # (k/sub, n)
+    # outer: quantize d_sub itself to int8 against a per-block super scale
+    per = fmt.block // sub
+    d_grp = d_sub.reshape(k // fmt.block, per, n)
+    d_super = jnp.max(d_grp, axis=1) / 127.0             # (k/block, n)
+    d_super = jnp.where(d_super == 0, 1.0, d_super)
+    q_sub = jnp.clip(jnp.round(d_grp / d_super[:, None, :]), 0, 127
+                     ).astype(jnp.int8)                  # (k/block, per, n)
+    # effective dequantized sub scale actually used for value coding:
+    eff = q_sub.astype(jnp.float32) * d_super[:, None, :]
+    eff = jnp.where(eff == 0, 1.0, eff).reshape(k // sub, n)
+    q = jnp.clip(jnp.round(wsb / eff[:, None, :]), -qmax, qmax)
+    return q.reshape(k, n), q_sub.reshape(k // sub, n), d_super
+
+
+def quantize_q6_k(w: jnp.ndarray) -> QTensor:
+    """6-bit symmetric, sub 16 / super 256 (ggml Q6_K algebra)."""
+    fmt = get_format("q6_k")
+    q, q_sub, d_super = _two_level_symmetric(w, fmt, qmax=31.0)
+    k, n = w.shape
+    return QTensor(fmt="q6_k", shape=(k, n),
+                   values=q.astype(jnp.int8),
+                   sub_scales=q_sub,
+                   super_scales=d_super.astype(jnp.float32))
+
+
+def _two_level_asymmetric(w, fmt, qmax, scale_qmax):
+    """Asymmetric k-quants (q4_k, q2_k): value = d*q - m per sub-block."""
+    k, n = w.shape
+    sub = fmt.sub_block
+    w32 = w.astype(jnp.float32)
+    wsb = w32.reshape(k // sub, sub, n)
+    wmin = jnp.min(wsb, axis=1)
+    wmax = jnp.max(wsb, axis=1)
+    m_sub = jnp.maximum(-wmin, 0.0)                      # min offset >= 0
+    d_sub = (wmax + m_sub) / qmax
+    d_sub = jnp.where(d_sub == 0, 1.0, d_sub)
+    per = fmt.block // sub
+    d_grp = d_sub.reshape(k // fmt.block, per, n)
+    m_grp = m_sub.reshape(k // fmt.block, per, n)
+    d_super = jnp.maximum(jnp.max(d_grp, axis=1) / scale_qmax, 1e-12)
+    m_super = jnp.where(jnp.max(m_grp, axis=1) == 0, 1.0,
+                        jnp.max(m_grp, axis=1) / scale_qmax)
+    q_dsub = jnp.clip(jnp.round(d_grp / d_super[:, None, :]), 0, scale_qmax
+                      ).astype(jnp.int8)
+    q_msub = jnp.clip(jnp.round(m_grp / m_super[:, None, :]), 0, scale_qmax
+                      ).astype(jnp.int8)
+    eff_d = q_dsub.astype(jnp.float32) * d_super[:, None, :]
+    eff_d = jnp.where(eff_d == 0, 1.0, eff_d).reshape(k // sub, n)
+    eff_m = (q_msub.astype(jnp.float32) * m_super[:, None, :]
+             ).reshape(k // sub, n)
+    q = jnp.clip(jnp.round((wsb + eff_m[:, None, :]) / eff_d[:, None, :]),
+                 0, qmax)
+    return (q.reshape(k, n), q_dsub.reshape(k // sub, n),
+            q_msub.reshape(k // sub, n), d_super, m_super)
+
+
+def quantize_q4_k(w: jnp.ndarray) -> QTensor:
+    fmt = get_format("q4_k")
+    q, q_d, q_m, d_super, m_super = _two_level_asymmetric(
+        w, fmt, qmax=15.0, scale_qmax=63.0)
+    k, n = w.shape
+    return QTensor(fmt="q4_k", shape=(k, n),
+                   values=pack_nibbles(q.astype(jnp.uint8), 4),
+                   sub_scales=q_d, sub_mins=q_m,
+                   super_scales=d_super.astype(jnp.float32),
+                   super_mins=m_super.astype(jnp.float32))
+
+
+def quantize_q2_k(w: jnp.ndarray) -> QTensor:
+    fmt = get_format("q2_k")
+    q, q_d, q_m, d_super, m_super = _two_level_asymmetric(
+        w, fmt, qmax=3.0, scale_qmax=15.0)
+    k, n = w.shape
+    return QTensor(fmt="q2_k", shape=(k, n),
+                   values=pack_nibbles(q.astype(jnp.uint8), 2),
+                   sub_scales=q_d, sub_mins=q_m,
+                   super_scales=d_super.astype(jnp.float32),
+                   super_mins=m_super.astype(jnp.float32))
+
+
+QUANTIZERS = {
+    "q8_0": quantize_q8_0,
+    "q6_k": quantize_q6_k,
+    "q4_k": quantize_q4_k,
+    "q2_k": quantize_q2_k,
+}
+
+
+def quantize(w: jnp.ndarray, fmt: str) -> QTensor:
+    if w.ndim != 2:
+        raise ValueError(f"quantize expects 2-D [k, n] weights, got {w.shape}")
+    blk = get_format(fmt).block
+    if w.shape[0] % blk:
+        raise ValueError(f"k={w.shape[0]} not a multiple of block {blk}")
+    return QUANTIZERS[fmt](w)
+
+
+# ----------------------------------------------------------------------
+# dequantize (the jnp oracle for the Pallas kernels)
+# ----------------------------------------------------------------------
+
+def dequantize(qt: QTensor) -> jnp.ndarray:
+    k, n = qt.shape
+    fmt = qt.format
+    if qt.fmt == "q8_0":
+        scale = jnp.repeat(qt.super_scales, fmt.block, axis=0)
+        return qt.values.astype(jnp.float32) * scale
+    sub = fmt.sub_block
+    if qt.fmt == "q6_k":
+        d_super = jnp.repeat(qt.super_scales, fmt.block // sub, axis=0)
+        eff = qt.sub_scales.astype(jnp.float32) * d_super
+        eff = jnp.where(eff == 0, 1.0, eff)
+        eff = jnp.repeat(eff, sub, axis=0)
+        return qt.values.astype(jnp.float32) * eff
+    # asymmetric 4/2-bit
+    bits = fmt.bits
+    q = unpack_nibbles(qt.values, bits).astype(jnp.float32)[:k]
+    d_super = jnp.repeat(qt.super_scales, fmt.block // sub, axis=0)
+    m_super = jnp.repeat(qt.super_mins, fmt.block // sub, axis=0)
+    eff_d = qt.sub_scales.astype(jnp.float32) * d_super
+    eff_d = jnp.where(eff_d == 0, 1.0, eff_d)
+    eff_m = qt.sub_mins.astype(jnp.float32) * m_super
+    eff_d = jnp.repeat(eff_d, sub, axis=0)
+    eff_m = jnp.repeat(eff_m, sub, axis=0)
+    return q * eff_d - eff_m
+
+
+def quantization_rmse(w: jnp.ndarray, fmt: str) -> float:
+    """Round-trip RMS error relative to weight RMS (property-test metric)."""
+    qt = quantize(w, fmt)
+    back = dequantize(qt)
+    num = jnp.sqrt(jnp.mean((w.astype(jnp.float32) - back) ** 2))
+    den = jnp.sqrt(jnp.mean(w.astype(jnp.float32) ** 2)) + 1e-12
+    return float(num / den)

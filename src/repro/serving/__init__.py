@@ -1,0 +1,8 @@
+from repro.serving.disaggregation import (FleetPlan, PoolAssignment, Workload,
+                                          homogeneous_baseline, plan_fleet)
+from repro.serving.engine import (Request, ServeEngine, dequantize_params,
+                                  quantize_params)
+
+__all__ = ["FleetPlan", "PoolAssignment", "Workload",
+           "homogeneous_baseline", "plan_fleet", "Request", "ServeEngine",
+           "dequantize_params", "quantize_params"]

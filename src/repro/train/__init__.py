@@ -1,0 +1,4 @@
+from repro.train.train_loop import (TrainConfig, TrainState, init_train_state,
+                                    make_train_step)
+
+__all__ = ["TrainConfig", "TrainState", "init_train_state", "make_train_step"]

@@ -1,0 +1,63 @@
+"""Benchmark harness gates: every module yields rows; every paper-claim
+row PASSes; the CSV contract (name,us_per_call,derived) holds."""
+
+import pytest
+
+
+def _rows(mod):
+    rows = mod.rows()
+    assert rows, mod.__name__
+    for r in rows:
+        assert isinstance(r.name, str) and r.name
+        assert isinstance(r.us_per_call, float)
+    return rows
+
+
+def _claims_pass(rows):
+    claims = [r for r in rows if r.name.startswith("claim_")]
+    assert claims, "no claim rows"
+    for r in claims:
+        assert "FAIL" not in str(r.derived), f"{r.name}: {r.derived}"
+
+
+def test_compute_sweep_claims():
+    from benchmarks import compute_sweep
+    _claims_pass(_rows(compute_sweep))
+
+
+def test_membw_claims():
+    from benchmarks import membw
+    _claims_pass(_rows(membw))
+
+
+def test_llm_prefill_claims():
+    from benchmarks import llm_prefill
+    _claims_pass(_rows(llm_prefill))
+
+
+def test_llm_decode_claims():
+    from benchmarks import llm_decode
+    _claims_pass(_rows(llm_decode))
+
+
+def test_efficiency_claims():
+    from benchmarks import efficiency
+    _claims_pass(_rows(efficiency))
+
+
+def test_cost_model_claims():
+    from benchmarks import cost_model
+    _claims_pass(_rows(cost_model))
+
+
+def test_interconnect_rows():
+    from benchmarks import interconnect
+    _rows(interconnect)
+
+
+def test_hetero_serving_gain():
+    from benchmarks import hetero_serving
+    rows = _rows(hetero_serving)
+    gain_row = [r for r in rows if r.name == "fleet_disaggregation_gain"][0]
+    gain = float(str(gain_row.derived).split("x")[0])
+    assert gain > 1.0, "disaggregation must beat homogeneous fleets"

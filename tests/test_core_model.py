@@ -1,0 +1,149 @@
+"""Core-layer tests: device profiles, path policy, perf model vs the
+paper's stated claims, energy/cost model, HLO collective parser."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core.compute_path import PathPolicy, matmul_descriptor
+from repro.core.device_profile import (A100_40G, CMP_170HX, CMP_170HX_NOFMA,
+                                       TPU_V5E, Path, get_profile)
+from repro.core.energy import estimate_sales
+from repro.core.hlo_analysis import collective_bytes, op_census
+from repro.core.perf_model import InferencePerfModel
+from repro.core.roofline import RooflineTerms, analyze
+
+FMTS = ["f32", "f16", "q8_0", "q6_k", "q4_k", "q2_k"]
+
+
+# ----------------------------------------------------------------------
+# paper claims (the reproduction gate)
+# ----------------------------------------------------------------------
+
+class TestPaperClaims:
+    def test_fp32_recovery_over_15x(self):
+        """Abstract: 'FP32 performance exceeds 15x the original'."""
+        default = CMP_170HX.throughput("f32", Path.FMA)
+        nofma = CMP_170HX_NOFMA.throughput("f32", Path.MUL_ADD)
+        assert nofma / default > 15.0
+        assert abs(default - 0.39) < 0.01      # 1/32 of 12.63
+        assert 0.4 < nofma / 12.63 < 0.6       # ~half of theoretical
+
+    def test_fp16_unaffected_by_fma(self):
+        assert CMP_170HX.throughput("f16", Path.MUL_ADD) == \
+            CMP_170HX_NOFMA.throughput("f16", Path.MUL_ADD)
+
+    def test_fp64_no_recovery(self):
+        """FP64: ~1/32 default, halves again without FMA."""
+        assert CMP_170HX_NOFMA.throughput("f64", Path.MUL_ADD) < \
+            CMP_170HX.throughput("f64", Path.FMA)
+
+    def test_prefill_band_14_45(self):
+        m = InferencePerfModel(CMP_170HX_NOFMA)
+        for fmt in FMTS:
+            frac = (m.prefill(fmt).tokens_per_s
+                    / m.theoretical_prefill_tps(fmt))
+            assert 0.14 <= frac <= 0.45, (fmt, frac)
+
+    def test_decode_bands(self):
+        md = InferencePerfModel(CMP_170HX)
+        mn = InferencePerfModel(CMP_170HX_NOFMA)
+        for fmt in FMTS:
+            fd = md.decode(fmt).tokens_per_s / md.theoretical_decode_tps(fmt)
+            fn = mn.decode(fmt).tokens_per_s / mn.theoretical_decode_tps(fmt)
+            assert 0.35 <= fd <= 0.80, (fmt, fd)   # paper: 39-78%
+            assert 0.50 <= fn <= 0.80, (fmt, fn)   # paper: 50-78%
+
+    def test_q2k_prefill_gain_231pct(self):
+        md = InferencePerfModel(CMP_170HX)
+        mn = InferencePerfModel(CMP_170HX_NOFMA)
+        gains = {f: mn.prefill(f).tokens_per_s / md.prefill(f).tokens_per_s
+                 for f in FMTS}
+        assert max(gains, key=gains.get) == "q2_k"
+        assert 2.0 < gains["q2_k"] < 2.6           # paper: 2.31x
+        assert gains["f32"] == pytest.approx(1.0)
+        assert gains["f16"] == pytest.approx(1.0)
+
+    def test_quantized_gain_ordering(self):
+        """Smaller sub-blocks => more FP32 epilogue => bigger noFMA gain."""
+        md = InferencePerfModel(CMP_170HX)
+        mn = InferencePerfModel(CMP_170HX_NOFMA)
+        g = {f: mn.prefill(f).tokens_per_s / md.prefill(f).tokens_per_s
+             for f in ("q8_0", "q6_k", "q2_k")}
+        assert g["q2_k"] > g["q6_k"] > g["q8_0"] > 1.0
+
+    def test_decode_memory_bound_on_bandwidth_rich(self):
+        m = InferencePerfModel(CMP_170HX)
+        for fmt in ("f32", "f16", "q8_0"):
+            assert m.decode(fmt).bound == "memory"
+
+    def test_efficiency_comparable_to_a100(self):
+        for fmt in ("f32", "f16", "q8_0"):
+            ec = InferencePerfModel(CMP_170HX).decode(fmt).tokens_per_joule
+            ea = InferencePerfModel(A100_40G).decode(fmt).tokens_per_joule
+            assert 0.6 <= ec / ea <= 1.2, (fmt, ec / ea)
+
+    def test_sales_estimates_match_table_1_2(self):
+        assert estimate_sales("A")["total"] == pytest.approx(582714, rel=.01)
+        assert estimate_sales("B")["total"] == pytest.approx(640127, rel=.01)
+        assert estimate_sales("C")["total"] == pytest.approx(463133, rel=.01)
+
+
+# ----------------------------------------------------------------------
+# path policy
+# ----------------------------------------------------------------------
+
+def test_policy_reroutes_on_crippled_sku():
+    desc = matmul_descriptor(512, 512, 4096, "f32")
+    assert PathPolicy(CMP_170HX).decide(desc).variant == "mul_add"
+    assert PathPolicy(TPU_V5E).decide(desc).variant == "fma"
+
+
+def test_policy_force_variant():
+    desc = matmul_descriptor(64, 64, 256, "f32")
+    d = PathPolicy(CMP_170HX, force_variant="fma").decide(desc)
+    assert d.variant == "fma"
+
+
+def test_profile_registry():
+    assert get_profile("cmp-170hx").hbm_capacity_gib == 8.0
+    with pytest.raises(KeyError):
+        get_profile("rtx-5090")
+
+
+# ----------------------------------------------------------------------
+# HLO analysis + roofline
+# ----------------------------------------------------------------------
+
+_HLO_SAMPLE = """
+  %ag = f32[8,128]{1,0} all-gather(f32[1,128]{1,0} %p0), replica_groups={}
+  %ar = bf16[256]{0} all-reduce(bf16[256]{0} %x), to_apply=%add
+  %rs = f32[2,64]{1,0} reduce-scatter(f32[16,64]{1,0} %y), dimensions={0}
+  %a2a = f32[4,32]{1,0} all-to-all(f32[4,32]{1,0} %z), dimensions={0}
+  %cp = u8[1024]{0} collective-permute(u8[1024]{0} %w)
+  %d = f32[8,8]{1,0} dot(f32[8,8]{1,0} %a, f32[8,8]{1,0} %b)
+"""
+
+
+def test_collective_bytes_parser():
+    stats = collective_bytes(_HLO_SAMPLE)
+    assert stats.bytes_by_kind["all-gather"] == 8 * 128 * 4
+    assert stats.bytes_by_kind["all-reduce"] == 256 * 2
+    assert stats.bytes_by_kind["reduce-scatter"] == 2 * 64 * 4
+    assert stats.bytes_by_kind["all-to-all"] == 4 * 32 * 4
+    assert stats.bytes_by_kind["collective-permute"] == 1024
+    assert stats.total_count == 5
+    census = op_census(_HLO_SAMPLE)
+    assert census["dot"] == 1
+
+
+def test_roofline_terms():
+    r = analyze(cell="x/y/16x16", chips=256,
+                hlo_flops=1e18, hlo_bytes=1e15, collective_bytes=1e14,
+                model_flops=7e17)
+    # compute: 1e18 / (256 * 197e12) = 19.8ms
+    assert r.t_compute_s == pytest.approx(1e18 / (256 * 197e12))
+    assert r.t_memory_s == pytest.approx(1e15 / (256 * 819e9))
+    assert r.t_collective_s == pytest.approx(1e14 / (256 * 50e9))
+    assert r.dominant == "compute"
+    assert r.useful_flops_ratio == pytest.approx(0.7)
+    assert 0.0 < r.roofline_fraction <= 1.0

@@ -1,0 +1,40 @@
+"""Launcher CLIs end to end (subprocess, CPU, smoke configs)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_train_launcher_with_resume(tmp_path):
+    ck = str(tmp_path / "ck")
+    out1 = _run(["repro.launch.train", "--arch", "olmo-1b", "--smoke",
+                 "--steps", "12", "--batch", "2", "--seq", "64",
+                 "--ckpt-dir", ck, "--ckpt-every", "6", "--log-every", "6"])
+    assert "done" in out1
+    out2 = _run(["repro.launch.train", "--arch", "olmo-1b", "--smoke",
+                 "--steps", "16", "--batch", "2", "--seq", "64",
+                 "--ckpt-dir", ck, "--ckpt-every", "8", "--log-every", "4"])
+    assert "resumed from step 12" in out2
+
+
+@pytest.mark.slow
+def test_serve_launcher_quantized():
+    out = _run(["repro.launch.serve", "--arch", "qwen2.5-1.5b", "--smoke",
+                "--quant", "q8_0", "--requests", "2", "--prompt-len", "8",
+                "--gen", "4", "--lanes", "2"])
+    assert "served 2 requests" in out
+    assert "capability-model prediction" in out

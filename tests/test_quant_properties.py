@@ -1,0 +1,77 @@
+"""Hypothesis property tests for the quantization layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (bits_per_weight, dequantize, pack_nibbles,
+                         quantization_rmse, quantize, unpack_nibbles)
+
+FMTS = ["q8_0", "q6_k", "q4_k", "q2_k"]
+
+# relative RMS error ceilings per format (random normal weights)
+ERROR_BOUND = {"q8_0": 0.02, "q6_k": 0.06, "q4_k": 0.15, "q2_k": 0.45}
+
+
+@st.composite
+def weight_matrices(draw):
+    k = draw(st.sampled_from([256, 512, 768]))
+    n = draw(st.sampled_from([8, 32, 64]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(1e-3, 1e3))
+    w = np.random.default_rng(seed).normal(size=(k, n)) * scale
+    return jnp.asarray(w, jnp.float32)
+
+
+@given(weight_matrices(), st.sampled_from(FMTS))
+@settings(max_examples=20, deadline=None)
+def test_roundtrip_error_bounded(w, fmt):
+    assert quantization_rmse(w, fmt) < ERROR_BOUND[fmt]
+
+
+@given(weight_matrices(), st.sampled_from(FMTS))
+@settings(max_examples=10, deadline=None)
+def test_scale_invariance(w, fmt):
+    """Quantization error is (nearly) scale-invariant: rel error of 2w
+    matches rel error of w."""
+    e1 = quantization_rmse(w, fmt)
+    e2 = quantization_rmse(w * 2.0, fmt)
+    assert abs(e1 - e2) < 0.05
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4]))
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_roundtrip(seed, bits):
+    rng = np.random.default_rng(seed)
+    k = 64 * (8 // bits)
+    v = jnp.asarray(rng.integers(0, 2**bits, size=(k, 16)), jnp.uint8)
+    assert jnp.array_equal(unpack_nibbles(pack_nibbles(v, bits), bits), v)
+
+
+@given(st.sampled_from(FMTS))
+@settings(max_examples=8, deadline=None)
+def test_compression_ratio_matches_bpw(fmt):
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(1024, 64)),
+                    jnp.float32)
+    qt = quantize(w, fmt)
+    actual_bpw = qt.nbytes() * 8.0 / w.size
+    from repro.quant.formats import get_format
+    assert abs(actual_bpw - get_format(fmt).bpw_tpu) < 0.7
+
+
+def test_zero_and_constant_weights():
+    """Degenerate inputs must not produce NaN/inf."""
+    for fmt in FMTS:
+        for w in (jnp.zeros((256, 8)), jnp.full((256, 8), 3.14),
+                  jnp.full((256, 8), -1e-30)):
+            back = dequantize(quantize(w, fmt))
+            assert bool(jnp.all(jnp.isfinite(back))), fmt
+
+
+def test_bpw_table():
+    assert bits_per_weight("q8_0") == 8.5
+    assert bits_per_weight("q6_k") == 6.5625
+    assert bits_per_weight("q4_k") == 4.5
+    assert abs(bits_per_weight("q2_k") - 2.625) < 1e-9
+    assert bits_per_weight("f16") == 16.0
