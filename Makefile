@@ -1,0 +1,19 @@
+# Test tiers.
+#
+# `make test` is the tier-1 verify command from ROADMAP.md (the bar every
+# PR must hold).  `make test-fast` is the quick inner loop: it skips the
+# @pytest.mark.slow subprocess/end-to-end tests (~7 min of the full run)
+# so a fleet-sim or model change gets feedback in seconds, not minutes.
+
+PYTEST := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest
+
+.PHONY: test test-fast bench
+
+test:
+	$(PYTEST) -x -q
+
+test-fast:
+	$(PYTEST) -q -m "not slow"
+
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m benchmarks.run

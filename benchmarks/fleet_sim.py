@@ -1,0 +1,65 @@
+"""Beyond-paper: trace-driven fleet simulation (SS6.2 made dynamic).
+
+Replays one seeded bursty trace against the planner's disaggregated
+mixed fleet (2xA100 prefill + 8x CMP-170HX-noFMA decode) and both
+homogeneous same-hardware baselines, reporting tail latency, power and
+$/Mtok -- the dimensions the static planner cannot see.  A final row
+cross-checks the simulator's steady state against ``plan_fleet`` on a
+constant-rate trace (the two share one phase model, so they must
+agree).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.fleet import (FleetSim, LengthDist, NodeSpec, bursty_trace,
+                         constant_trace, fleet_from_plan)
+from repro.serving import Workload, plan_fleet
+
+WL = Workload(prompt_len=512, gen_len=128, fmt="q8_0")
+SLO = dict(ttft_slo_s=2.0, tpot_slo_s=0.05)
+LANES = 4
+
+
+def _sim_row(tag: str, report) -> Row:
+    return Row(f"fleet_sim[{tag}]", 0.0,
+               f"goodput={report.goodput_rps:.2f}req/s "
+               f"ttft_p50={report.ttft_p50_s * 1e3:.0f}ms "
+               f"ttft_p99={report.ttft_p99_s * 1e3:.0f}ms "
+               f"tpot_p99={report.tpot_p99_s * 1e3:.2f}ms "
+               f"watts={report.avg_watts:.0f} "
+               f"$per_mtok={report.usd_per_mtok:.3f}")
+
+
+def rows() -> List[Row]:
+    out: List[Row] = []
+    plan = plan_fleet({"a100-40g": 2, "cmp-170hx-nofma": 8}, WL)
+    trace = bursty_trace(rate_on_rps=60.0, duration_s=120.0, seed=0,
+                         prompt=LengthDist(WL.prompt_len),
+                         gen=LengthDist(WL.gen_len))
+
+    mixed = FleetSim(fleet_from_plan(plan, decode_lanes=LANES), trace,
+                     fmt=WL.fmt, **SLO).run()
+    homo_a = FleetSim([NodeSpec("a100-40g", 2, "both", LANES)], trace,
+                      fmt=WL.fmt, **SLO).run()
+    homo_c = FleetSim([NodeSpec("cmp-170hx-nofma", 8, "both", LANES)],
+                      trace, fmt=WL.fmt, **SLO).run()
+    out.append(_sim_row("bursty_mixed_2xA100+8xCMP", mixed))
+    out.append(_sim_row("bursty_homog_2xA100", homo_a))
+    out.append(_sim_row("bursty_homog_8xCMP", homo_c))
+    gain = mixed.goodput_rps / max(homo_a.goodput_rps, homo_c.goodput_rps)
+    out.append(Row("fleet_sim_goodput_gain", 0.0,
+                   f"{gain:.2f}x_vs_best_homogeneous"))
+
+    steady = FleetSim(
+        fleet_from_plan(plan),
+        constant_trace(plan.requests_per_s * 1.2, 60.0,
+                       WL.prompt_len, WL.gen_len),
+        fmt=WL.fmt).run()
+    out.append(Row("fleet_sim_vs_planner", 0.0,
+                   f"sim={steady.requests_per_s:.2f}req/s "
+                   f"plan={plan.requests_per_s:.2f}req/s "
+                   f"ratio={steady.requests_per_s / plan.requests_per_s:.3f}"))
+    return out

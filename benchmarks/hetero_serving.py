@@ -2,7 +2,10 @@
 
 Plans a mixed fleet (A100s for compute-bound prefill, reclaimed CMP
 boards for bandwidth-bound decode) and compares requests/s and $/Mtok
-against homogeneous fleets of the same hardware budget.
+against homogeneous fleets of the same hardware budget.  Each analytic
+row is paired with a simulator-derived latency row (`repro.fleet` on a
+near-capacity Poisson trace): the planner says what the fleet
+sustains, the simulator says what a request *feels*.
 """
 
 from __future__ import annotations
@@ -10,8 +13,24 @@ from __future__ import annotations
 from typing import List
 
 from benchmarks.common import Row
-from repro.serving.disaggregation import (Workload, homogeneous_baseline,
-                                          plan_fleet)
+from repro.fleet import FleetSim, LengthDist, fleet_from_plan, poisson_trace
+from repro.serving.disaggregation import (FleetPlan, Workload,
+                                          homogeneous_baseline, plan_fleet)
+
+
+def _sim_latency_row(tag: str, plan: FleetPlan, wl: Workload) -> Row:
+    """TTFT/TPOT tails of this plan's fleet at 80% of planned capacity."""
+    trace = poisson_trace(rate_rps=0.8 * plan.requests_per_s,
+                          duration_s=60.0, seed=0,
+                          prompt=LengthDist(wl.prompt_len),
+                          gen=LengthDist(wl.gen_len))
+    rep = FleetSim(fleet_from_plan(plan, decode_lanes=4), trace,
+                   fmt=wl.fmt).run()
+    return Row(f"fleet_latency[{tag}]", 0.0,
+               f"ttft_p50={rep.ttft_p50_s * 1e3:.0f}ms "
+               f"ttft_p99={rep.ttft_p99_s * 1e3:.0f}ms "
+               f"tpot_p99={rep.tpot_p99_s * 1e3:.2f}ms "
+               f"sim_{rep.requests_per_s:.2f}req/s")
 
 
 def rows() -> List[Row]:
@@ -23,14 +42,17 @@ def rows() -> List[Row]:
                    f"${mixed.usd_per_mtok:.3f}/Mtok roles="
                    + ",".join(f"{a.profile}:{a.role}"
                               for a in mixed.assignments)))
+    out.append(_sim_latency_row("mixed_2xA100+8xCMP", mixed, wl))
     homo_a = homogeneous_baseline("a100-40g", 2, wl)
     homo_c = homogeneous_baseline("cmp-170hx-nofma", 8, wl)
     out.append(Row("fleet[homog_2xA100]", 0.0,
                    f"{homo_a.requests_per_s:.2f}req/s "
                    f"${homo_a.usd_per_mtok:.3f}/Mtok"))
+    out.append(_sim_latency_row("homog_2xA100", homo_a, wl))
     out.append(Row("fleet[homog_8xCMP]", 0.0,
                    f"{homo_c.requests_per_s:.2f}req/s "
                    f"${homo_c.usd_per_mtok:.3f}/Mtok"))
+    out.append(_sim_latency_row("homog_8xCMP", homo_c, wl))
     gain = mixed.requests_per_s / max(homo_a.requests_per_s,
                                       homo_c.requests_per_s)
     out.append(Row("fleet_disaggregation_gain", 0.0,

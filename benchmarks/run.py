@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   efficiency     -> Graph 4-3 (tokens/W)
   cost_model     -> Tables 1-1/1-2 (fleet economics)
   hetero_serving -> SS6.2 operationalized (beyond paper)
+  fleet_sim      -> SS6.2 made dynamic (trace-driven fleet simulator)
   qkernels       -> kernel micro-benchmarks (Pallas artifacts)
 """
 
@@ -20,11 +21,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (compute_sweep, cost_model, efficiency,
+    from benchmarks import (compute_sweep, cost_model, efficiency, fleet_sim,
                             hetero_serving, interconnect, llm_decode,
                             llm_prefill, membw, qkernels)
     modules = [compute_sweep, membw, interconnect, llm_prefill, llm_decode,
-               efficiency, cost_model, hetero_serving, qkernels]
+               efficiency, cost_model, hetero_serving, fleet_sim, qkernels]
     print("name,us_per_call,derived")
     failures = 0
     for mod in modules:

@@ -1,0 +1,69 @@
+"""Trace-driven fleet simulation demo: SS6.2 with queues and bursts.
+
+Simulates a bursty day of traffic against the planner's disaggregated
+mixed fleet (A100 prefill + reclaimed CMP 170HX decode) and its
+homogeneous baselines, then lets a queue-depth autoscaler grow the CMP
+decode pool through a diurnal rush -- the dynamics the static planner
+(`examples/hetero_fleet.py`) cannot show.
+
+Run:  PYTHONPATH=src python examples/fleet_sim_demo.py
+"""
+
+from repro.fleet import (FleetSim, NodeSpec, QueueDepthAutoscaler,
+                         bursty_trace, diurnal_trace, fleet_from_plan)
+from repro.serving import Workload, plan_fleet
+
+WL = Workload(prompt_len=512, gen_len=128, fmt="q8_0")
+SLO = dict(ttft_slo_s=2.0, tpot_slo_s=0.05)
+LANES = 4
+
+
+def show(tag, rep):
+    print(f"  {tag:26s} goodput={rep.goodput_rps:6.2f} req/s  "
+          f"ttft p50/p99={rep.ttft_p50_s * 1e3:6.0f}/"
+          f"{rep.ttft_p99_s * 1e3:6.0f} ms  "
+          f"tpot p99={rep.tpot_p99_s * 1e3:5.2f} ms  "
+          f"{rep.avg_watts:5.0f} W  ${rep.usd_per_mtok:6.3f}/Mtok")
+
+
+def main():
+    plan = plan_fleet({"a100-40g": 2, "cmp-170hx-nofma": 8}, WL)
+    roles = ", ".join(f"{a.count}x{a.profile}->{a.role}"
+                      for a in plan.assignments)
+    print(f"planner roles: [{roles}]  "
+          f"steady-state {plan.requests_per_s:.2f} req/s\n")
+
+    trace = bursty_trace(rate_on_rps=60.0, duration_s=120.0, seed=0)
+    print(f"bursty trace: {len(trace)} requests over 120 s "
+          f"(ON/OFF Poisson, seed 0)")
+    show("mixed 2xA100+8xCMP", FleetSim(
+        fleet_from_plan(plan, decode_lanes=LANES), trace,
+        fmt=WL.fmt, **SLO).run())
+    show("homogeneous 2xA100", FleetSim(
+        [NodeSpec("a100-40g", 2, "both", LANES)], trace,
+        fmt=WL.fmt, **SLO).run())
+    show("homogeneous 8xCMP", FleetSim(
+        [NodeSpec("cmp-170hx-nofma", 8, "both", LANES)], trace,
+        fmt=WL.fmt, **SLO).run())
+
+    print("\ndiurnal rush with a queue-depth autoscaler over the CMP pool:")
+    rush = diurnal_trace(base_rps=5.0, peak_rps=60.0, duration_s=240.0,
+                         seed=3, period_s=240.0)
+    base = [NodeSpec("a100-40g", 2, "prefill", 1),
+            NodeSpec("cmp-170hx-nofma", 2, "decode", LANES)]
+    asc = QueueDepthAutoscaler(
+        template=NodeSpec("cmp-170hx-nofma", 1, "decode", LANES),
+        interval_s=10.0, min_nodes=2, max_nodes=16, cold_start_s=15.0)
+    show("fixed 2xCMP decode", FleetSim(base, rush, fmt=WL.fmt,
+                                        **SLO).run())
+    scaled = FleetSim(base, rush, fmt=WL.fmt, autoscaler=asc, **SLO)
+    show("autoscaled CMP decode", scaled.run())
+    for ev in scaled.scale_events:
+        print(f"    scale: {ev}")
+    print("\nreading: burst tails, not steady-state throughput, are where "
+          "the\ndisaggregated reclaimed-board fleet earns its keep -- and "
+          "where the\nqueue-depth autoscaler absorbs the rush.")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,19 @@ from repro.core.device_profile import DeviceProfile, get_profile
 from repro.core.perf_model import InferencePerfModel, LLMSpec, QWEN25_1P5B
 
 
+def capex_usd_per_hour(profile: DeviceProfile,
+                       amortization_years: float = 3.0) -> float:
+    """Board price amortized to $/hour (0 when no ASP is known)."""
+    if not profile.asp_usd:
+        return 0.0
+    return profile.asp_usd / (amortization_years * 365 * 24)
+
+
+def energy_usd_per_hour(watts: float,
+                        power_usd_per_kwh: float = 0.10) -> float:
+    return watts / 1000.0 * power_usd_per_kwh
+
+
 @dataclasses.dataclass(frozen=True)
 class EfficiencyReport:
     profile: str
@@ -40,9 +53,8 @@ def efficiency(profile: DeviceProfile, fmt: str, phase: str = "decode",
     tokens_per_usd_hour = None
     usd_per_mtok = None
     if profile.asp_usd is not None:
-        capex_per_hour = profile.asp_usd / (amortization_years * 365 * 24)
-        opex_per_hour = est.watts / 1000.0 * power_usd_per_kwh
-        usd_hour = capex_per_hour + opex_per_hour
+        usd_hour = (capex_usd_per_hour(profile, amortization_years)
+                    + energy_usd_per_hour(est.watts, power_usd_per_kwh))
         tokens_per_usd_hour = est.tokens_per_s * 3600.0 / usd_hour
         usd_per_mtok = 1e6 / tokens_per_usd_hour
     return EfficiencyReport(
@@ -57,6 +69,30 @@ def efficiency_grid(profile_names: Iterable[str], fmts: Iterable[str],
                     phase: str = "decode") -> List[EfficiencyReport]:
     return [efficiency(get_profile(p), f, phase)
             for p in profile_names for f in fmts]
+
+
+def request_energy_joules(profile: DeviceProfile, prompt_len: int,
+                          gen_len: int, fmt: str,
+                          spec: LLMSpec = QWEN25_1P5B,
+                          phase: str = "both") -> float:
+    """Joules to serve one request solo (``phase``: prefill/decode/both).
+
+    The fleet simulator (`repro.fleet.node`) charges each request the
+    solo cost of each phase *on the board that runs it* -- in a
+    disaggregated fleet prefill and decode hit different device
+    profiles.  Batched sharing of the streamed weights shows up in the
+    node-level power integration instead, so the per-request figure
+    stays comparable across load levels.
+    """
+    model = InferencePerfModel(profile, spec)
+    joules = 0.0
+    if phase in ("both", "prefill"):
+        pre = model.prefill(fmt, prompt_len)
+        joules += prompt_len / pre.tokens_per_joule
+    if phase in ("both", "decode"):
+        dec = model.decode(fmt, prompt_len + gen_len // 2)
+        joules += gen_len / dec.tokens_per_joule
+    return joules
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,50 @@
+"""Trace-driven heterogeneous fleet simulation (paper §6.2, dynamic).
+
+Where `repro.serving.disaggregation` plans a mixed fleet's *steady
+state*, this package simulates it *over time*: seeded arrival traces,
+per-node queueing and continuous batching, prefill->decode KV handoffs
+over each board's host link, routing policies, autoscaling, and
+per-request latency/energy/cost accounting.  It is the substrate for
+scheduling / batching / autoscaling experiments on reclaimed-GPU
+fleets.
+
+Quick start::
+
+    from repro.fleet import (FleetSim, LeastLoadedRouter, NodeSpec,
+                             bursty_trace, fleet_from_plan)
+    from repro.serving import Workload, plan_fleet
+
+    wl = Workload(prompt_len=512, gen_len=128, fmt="q8_0")
+    plan = plan_fleet({"a100-40g": 2, "cmp-170hx-nofma": 8}, wl)
+    trace = bursty_trace(rate_on_rps=40.0, duration_s=120.0, seed=0)
+    report = FleetSim(fleet_from_plan(plan), trace, fmt=wl.fmt).run()
+    print(report.ttft_p99_s, report.goodput_rps, report.usd_per_mtok)
+
+Demo: ``PYTHONPATH=src python examples/fleet_sim_demo.py``.
+
+Modules: `workload` (trace generators), `node` (simulated boards),
+`router` (placement policies), `sim` (event loop + metrics),
+`autoscale` (queue-depth pool scaling), `execution` (replay on the
+real `ServeEngine` to validate token accounting).
+"""
+
+from repro.fleet.autoscale import QueueDepthAutoscaler
+from repro.fleet.execution import (ExecutionResult, run_trace_on_engine,
+                                   validate_token_accounting)
+from repro.fleet.node import SimNode
+from repro.fleet.router import (CostAwareRouter, LeastLoadedRouter, Router,
+                                SLOAwareRouter)
+from repro.fleet.sim import (FleetReport, FleetSim, NodeSpec, RequestRecord,
+                             fleet_from_plan)
+from repro.fleet.workload import (FleetRequest, LengthDist, bursty_trace,
+                                  constant_trace, diurnal_trace,
+                                  poisson_trace)
+
+__all__ = [
+    "QueueDepthAutoscaler", "ExecutionResult", "run_trace_on_engine",
+    "validate_token_accounting", "SimNode", "CostAwareRouter",
+    "LeastLoadedRouter", "Router", "SLOAwareRouter", "FleetReport",
+    "FleetSim", "NodeSpec", "RequestRecord", "fleet_from_plan",
+    "FleetRequest", "LengthDist", "bursty_trace", "constant_trace",
+    "diurnal_trace", "poisson_trace",
+]

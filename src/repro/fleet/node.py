@@ -1,0 +1,273 @@
+"""A simulated serving node: one board, one role, one queue discipline.
+
+A :class:`SimNode` wraps a :class:`~repro.core.device_profile.DeviceProfile`
+through the :class:`~repro.core.perf_model.InferencePerfModel` and turns
+its per-phase estimates into *service processes*:
+
+* **prefill** -- a serial FIFO executor (compute-bound; batching prompts
+  past saturation buys nothing on these boards).  A request occupies the
+  node for ``prompt/tps`` of compute plus, when the KV must ship to
+  another board, the interconnect handoff -- the same charge the static
+  planner's ``effective_prefill_tps`` makes.
+* **decode** -- lane-limited continuous batching modeled as processor
+  sharing with a roofline step time: with ``B`` active lanes the node
+  emits one token per lane every ``max(B*t_compute, t_weights +
+  sum(t_kv_i))`` seconds -- weights stream once per step (shared),
+  per-lane KV and MACs do not.  At ``B=1`` this reduces exactly to the
+  planner's batch-1 decode estimate, which is what keeps the simulator
+  and ``plan_fleet`` in steady-state agreement.
+
+A ``role="both"`` node time-slices 50/50 between the phases (both rates
+halved), mirroring the planner's seed split.
+
+Energy: the node integrates board power over simulated time (idle floor
+plus dynamic power scaled by instantaneous occupancy); each request is
+additionally charged its solo-cost joules via
+:func:`repro.core.energy.request_energy_joules`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Deque, Dict, List, Optional
+
+from collections import deque
+
+from repro.core.device_profile import DeviceProfile
+from repro.core.energy import request_energy_joules
+from repro.core.perf_model import InferencePerfModel, LLMSpec, QWEN25_1P5B
+from repro.serving.phase_model import kv_handoff_seconds
+
+
+def _bucket(n: int, step: int = 32) -> int:
+    """Round a length to a cache bucket (exact for multiples of step)."""
+    return max(step, int(round(n / step)) * step)
+
+
+#: token-count slack for "generation finished" -- absorbs float drift in
+#: the processor-sharing integration so completion events cannot
+#: reschedule themselves with ~1e-16 token progress (a livelock).
+_DONE_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class DecodeSlot:
+    """One request resident in the decode batch."""
+
+    uid: int
+    gen_len: int
+    t_comp_s: float          # per-step MAC+epilogue time for this context
+    t_kv_s: float            # per-step KV streaming time for this context
+    dyn_j_per_tok: float     # dynamic (above-idle) joules per token
+    tokens_done: float = 0.0
+    t_first_token: Optional[float] = None
+
+
+class SimNode:
+    """One simulated board with a role and queues (see module docstring)."""
+
+    def __init__(self, node_id: str, profile: DeviceProfile, role: str,
+                 fmt: str, spec: LLMSpec = QWEN25_1P5B,
+                 decode_lanes: int = 1):
+        assert role in ("prefill", "decode", "both"), role
+        self.node_id = node_id
+        self.profile = profile
+        self.role = role
+        self.fmt = fmt
+        self.spec = spec
+        self.decode_lanes = decode_lanes
+        self._model = InferencePerfModel(profile, spec)
+        self._split = 0.5 if role == "both" else 1.0
+        self._idle_w = InferencePerfModel.IDLE_FRACTION * profile.tdp_watts
+        # caches keyed by bucketed length/context
+        self._prefill_cache: Dict[int, tuple] = {}
+        self._decode_cache: Dict[int, tuple] = {}
+        self._req_energy_cache: Dict[tuple, float] = {}
+        self._t_weights = 0.0    # per-step weight-stream time (ctx-free)
+        # prefill FIFO state
+        self.prefill_queue: Deque = deque()
+        self.prefill_active: Optional[object] = None
+        # True through compute AND the KV-handoff occupancy window --
+        # the next queued request must not start until the KV has left
+        self.prefill_busy = False
+        self._prefill_backlog_s = 0.0
+        self._backlog_asof = 0.0
+        # decode processor-sharing state
+        self.decode_active: Dict[int, DecodeSlot] = {}
+        self.decode_queue: Deque[DecodeSlot] = deque()
+        self._decode_last_t = 0.0
+        self.decode_version = 0   # invalidates stale scheduled events
+        # fleet membership (set by the sim / autoscaler)
+        self.draining = False
+        self.available_at = 0.0   # cold-start: unroutable before this
+        self.inbound_inflight = 0  # KV transfers en route to this node
+        # accounting
+        self.energy_active_j = 0.0   # above-idle joules
+        self.prefill_busy_s = 0.0
+        self.tokens_prefilled = 0
+        self.tokens_decoded = 0
+
+    # ------------------------------------------------------------------
+    # phase-estimate caches
+    # ------------------------------------------------------------------
+    def _prefill_est(self, prompt_len: int):
+        key = _bucket(prompt_len)
+        if key not in self._prefill_cache:
+            est = self._model.prefill(self.fmt, key)
+            self._prefill_cache[key] = (est.tokens_per_s, est.watts)
+        return self._prefill_cache[key]
+
+    def _decode_parts(self, context: int):
+        """(t_compute, t_weights, t_kv, dyn_j_per_tok) per decode step."""
+        key = _bucket(context)
+        if key not in self._decode_cache:
+            est0 = self._model.decode(self.fmt, context=0)
+            est = self._model.decode(self.fmt, context=key)
+            t_comp = est.t_mac_s + est.t_epilogue_s
+            t_w = est0.t_memory_s
+            t_kv = est.t_memory_s - t_w
+            step1 = max(t_comp, t_w + t_kv)
+            dyn_j = max(est.watts - self._idle_w, 0.0) * step1
+            self._t_weights = t_w
+            self._decode_cache[key] = (t_comp, t_w, t_kv, dyn_j)
+        return self._decode_cache[key]
+
+    def request_energy_j(self, prompt_len: int, gen_len: int,
+                         phase: str) -> float:
+        """Solo-cost joules of running ``phase`` of a request here."""
+        key = (prompt_len, gen_len, phase)
+        if key not in self._req_energy_cache:
+            self._req_energy_cache[key] = request_energy_joules(
+                self.profile, prompt_len, gen_len, self.fmt, self.spec,
+                phase=phase)
+        return self._req_energy_cache[key]
+
+    # ------------------------------------------------------------------
+    # prefill: serial FIFO
+    # ------------------------------------------------------------------
+    def prefill_service_s(self, prompt_len: int) -> float:
+        tps, _ = self._prefill_est(prompt_len)
+        return prompt_len / (tps * self._split)
+
+    def prefill_handoff_s(self, prompt_len: int,
+                          peer: Optional[DeviceProfile] = None) -> float:
+        return kv_handoff_seconds(self.profile, prompt_len, self.spec,
+                                  peer=peer)
+
+    def est_prefill_wait_s(self, now: float) -> float:
+        """Backlog ahead of a newly routed request (router's estimate)."""
+        wait = max(self._prefill_backlog_s - (now - self._backlog_asof), 0.0)
+        return wait
+
+    def note_prefill_routed(self, record, now: float) -> None:
+        """Track virtual backlog so routers see in-flight commitments."""
+        svc = self.prefill_service_s(record.req.prompt_len)
+        hand = self.prefill_handoff_s(record.req.prompt_len)
+        self._prefill_backlog_s = (self.est_prefill_wait_s(now)
+                                   + svc + hand)
+        self._backlog_asof = now
+
+    def start_prefill(self, record, now: float) -> float:
+        """Begin compute for ``record``; returns the compute-done time."""
+        svc = self.prefill_service_s(record.req.prompt_len)
+        _, watts = self._prefill_est(record.req.prompt_len)
+        self.prefill_active = record
+        self.prefill_busy = True
+        self.prefill_busy_s += svc
+        self.energy_active_j += max(watts - self._idle_w, 0.0) * svc
+        self.tokens_prefilled += record.req.prompt_len
+        return now + svc
+
+    # ------------------------------------------------------------------
+    # decode: lane-limited processor sharing
+    # ------------------------------------------------------------------
+    def _step_time_s(self) -> float:
+        """Current per-token step time shared by all active lanes.
+
+        Per-lane MACs and KV reads accumulate across the batch; the
+        weight stream is paid once per step (the continuous-batching
+        bandwidth saving).
+        """
+        if not self.decode_active:
+            return 0.0
+        comp_sum = sum(s.t_comp_s for s in self.decode_active.values())
+        kv_sum = sum(s.t_kv_s for s in self.decode_active.values())
+        return max(comp_sum, self._t_weights + kv_sum) / self._split
+
+    def decode_load(self) -> int:
+        return len(self.decode_active) + len(self.decode_queue)
+
+    def est_decode_step_s(self, context: int, extra: int = 1) -> float:
+        """Predicted step time if ``extra`` more such lanes were active."""
+        t_comp, t_w, t_kv, _ = self._decode_parts(context)
+        comp_sum = sum(s.t_comp_s for s in self.decode_active.values())
+        kv_sum = sum(s.t_kv_s for s in self.decode_active.values())
+        comp_sum += extra * t_comp
+        kv_sum += extra * t_kv
+        return max(comp_sum, t_w + kv_sum) / self._split
+
+    def make_slot(self, uid: int, prompt_len: int,
+                  gen_len: int) -> DecodeSlot:
+        context = prompt_len + gen_len // 2
+        t_comp, t_w, t_kv, dyn_j = self._decode_parts(context)
+        return DecodeSlot(uid=uid, gen_len=gen_len, t_comp_s=t_comp,
+                          t_kv_s=t_kv, dyn_j_per_tok=dyn_j)
+
+    def decode_admit(self, slot: DecodeSlot, now: float) -> bool:
+        """Returns True if the slot went active (else queued)."""
+        self.decode_advance(now)
+        if len(self.decode_active) < self.decode_lanes:
+            self.decode_active[slot.uid] = slot
+            self.decode_version += 1
+            return True
+        self.decode_queue.append(slot)
+        return False
+
+    def decode_advance(self, now: float) -> List[DecodeSlot]:
+        """Progress active lanes to ``now``; returns newly finished slots."""
+        dt = now - self._decode_last_t
+        if dt <= 0 or not self.decode_active:
+            self._decode_last_t = max(self._decode_last_t, now)
+            return []
+        step = self._step_time_s()
+        rate = 1.0 / step
+        finished: List[DecodeSlot] = []
+        for slot in self.decode_active.values():
+            before = slot.tokens_done
+            slot.tokens_done = min(before + rate * dt, float(slot.gen_len))
+            advanced = slot.tokens_done - before
+            if slot.t_first_token is None and slot.tokens_done >= 1.0:
+                slot.t_first_token = (self._decode_last_t
+                                      + (1.0 - before) * step)
+            self.energy_active_j += slot.dyn_j_per_tok * advanced
+            self.tokens_decoded += advanced
+            if slot.tokens_done >= slot.gen_len - _DONE_EPS:
+                slot.tokens_done = float(slot.gen_len)
+                finished.append(slot)
+        for slot in finished:
+            del self.decode_active[slot.uid]
+        while (self.decode_queue
+               and len(self.decode_active) < self.decode_lanes):
+            nxt = self.decode_queue.popleft()
+            self.decode_active[nxt.uid] = nxt
+        if finished:
+            self.decode_version += 1
+        self._decode_last_t = now
+        return finished
+
+    def decode_next_event_s(self, now: float) -> Optional[float]:
+        """Absolute time of the next lane completion (None if idle)."""
+        if not self.decode_active:
+            return None
+        step = self._step_time_s()
+        remaining = min(slot.gen_len - slot.tokens_done
+                        for slot in self.decode_active.values())
+        return now + max(remaining, 0.0) * step
+
+    # ------------------------------------------------------------------
+    def idle_energy_j(self, duration_s: float) -> float:
+        return self._idle_w * duration_s
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"SimNode({self.node_id}, {self.profile.name}, "
+                f"role={self.role})")

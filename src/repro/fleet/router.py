@@ -1,0 +1,141 @@
+"""Request routing policies over a heterogeneous node set.
+
+The router makes two decisions per request: which node prefills it
+(chosen at arrival) and which node decodes it (chosen when the KV is
+ready, so the decision sees current decode load).  The prefill->decode
+KV handoff cost -- the CMP 170HX's defining constraint, a PCIe 1.1 x4
+link (~1 GB/s) -- is computed from the *bottleneck* endpoint via
+``phase_model.kv_handoff_seconds`` and charged both to the prefill
+board's occupancy and to the request's time-to-first-token.
+
+Policies:
+
+* :class:`LeastLoadedRouter` -- shortest backlog / fewest resident
+  requests.  The throughput-oriented default.
+* :class:`CostAwareRouter`   -- least incremental $ per useful token:
+  prefers cheap reclaimed boards until their queues erase the price
+  advantage.
+* :class:`SLOAwareRouter`    -- minimizes predicted TTFT (prefill) and
+  avoids nodes whose post-admission step time would breach the TPOT
+  SLO (decode); falls back to least-loaded among violators.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.fleet.node import SimNode
+from repro.serving.phase_model import capex_usd_per_hour, energy_usd_per_hour
+
+
+def prefill_candidates(nodes: Sequence[SimNode]) -> List[SimNode]:
+    return [n for n in nodes if n.role in ("prefill", "both")]
+
+
+def decode_candidates(nodes: Sequence[SimNode]) -> List[SimNode]:
+    return [n for n in nodes if n.role in ("decode", "both")]
+
+
+class Router:
+    """Base policy; subclasses override the two scoring hooks."""
+
+    name = "base"
+
+    def route_prefill(self, record, nodes: Sequence[SimNode],
+                      now: float) -> SimNode:
+        cands = prefill_candidates(nodes)
+        assert cands, "no prefill-capable node in the fleet"
+        chosen = min(cands, key=lambda n: (self._prefill_score(record, n, now),
+                                           n.node_id))
+        chosen.note_prefill_routed(record, now)
+        return chosen
+
+    def route_decode(self, record, src: SimNode, nodes: Sequence[SimNode],
+                     now: float) -> SimNode:
+        cands = decode_candidates(nodes)
+        assert cands, "no decode-capable node in the fleet"
+        # score ties break toward the prefill board itself: local decode
+        # keeps the KV in HBM and pays no handoff (the planner's
+        # colocated model assumes exactly this)
+        return min(cands, key=lambda n: (self._decode_score(record, src, n,
+                                                            now),
+                                         n is not src, n.node_id))
+
+    # -- scoring hooks (lower wins) ------------------------------------
+    def _prefill_score(self, record, node: SimNode, now: float) -> float:
+        raise NotImplementedError
+
+    def _decode_score(self, record, src: SimNode, node: SimNode,
+                      now: float) -> float:
+        raise NotImplementedError
+
+
+class LeastLoadedRouter(Router):
+    name = "least-loaded"
+
+    def _prefill_score(self, record, node: SimNode, now: float) -> float:
+        return node.est_prefill_wait_s(now)
+
+    def _decode_score(self, record, src: SimNode, node: SimNode,
+                      now: float) -> float:
+        return float(node.decode_load())
+
+
+class CostAwareRouter(Router):
+    """Minimize incremental $/token: (wait + service) x board $/s."""
+
+    name = "cost-aware"
+
+    def __init__(self, amortization_years: float = 3.0,
+                 power_usd_per_kwh: float = 0.10):
+        self.amortization_years = amortization_years
+        self.power_usd_per_kwh = power_usd_per_kwh
+
+    def _usd_per_s(self, node: SimNode) -> float:
+        capex = capex_usd_per_hour(node.profile, self.amortization_years)
+        opex = energy_usd_per_hour(node.profile.tdp_watts,
+                                   self.power_usd_per_kwh)
+        return (capex + opex) / 3600.0
+
+    def _prefill_score(self, record, node: SimNode, now: float) -> float:
+        busy = (node.est_prefill_wait_s(now)
+                + node.prefill_service_s(record.req.prompt_len))
+        return busy * self._usd_per_s(node) / max(record.req.prompt_len, 1)
+
+    def _decode_score(self, record, src: SimNode, node: SimNode,
+                      now: float) -> float:
+        ctx = record.req.prompt_len + record.req.gen_len // 2
+        t_req = (record.req.gen_len
+                 * node.est_decode_step_s(ctx, extra=1 + node.decode_load()
+                                          - len(node.decode_active)))
+        return t_req * self._usd_per_s(node) / max(record.req.gen_len, 1)
+
+
+class SLOAwareRouter(Router):
+    """Route to minimize predicted TTFT / keep TPOT under the SLO."""
+
+    name = "slo-aware"
+
+    def __init__(self, ttft_slo_s: float = 2.0, tpot_slo_s: float = 0.2):
+        self.ttft_slo_s = ttft_slo_s
+        self.tpot_slo_s = tpot_slo_s
+
+    def _prefill_score(self, record, node: SimNode, now: float) -> float:
+        ttft = (node.est_prefill_wait_s(now)
+                + node.prefill_service_s(record.req.prompt_len)
+                + node.prefill_handoff_s(record.req.prompt_len))
+        return ttft
+
+    def _decode_score(self, record, src: SimNode, node: SimNode,
+                      now: float) -> float:
+        ctx = record.req.prompt_len + record.req.gen_len // 2
+        active = len(node.decode_active)
+        queued = node.decode_load() - active
+        # steady-state batch is capped by the lane count: queued work
+        # waits, it does not run concurrently
+        b = min(node.decode_lanes, active + queued + 1)
+        step = node.est_decode_step_s(ctx, extra=max(b - active, 0))
+        # SLO violators sort after every compliant node; among
+        # compliant nodes deeper backlogs (longer queue wait) lose
+        penalty = 1e6 if step > self.tpot_slo_s else 0.0
+        return penalty + step * (1.0 + queued / max(node.decode_lanes, 1))

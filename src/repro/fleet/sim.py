@@ -1,0 +1,342 @@
+"""Deterministic discrete-event simulator of a heterogeneous fleet.
+
+The event loop advances a set of :class:`~repro.fleet.node.SimNode`\\ s
+through a seeded arrival trace under a routing policy:
+
+``arrive`` -> route to a prefill-capable node (FIFO) -> ``prefill_done``
+-> route to a decode-capable node, shipping the KV over the bottleneck
+interconnect -> ``decode_enter`` -> lane-limited continuous batching ->
+completion.  The KV handoff is charged twice, deliberately asymmetric:
+the *source* board's occupancy pays its own-link egress time (exactly
+the static planner's ``effective_prefill_tps`` derating, which keeps
+the two models in steady-state agreement), while the *request's* TTFT
+pays the bottleneck-endpoint transfer time.
+
+Determinism: all randomness lives in the trace generator's seed; events
+are totally ordered by (time, insertion sequence) and all metric math
+is straight float arithmetic -- the same seed yields bit-identical
+reports.
+
+Outputs (:class:`FleetReport`): TTFT/TPOT p50/p99, completed and
+goodput requests/s, generated tokens/s, average watts (idle floor +
+integrated dynamic power), $/hour (amortized capex + energy) and
+$/Mtok.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.device_profile import get_profile
+from repro.core.perf_model import LLMSpec, QWEN25_1P5B
+from repro.fleet.node import SimNode
+from repro.fleet.router import LeastLoadedRouter, Router
+from repro.fleet.workload import FleetRequest
+from repro.serving.disaggregation import FleetPlan
+from repro.serving.phase_model import capex_usd_per_hour, energy_usd_per_hour
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    """A pool of identical boards with one role."""
+
+    profile: str
+    count: int
+    role: str                 # "prefill" | "decode" | "both"
+    decode_lanes: int = 1
+
+
+def fleet_from_plan(plan: FleetPlan, decode_lanes: int = 1) -> List[NodeSpec]:
+    """Node specs realizing a static planner's role assignment."""
+    return [NodeSpec(profile=a.profile, count=a.count, role=a.role,
+                     decode_lanes=decode_lanes)
+            for a in plan.assignments]
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Per-request timeline collected by the simulator."""
+
+    req: FleetRequest
+    prefill_node: Optional[str] = None
+    decode_node: Optional[str] = None
+    t_prefill_start: Optional[float] = None
+    t_prefill_done: Optional[float] = None
+    t_decode_enter: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    energy_j: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first_token - self.req.arrival_s
+
+    @property
+    def tpot_s(self) -> float:
+        if self.req.gen_len <= 1:
+            return 0.0
+        return (self.t_done - self.t_first_token) / (self.req.gen_len - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetReport:
+    """Aggregate metrics of one simulated run."""
+
+    offered: int
+    completed: int
+    makespan_s: float
+    ttft_p50_s: float
+    ttft_p99_s: float
+    tpot_p50_s: float
+    tpot_p99_s: float
+    requests_per_s: float
+    goodput_rps: float
+    gen_tokens_per_s: float
+    avg_watts: float
+    energy_j: float
+    joules_per_request: float   # mean solo-cost attribution (completed)
+    usd_per_hour: float
+    usd_per_mtok: float
+    scale_events: Tuple[str, ...] = ()
+
+    def metrics(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d.pop("scale_events")
+        return d
+
+
+class FleetSim:
+    """Trace-driven simulation of a routed heterogeneous fleet."""
+
+    def __init__(self, specs: Sequence[NodeSpec],
+                 trace: Sequence[FleetRequest], fmt: str = "q8_0",
+                 spec: LLMSpec = QWEN25_1P5B,
+                 router: Optional[Router] = None,
+                 ttft_slo_s: Optional[float] = None,
+                 tpot_slo_s: Optional[float] = None,
+                 power_usd_per_kwh: float = 0.10,
+                 amortization_years: float = 3.0,
+                 autoscaler=None):
+        self.fmt = fmt
+        self.spec = spec
+        self.router = router or LeastLoadedRouter()
+        self.ttft_slo_s = ttft_slo_s
+        self.tpot_slo_s = tpot_slo_s
+        self.power_usd_per_kwh = power_usd_per_kwh
+        self.amortization_years = amortization_years
+        self.autoscaler = autoscaler
+        self.nodes: List[SimNode] = []
+        self.retired: List[SimNode] = []
+        self._node_seq = 0
+        self._added_at: Dict[str, float] = {}
+        self._retired_at: Dict[str, float] = {}
+        for ns in specs:
+            for _ in range(ns.count):
+                self.add_node(ns, now=0.0)
+        self.records = [RequestRecord(req=r) for r in trace]
+        self._slot_rec: Dict[Tuple[str, int], RequestRecord] = {}
+        self.scale_events: List[str] = []
+        self._heap: List[tuple] = []
+        self._seq = 0
+
+    # -- fleet mutation (autoscaler hooks) -----------------------------
+    def add_node(self, ns: NodeSpec, now: float) -> SimNode:
+        node = SimNode(node_id=f"{ns.profile}/{ns.role}#{self._node_seq}",
+                       profile=get_profile(ns.profile), role=ns.role,
+                       fmt=self.fmt, spec=self.spec,
+                       decode_lanes=ns.decode_lanes)
+        self._node_seq += 1
+        node.available_at = now
+        self.nodes.append(node)
+        self._added_at[node.node_id] = now
+        return node
+
+    def retire_node(self, node: SimNode, now: float) -> None:
+        """Stop routing to ``node``; it leaves once its work drains."""
+        node.draining = True
+        self._maybe_reap(node, now)
+
+    def _maybe_reap(self, node: SimNode, now: float) -> None:
+        busy = (node.prefill_busy or node.prefill_queue
+                or node.decode_active or node.decode_queue
+                or node.inbound_inflight)
+        if node.draining and not busy and node in self.nodes:
+            self.nodes.remove(node)
+            self.retired.append(node)
+            self._retired_at[node.node_id] = now
+
+    def _routable(self, now: float) -> List[SimNode]:
+        return [n for n in self.nodes
+                if not n.draining and n.available_at <= now]
+
+    # -- event plumbing -------------------------------------------------
+    def _push(self, t: float, kind: str, payload) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+
+    def _schedule_decode(self, node: SimNode, now: float) -> None:
+        t = node.decode_next_event_s(now)
+        if t is not None:
+            self._push(t, "decode", (node, node.decode_version))
+
+    # -- event handlers -------------------------------------------------
+    def _on_arrive(self, rec: RequestRecord, now: float) -> None:
+        node = self.router.route_prefill(rec, self._routable(now), now)
+        rec.prefill_node = node.node_id
+        if not node.prefill_busy and not node.prefill_queue:
+            self._start_prefill(node, rec, now)
+        else:
+            node.prefill_queue.append(rec)
+
+    def _start_prefill(self, node: SimNode, rec: RequestRecord,
+                       now: float) -> None:
+        rec.t_prefill_start = now
+        done_t = node.start_prefill(rec, now)
+        self._push(done_t, "prefill_done", (node, rec))
+
+    def _on_prefill_done(self, node: SimNode, rec: RequestRecord,
+                         now: float) -> None:
+        rec.t_prefill_done = now
+        node.prefill_active = None
+        dst = self.router.route_decode(rec, node, self._routable(now), now)
+        rec.decode_node = dst.node_id
+        plen = rec.req.prompt_len
+        if dst is node:
+            occupancy_s = transfer_s = 0.0    # KV stays in HBM
+        else:
+            occupancy_s = node.prefill_handoff_s(plen)
+            transfer_s = node.prefill_handoff_s(plen, peer=dst.profile)
+        rec.energy_j += node.request_energy_j(plen, rec.req.gen_len,
+                                              phase="prefill")
+        dst.inbound_inflight += 1      # blocks reaping until KV lands
+        self._push(now + transfer_s, "decode_enter", (dst, rec))
+        if occupancy_s > 0:
+            self._push(now + occupancy_s, "prefill_free", node)
+        else:
+            self._on_prefill_free(node, now)
+
+    def _on_prefill_free(self, node: SimNode, now: float) -> None:
+        node.prefill_busy = False
+        if node.prefill_queue:
+            self._start_prefill(node, node.prefill_queue.popleft(), now)
+        self._maybe_reap(node, now)
+
+    def _on_decode_enter(self, node: SimNode, rec: RequestRecord,
+                         now: float) -> None:
+        node.inbound_inflight -= 1
+        rec.t_decode_enter = now
+        if rec.req.gen_len <= 0:      # nothing to decode: done on arrival
+            rec.t_first_token = now
+            rec.t_done = now
+            self._maybe_reap(node, now)
+            return
+        rec.energy_j += node.request_energy_j(rec.req.prompt_len,
+                                              rec.req.gen_len,
+                                              phase="decode")
+        self._finish(node, node.decode_advance(now), now)
+        slot = node.make_slot(rec.req.uid, rec.req.prompt_len,
+                              rec.req.gen_len)
+        self._slot_rec[(node.node_id, rec.req.uid)] = rec
+        node.decode_admit(slot, now)
+        self._schedule_decode(node, now)
+
+    def _on_decode(self, node: SimNode, version: int, now: float) -> None:
+        if version != node.decode_version or node not in self.nodes:
+            return                          # stale membership snapshot
+        self._finish(node, node.decode_advance(now), now)
+        self._schedule_decode(node, now)
+        self._maybe_reap(node, now)
+
+    def _finish(self, node: SimNode, slots, now: float) -> None:
+        for slot in slots:
+            rec = self._slot_rec.pop((node.node_id, slot.uid))
+            rec.t_first_token = slot.t_first_token
+            rec.t_done = now
+
+    def _on_autoscale(self, now: float) -> None:
+        if self.autoscaler is None:
+            return
+        self.scale_events.extend(self.autoscaler.tick(self, now))
+        if any(not rec.done for rec in self.records):
+            self._push(now + self.autoscaler.interval_s, "autoscale", None)
+
+    # -- main loop ------------------------------------------------------
+    def run(self) -> FleetReport:
+        for rec in self.records:
+            self._push(rec.req.arrival_s, "arrive", rec)
+        if self.autoscaler is not None:
+            self._push(self.autoscaler.interval_s, "autoscale", None)
+        now = 0.0
+        while self._heap:
+            now, _, kind, payload = heapq.heappop(self._heap)
+            if kind == "arrive":
+                self._on_arrive(payload, now)
+            elif kind == "prefill_done":
+                self._on_prefill_done(payload[0], payload[1], now)
+            elif kind == "prefill_free":
+                self._on_prefill_free(payload, now)
+            elif kind == "decode_enter":
+                self._on_decode_enter(payload[0], payload[1], now)
+            elif kind == "decode":
+                self._on_decode(payload[0], payload[1], now)
+            elif kind == "autoscale":
+                self._on_autoscale(now)
+        return self._report(makespan=now)
+
+    # -- metrics --------------------------------------------------------
+    def _node_uptime_s(self, node: SimNode, makespan: float) -> float:
+        t0 = self._added_at.get(node.node_id, 0.0)
+        t1 = self._retired_at.get(node.node_id, makespan)
+        return max(t1 - t0, 0.0)
+
+    def _report(self, makespan: float) -> FleetReport:
+        done = [r for r in self.records if r.done]
+        makespan = max(makespan, 1e-9)
+        ttft = np.array(sorted(r.ttft_s for r in done), np.float64)
+        tpot = np.array(sorted(r.tpot_s for r in done), np.float64)
+
+        def pct(arr, q):
+            return float(np.percentile(arr, q)) if arr.size else float("nan")
+
+        def meets_slo(r: RequestRecord) -> bool:
+            if self.ttft_slo_s is not None and r.ttft_s > self.ttft_slo_s:
+                return False
+            if self.tpot_slo_s is not None and r.tpot_s > self.tpot_slo_s:
+                return False
+            return True
+
+        energy = 0.0
+        usd_hour = 0.0
+        for node in self.nodes + self.retired:
+            up = self._node_uptime_s(node, makespan)
+            energy += node.energy_active_j + node.idle_energy_j(up)
+            usd_hour += (capex_usd_per_hour(node.profile,
+                                            self.amortization_years)
+                         * up / makespan)
+        avg_watts = energy / makespan
+        usd_hour += energy_usd_per_hour(avg_watts, self.power_usd_per_kwh)
+        gen_tok = sum(r.req.gen_len for r in done)
+        gen_tok_s = gen_tok / makespan
+        usd_per_mtok = usd_hour / max(gen_tok_s * 3600.0 / 1e6, 1e-9)
+        good = sum(1 for r in done if meets_slo(r))
+        return FleetReport(
+            offered=len(self.records), completed=len(done),
+            makespan_s=makespan,
+            ttft_p50_s=pct(ttft, 50), ttft_p99_s=pct(ttft, 99),
+            tpot_p50_s=pct(tpot, 50), tpot_p99_s=pct(tpot, 99),
+            requests_per_s=len(done) / makespan,
+            goodput_rps=good / makespan,
+            gen_tokens_per_s=gen_tok_s,
+            avg_watts=avg_watts, energy_j=energy,
+            joules_per_request=(sum(r.energy_j for r in done) / len(done)
+                                if done else float("nan")),
+            usd_per_hour=usd_hour, usd_per_mtok=usd_per_mtok,
+            scale_events=tuple(self.scale_events))

@@ -256,6 +256,25 @@ def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
     return jnp.mean(nll)
 
 
+@jax.custom_jvp
+def _scan_barrier(tree):
+    """`optimization_barrier` with an identity differentiation rule.
+
+    `optimization_barrier` has no JVP registered, so routing the scan
+    carry through it raw breaks `jax.grad` over any scanned model.  The
+    barrier only constrains *scheduling*; its tangent map is the
+    identity, so the custom rule passes tangents straight through while
+    the primal keeps pinning the weight all-gather inside the loop.
+    """
+    return jax.lax.optimization_barrier(tree)
+
+
+@_scan_barrier.defjvp
+def _scan_barrier_jvp(primals, tangents):
+    (tree,), (dtree,) = primals, tangents
+    return _scan_barrier(tree), dtree
+
+
 def layer_scan(body, carry, xs):
     """lax.scan over stacked layers; fully unrolled when
     REPRO_SCAN_UNROLL=1 (dry-run mode) so XLA cost_analysis counts every
@@ -269,7 +288,7 @@ def layer_scan(body, carry, xs):
     unroll = os.environ.get("REPRO_SCAN_UNROLL", "0") == "1"
     if not unroll:
         def barrier_body(c, x):
-            c, x = jax.lax.optimization_barrier((c, x))
+            c, x = _scan_barrier((c, x))
             return body(c, x)
         return jax.lax.scan(barrier_body, carry, xs)
     length = jax.tree_util.tree_leaves(xs)[0].shape[0]

@@ -7,25 +7,27 @@ prefill phase and the bandwidth-bound decode phase to the pools that
 maximize served tokens/s (or minimize $/Mtok), with the KV handoff cost
 modeled over the host interconnect.
 
-This is an analytic scheduler (it plans placements from the capability
-model); the execution half is `repro.serving.engine` on each pool.
+This is an analytic *steady-state* scheduler; the shared per-phase
+throughput/handoff/cost primitives live in `repro.serving.phase_model`
+so the trace-driven simulator (`repro.fleet`) uses the exact same model
+with queueing dynamics on top.  The execution half is
+`repro.serving.engine` on each pool.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Mapping, Optional, Tuple
 
-from repro.core.device_profile import DeviceProfile, get_profile
-from repro.core.perf_model import InferencePerfModel, LLMSpec, QWEN25_1P5B
+from repro.core.device_profile import get_profile
+from repro.core.perf_model import LLMSpec, QWEN25_1P5B
+from repro.serving.phase_model import (Workload, capex_usd_per_hour,
+                                       effective_prefill_tps,
+                                       energy_usd_per_hour, phase_tps)
 
-
-@dataclasses.dataclass(frozen=True)
-class Workload:
-    prompt_len: int = 512
-    gen_len: int = 128
-    fmt: str = "q8_0"
+__all__ = ["Workload", "PoolAssignment", "FleetPlan", "plan_fleet",
+           "homogeneous_baseline"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,21 +49,6 @@ class FleetPlan:
     usd_per_mtok: float
 
 
-def _phase_tps(profile: DeviceProfile, wl: Workload, phase: str,
-               spec: LLMSpec) -> Tuple[float, float]:
-    m = InferencePerfModel(profile, spec)
-    est = (m.prefill(wl.fmt, wl.prompt_len) if phase == "prefill"
-           else m.decode(wl.fmt, wl.prompt_len + wl.gen_len // 2))
-    return est.tokens_per_s, est.watts
-
-
-def _kv_handoff_seconds(profile: DeviceProfile, wl: Workload,
-                        spec: LLMSpec) -> float:
-    """Prefill->decode KV transfer over the board's host link."""
-    kv_bytes = spec.kv_bytes_per_token() * wl.prompt_len
-    return kv_bytes / (profile.total_interconnect_gbps() * 1e9)
-
-
 def plan_fleet(pools: Mapping[str, int], wl: Workload = Workload(),
                spec: LLMSpec = QWEN25_1P5B,
                power_usd_per_kwh: float = 0.10,
@@ -80,28 +67,28 @@ def plan_fleet(pools: Mapping[str, int], wl: Workload = Workload(),
         for name, role in zip(names, roles):
             prof = get_profile(name)
             n = pools[name]
-            p_tps, p_w = _phase_tps(prof, wl, "prefill", spec)
-            d_tps, d_w = _phase_tps(prof, wl, "decode", spec)
-            handoff = _kv_handoff_seconds(prof, wl, spec)
             # a "prefill" board loses the KV handoff time per request
-            eff_p = p_tps / (1.0 + handoff * p_tps / max(wl.prompt_len, 1))
+            eff_p, p_w = effective_prefill_tps(prof, wl, spec)
+            d_tps, d_w = phase_tps(prof, wl, "decode", spec)
             if role == "prefill":
                 pre_tps += n * eff_p
                 watts += n * p_w
             elif role == "decode":
                 dec_tps += n * d_tps
                 watts += n * d_w
-            else:  # both: split time between phases optimally (50/50 seed)
-                pre_tps += n * eff_p * 0.5
+            else:  # both: split time between phases optimally (50/50 seed);
+                # decode is colocated, the KV never leaves HBM -> no
+                # handoff derating (same model as the simulator's
+                # local-decode path)
+                raw_p, _ = phase_tps(prof, wl, "prefill", spec)
+                pre_tps += n * raw_p * 0.5
                 dec_tps += n * d_tps * 0.5
                 watts += n * (p_w + d_w) / 2
-            if prof.asp_usd:
-                usd_hour += n * (prof.asp_usd
-                                 / (amortization_years * 365 * 24))
+            usd_hour += n * capex_usd_per_hour(prof, amortization_years)
             assignments.append(PoolAssignment(
                 profile=name, count=n, role=role,
                 phase_tokens_per_s=eff_p if role == "prefill" else d_tps))
-        usd_hour += watts / 1000.0 * power_usd_per_kwh
+        usd_hour += energy_usd_per_hour(watts, power_usd_per_kwh)
         # steady state: requests/s limited by the slower phase
         req_s = min(pre_tps / max(wl.prompt_len, 1),
                     dec_tps / max(wl.gen_len, 1))

@@ -61,3 +61,14 @@ def test_hetero_serving_gain():
     gain_row = [r for r in rows if r.name == "fleet_disaggregation_gain"][0]
     gain = float(str(gain_row.derived).split("x")[0])
     assert gain > 1.0, "disaggregation must beat homogeneous fleets"
+
+
+def test_fleet_sim_goodput_gain():
+    from benchmarks import fleet_sim
+    rows = _rows(fleet_sim)
+    gain_row = [r for r in rows if r.name == "fleet_sim_goodput_gain"][0]
+    gain = float(str(gain_row.derived).split("x")[0])
+    assert gain > 1.0, "simulated disaggregation must win on goodput"
+    agree = [r for r in rows if r.name == "fleet_sim_vs_planner"][0]
+    ratio = float(str(agree.derived).split("ratio=")[1])
+    assert 0.9 <= ratio <= 1.1, "simulator must agree with plan_fleet"

@@ -1,0 +1,160 @@
+"""Fleet simulator tests: determinism, planner agreement, handoff
+scaling, routing/autoscaling behavior, and execution-backed token
+accounting against the real ServeEngine."""
+
+import jax
+import pytest
+
+from repro.core.device_profile import get_profile
+from repro.fleet import (CostAwareRouter, FleetSim, NodeSpec,
+                         QueueDepthAutoscaler, SLOAwareRouter, bursty_trace,
+                         constant_trace, fleet_from_plan, poisson_trace,
+                         validate_token_accounting)
+from repro.fleet.workload import FleetRequest, LengthDist
+from repro.serving import Workload, kv_handoff_seconds, plan_fleet
+
+WL = Workload(prompt_len=512, gen_len=128, fmt="q8_0")
+MIXED_POOLS = {"a100-40g": 2, "cmp-170hx-nofma": 8}
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return plan_fleet(MIXED_POOLS, WL)
+
+
+def test_trace_determinism():
+    a = bursty_trace(40.0, 30.0, seed=7,
+                     prompt=LengthDist(512, cv=0.3),
+                     gen=LengthDist(128, cv=0.3))
+    b = bursty_trace(40.0, 30.0, seed=7,
+                     prompt=LengthDist(512, cv=0.3),
+                     gen=LengthDist(128, cv=0.3))
+    c = bursty_trace(40.0, 30.0, seed=8,
+                     prompt=LengthDist(512, cv=0.3),
+                     gen=LengthDist(128, cv=0.3))
+    assert a == b
+    assert a != c
+    assert all(x.arrival_s <= y.arrival_s for x, y in zip(a, a[1:]))
+
+
+def test_sim_deterministic_under_fixed_seed(plan):
+    trace = bursty_trace(40.0, 60.0, seed=7,
+                         prompt=LengthDist(512, cv=0.3),
+                         gen=LengthDist(128, cv=0.3))
+    specs = fleet_from_plan(plan, decode_lanes=4)
+    r1 = FleetSim(specs, trace, fmt=WL.fmt,
+                  ttft_slo_s=2.0, tpot_slo_s=0.05).run()
+    r2 = FleetSim(specs, trace, fmt=WL.fmt,
+                  ttft_slo_s=2.0, tpot_slo_s=0.05).run()
+    assert r1.metrics() == r2.metrics()
+    assert r1.completed == r1.offered
+
+
+def test_steady_state_matches_planner(plan):
+    """Overdriven constant-rate trace: completions/s == planner capacity."""
+    trace = constant_trace(plan.requests_per_s * 1.2, 60.0,
+                           WL.prompt_len, WL.gen_len)
+    rep = FleetSim(fleet_from_plan(plan), trace, fmt=WL.fmt).run()
+    assert rep.completed == rep.offered
+    assert rep.requests_per_s == pytest.approx(plan.requests_per_s,
+                                               rel=0.10)
+
+
+def test_steady_state_matches_planner_homogeneous():
+    """Colocated (role=both) fleets must agree with the planner too --
+    neither side charges a KV handoff when decode stays on-board."""
+    from repro.serving import homogeneous_baseline
+
+    hplan = homogeneous_baseline("cmp-170hx-nofma", 8, WL)
+    trace = constant_trace(hplan.requests_per_s * 1.2, 60.0,
+                           WL.prompt_len, WL.gen_len)
+    rep = FleetSim([NodeSpec("cmp-170hx-nofma", 8, "both")], trace,
+                   fmt=WL.fmt).run()
+    assert rep.requests_per_s == pytest.approx(hplan.requests_per_s,
+                                               rel=0.10)
+
+
+def _single_request_sim(prompt_len: int) -> FleetSim:
+    trace = [FleetRequest(uid=0, arrival_s=0.0, prompt_len=prompt_len,
+                          gen_len=32)]
+    specs = [NodeSpec("a100-40g", 1, "prefill"),
+             NodeSpec("cmp-170hx-nofma", 1, "decode")]
+    sim = FleetSim(specs, trace, fmt=WL.fmt)
+    sim.run()
+    return sim
+
+
+def test_kv_handoff_scales_with_prompt_len():
+    a100, cmp = get_profile("a100-40g"), get_profile("cmp-170hx-nofma")
+    h512 = kv_handoff_seconds(a100, 512, peer=cmp)
+    h1024 = kv_handoff_seconds(a100, 1024, peer=cmp)
+    assert h1024 == pytest.approx(2.0 * h512)
+    # and the simulator charges exactly that delay between phases
+    for plen, expect in [(512, h512), (1024, h1024)]:
+        rec = _single_request_sim(plen).records[0]
+        assert rec.done
+        got = rec.t_decode_enter - rec.t_prefill_done
+        assert got == pytest.approx(expect, rel=1e-9)
+    # the CMP's PCIe-1.1-x4 link dominates the bottleneck handoff
+    assert h512 > kv_handoff_seconds(a100, 512)
+
+
+def test_disaggregated_beats_homogeneous_on_goodput(plan):
+    trace = bursty_trace(60.0, 60.0, seed=0)
+    slo = dict(ttft_slo_s=2.0, tpot_slo_s=0.05)
+    mixed = FleetSim(fleet_from_plan(plan, decode_lanes=4), trace,
+                     fmt=WL.fmt, **slo).run()
+    homo_a = FleetSim([NodeSpec("a100-40g", 2, "both", 4)], trace,
+                      fmt=WL.fmt, **slo).run()
+    homo_c = FleetSim([NodeSpec("cmp-170hx-nofma", 8, "both", 4)], trace,
+                      fmt=WL.fmt, **slo).run()
+    assert mixed.goodput_rps > homo_a.goodput_rps
+    assert mixed.goodput_rps > homo_c.goodput_rps
+
+
+def test_router_policies_complete_workload(plan):
+    trace = poisson_trace(20.0, 30.0, seed=1)
+    specs = fleet_from_plan(plan, decode_lanes=4)
+    for router in (CostAwareRouter(),
+                   SLOAwareRouter(ttft_slo_s=2.0, tpot_slo_s=0.05)):
+        rep = FleetSim(specs, trace, fmt=WL.fmt, router=router).run()
+        assert rep.completed == rep.offered, router.name
+
+
+def test_autoscaler_grows_pool_and_cuts_tail(plan):
+    from repro.fleet import diurnal_trace
+
+    trace = diurnal_trace(base_rps=5.0, peak_rps=60.0, duration_s=120.0,
+                          seed=3, period_s=120.0)
+    base = [NodeSpec("a100-40g", 2, "prefill", 1),
+            NodeSpec("cmp-170hx-nofma", 2, "decode", 4)]
+    asc = QueueDepthAutoscaler(
+        template=NodeSpec("cmp-170hx-nofma", 1, "decode", 4),
+        interval_s=10.0, min_nodes=2, max_nodes=16, cold_start_s=15.0)
+    scaled = FleetSim(base, trace, fmt=WL.fmt, autoscaler=asc).run()
+    fixed = FleetSim(base, trace, fmt=WL.fmt).run()
+    assert any("+1" in ev for ev in scaled.scale_events)
+    assert scaled.completed == scaled.offered
+    assert scaled.ttft_p99_s < fixed.ttft_p99_s
+
+
+def test_execution_backed_token_accounting():
+    """Simulator token claims must match the real engine's counts."""
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("qwen2.5-1.5b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    trace = [FleetRequest(uid=i, arrival_s=0.1 * (i + 1),
+                          prompt_len=8 + i, gen_len=4 + (i % 3))
+             for i in range(5)]
+    sim = FleetSim([NodeSpec("a100-40g", 1, "prefill"),
+                    NodeSpec("cmp-170hx-nofma", 1, "decode", 2)],
+                   trace, fmt=WL.fmt)
+    report = sim.run()
+    assert report.completed == len(trace)
+    result = validate_token_accounting(sim, report, cfg, params,
+                                       n_lanes=2, max_len=32)
+    assert result["match"], result["mismatches"]
+    assert result["sim_gen_tokens"] == result["engine_gen_tokens"]
+    assert result["sim_prompt_tokens"] == result["engine_prompt_tokens"]
