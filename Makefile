@@ -4,10 +4,14 @@
 # PR must hold).  `make test-fast` is the quick inner loop: it skips the
 # @pytest.mark.slow subprocess/end-to-end tests (~7 min of the full run)
 # so a fleet-sim or model change gets feedback in seconds, not minutes.
+# `make bench-smoke` runs the measured decode-path bench on a tiny config
+# and emits BENCH_decode.json (tokens/s, dispatches/token, bytes/token)
+# -- the decode perf trajectory is tracked from PR 2 onward.
 
 PYTEST := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest
+PYRUN  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast bench
+.PHONY: test test-fast bench bench-smoke
 
 test:
 	$(PYTEST) -x -q
@@ -16,4 +20,7 @@ test-fast:
 	$(PYTEST) -q -m "not slow"
 
 bench:
-	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m benchmarks.run
+	$(PYRUN) -m benchmarks.run
+
+bench-smoke:
+	$(PYRUN) -m benchmarks.llm_decode --out BENCH_decode.json

@@ -63,3 +63,41 @@ def rows() -> List[Row]:
                    f"plan={plan.requests_per_s:.2f}req/s "
                    f"ratio={steady.requests_per_s / plan.requests_per_s:.3f}"))
     return out
+
+
+def execution_replay_rows(dispatch_n: int = 8) -> List[Row]:
+    """Execution-backed rows: replay a tiny trace on the REAL engine with
+    the multi-token dispatch and report the host-dispatch economics the
+    pure simulator cannot see.  Not part of ``rows()`` (it runs the jax
+    engine); invoked via ``python -m benchmarks.fleet_sim --execution``.
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.fleet import FleetRequest, run_trace_on_engine
+    from repro.models import build_model
+
+    cfg = get_config("qwen2.5-1.5b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    trace = [FleetRequest(uid=i, arrival_s=0.1 * i, prompt_len=6 + i,
+                          gen_len=8) for i in range(6)]
+    exe = run_trace_on_engine(trace, cfg, params, n_lanes=2, max_len=32,
+                              dispatch_n=dispatch_n)
+    base = run_trace_on_engine(trace, cfg, params, n_lanes=2, max_len=32,
+                               dispatch_n=1)
+    assert exe.gen_by_uid == base.gen_by_uid, "dispatch-size variance"
+    return [Row(f"fleet_exec[dispatch_n={dispatch_n}]", 0.0,
+                f"gen={exe.gen_tokens}tok "
+                f"dispatches={exe.decode_dispatches} "
+                f"disp_per_tok={exe.decode_dispatches / exe.gen_tokens:.3f} "
+                f"baseline={base.decode_dispatches / base.gen_tokens:.3f} "
+                f"reduction={base.decode_dispatches / exe.decode_dispatches:.1f}x")]
+
+
+if __name__ == "__main__":
+    import sys
+    mods = rows() + (execution_replay_rows()
+                     if "--execution" in sys.argv else [])
+    print("name,us_per_call,derived")
+    for r in mods:
+        print(f"{r.name},{r.us_per_call:.1f},"
+              f"{str(r.derived).replace(',', ';')}")

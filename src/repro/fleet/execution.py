@@ -34,16 +34,21 @@ class ExecutionResult:
     prompt_tokens: int
     gen_tokens: int
     gen_by_uid: Dict[int, int]
+    decode_dispatches: int = 0
+    decode_steps: int = 0
 
 
 def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
                         params, n_lanes: int = 2, max_len: int = 64,
                         vocab_size: Optional[int] = None,
-                        seed: int = 0) -> ExecutionResult:
+                        seed: int = 0,
+                        dispatch_n: int = 8) -> ExecutionResult:
     """Serve ``trace`` through the real continuous batcher.
 
     Prompt token ids are derived deterministically from the request uid,
-    so the replay itself is seed-reproducible.
+    so the replay itself is seed-reproducible.  ``dispatch_n`` is the
+    engine's multi-token decode granularity (tokens per host dispatch);
+    the replayed token counts are dispatch-size invariant.
     """
     vocab = vocab_size or cfg.vocab_size
     rng = np.random.default_rng(seed)
@@ -52,13 +57,16 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
                                         dtype=np.int32),
                     max_new_tokens=r.gen_len)
             for r in sorted(trace, key=lambda r: (r.arrival_s, r.uid))]
-    engine = ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len)
+    engine = ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
+                         dispatch_n=dispatch_n)
     engine.run(reqs)
     gen_by_uid = {r.uid: len(r.generated) for r in reqs}
     return ExecutionResult(
         prompt_tokens=sum(len(r.prompt) for r in reqs),
         gen_tokens=sum(gen_by_uid.values()),
-        gen_by_uid=gen_by_uid)
+        gen_by_uid=gen_by_uid,
+        decode_dispatches=engine.stats["decode_dispatches"],
+        decode_steps=engine.stats["decode_steps"])
 
 
 def simulated_token_accounting(sim: FleetSim,

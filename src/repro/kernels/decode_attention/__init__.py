@@ -1,5 +1,7 @@
-from repro.kernels.decode_attention.kernel import (decode_attention_pallas,
-                                                   decode_attention_q8_pallas)
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_lengthaware_pallas, decode_attention_pallas,
+    decode_attention_q8_lengthaware_pallas, decode_attention_q8_pallas,
+    kv_blocks_fetched)
 from repro.kernels.decode_attention.ops import (decode_attention,
                                                 decode_attention_q8)
 from repro.kernels.decode_attention.ref import (decode_attention_q8_ref,
@@ -7,6 +9,8 @@ from repro.kernels.decode_attention.ref import (decode_attention_q8_ref,
                                                 dequant_kv_q8, quantize_kv_q8)
 
 __all__ = ["decode_attention_pallas", "decode_attention_q8_pallas",
+           "decode_attention_lengthaware_pallas",
+           "decode_attention_q8_lengthaware_pallas", "kv_blocks_fetched",
            "decode_attention", "decode_attention_q8",
            "decode_attention_q8_ref", "decode_attention_ref",
            "dequant_kv_q8", "quantize_kv_q8"]

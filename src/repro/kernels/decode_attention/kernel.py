@@ -23,29 +23,24 @@ from jax.experimental.pallas import tpu as pltpu
 _NEG_INF = -1e30
 
 
-def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc_ref, m_ref,
-                   l_ref, *, scale: float, bk: int):
-    j = pl.program_id(2)
+# One online-softmax accumulation shared by all four kernel bodies
+# (masked/length-aware x dense/q8): the variants differ only in how the
+# (k, v) tile is materialized and in whether dead blocks are skipped.
 
-    @pl.when(j == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
+def _flash_init(acc_ref, m_ref, l_ref):
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32) * scale          # (1, d)
-    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
-    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+
+def _flash_block(q, k, v, kv_len, j, bk: int, acc_ref, m_ref, l_ref):
+    """Fold one (bk, d) KV tile into the running softmax state, masking
+    positions beyond the live cache length (ragged batches)."""
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (1, bk)
-
-    # mask beyond the live cache length (ragged batches)
-    kv_len = len_ref[0]
     k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
     mask = k_pos < kv_len
     s = jnp.where(mask, s, _NEG_INF)
-
-    m_prev = m_ref[0, 0]
-    l_prev = l_ref[0, 0]
+    m_prev, l_prev = m_ref[0, 0], l_ref[0, 0]
     m_new = jnp.maximum(m_prev, jnp.max(s))
     p = jnp.where(mask, jnp.exp(s - m_new), 0.0)         # (1, bk)
     alpha = jnp.exp(m_prev - m_new)
@@ -54,11 +49,36 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc_ref, m_ref,
     acc_ref[...] = (acc_ref[...] * alpha
                     + jnp.dot(p, v, preferred_element_type=jnp.float32))
 
+
+def _flash_store(o_ref, acc_ref, l_ref):
+    l = l_ref[0, 0]
+    l = jnp.where(l == 0.0, 1.0, l)                      # all-dead lane
+    o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _dequant_tile(vals_ref, scale_ref, qblock: int):
+    """(bk, d) int8 tile + (bk/qblock, 1) scales -> f32, on the VPU
+    straight out of VMEM."""
+    return (vals_ref[0, 0].astype(jnp.float32)
+            * jnp.repeat(scale_ref[0, 0], qblock, axis=0))
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale: float, bk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _flash_init(acc_ref, m_ref, l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    _flash_block(q, k, v, len_ref[0], j, bk, acc_ref, m_ref, l_ref)
+
     @pl.when(j == pl.num_programs(2) - 1)
     def _store():
-        l = l_ref[0, 0]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        _flash_store(o_ref, acc_ref, l_ref)
 
 
 def decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
@@ -98,6 +118,112 @@ def decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 # ----------------------------------------------------------------------
+# length-aware variant: HBM traffic proportional to live context
+# ----------------------------------------------------------------------
+#
+# The masked kernel above streams all Sk/bk key blocks per lane and
+# relies on the softmax mask to drop dead positions -- HBM reads scale
+# with max_len.  Here the per-lane lengths are scalar-prefetched
+# (available before the kernel body runs), so the k/v BlockSpec index
+# maps can clamp the block index to the last LIVE block: once the grid
+# walks past ceil(len/bk) blocks, the index map keeps returning the same
+# block, and the pipeline skips the DMA for a block it already holds.
+# Compute for dead blocks is skipped with pl.when.  Reads scale with the
+# live cache length; the masked kernel stays as the parity reference.
+
+
+def _last_live_block(lens_ref, bb, bk: int):
+    """Index of the last block holding live keys for lane ``bb`` (>= 0
+    so a length-0 lane still maps to block 0: one block fetched, all
+    compute skipped)."""
+    n_live = pl.cdiv(lens_ref[bb], bk)
+    return jnp.maximum(n_live - 1, 0)
+
+
+def _decode_la_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                      l_ref, *, scale: float, bk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _flash_init(acc_ref, m_ref, l_ref)
+
+    kv_len = len_ref[pl.program_id(0)]
+
+    @pl.when(j * bk < kv_len)                  # skip dead blocks entirely
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        _flash_block(q, k, v, kv_len, j, bk, acc_ref, m_ref, l_ref)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _store():
+        _flash_store(o_ref, acc_ref, l_ref)
+
+
+def decode_attention_lengthaware_pallas(q: jnp.ndarray, k: jnp.ndarray,
+                                        v: jnp.ndarray,
+                                        kv_lengths: jnp.ndarray, *,
+                                        scale=None, bk: int = 512,
+                                        interpret: bool = False
+                                        ) -> jnp.ndarray:
+    """Length-aware decode attention: same contract as
+    :func:`decode_attention_pallas`, but key blocks past the live cache
+    length are never fetched from HBM."""
+    b, h, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    bk = min(bk, sk)
+    assert sk % bk == 0
+    scale = float(scale if scale is not None else d ** -0.5)
+    kernel = functools.partial(_decode_la_kernel, scale=scale, bk=bk)
+    q4 = q[:, :, None, :]
+
+    def kv_index(bb, hh, j, lens_ref):
+        jj = jnp.minimum(j, _last_live_block(lens_ref, bb, bk))
+        return (bb, hh // group, jj, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda bb, hh, j, lens_ref: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), kv_index),
+            pl.BlockSpec((1, 1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda bb, hh, j, lens_ref: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(kv_lengths.astype(jnp.int32), q4, k, v)[:, :, 0, :]
+
+
+def kv_blocks_fetched(kv_lengths, sk: int, bk: int = 512):
+    """Modeled K-block fetch count per lane for the length-aware kernel.
+
+    A lane of length L DMAs ``max(ceil(L/bk), 1)`` key blocks (a dead
+    lane still pins block 0); the masked kernel always fetches ``sk/bk``.
+    Returns an int array shaped like ``kv_lengths``.
+    """
+    import numpy as np
+    lens = np.asarray(kv_lengths)
+    bk = min(bk, sk)
+    return np.maximum(-(-lens // bk), 1).astype(np.int64)
+
+
+# ----------------------------------------------------------------------
 # quantized-KV variant (q8_0 along the key axis)
 # ----------------------------------------------------------------------
 
@@ -108,38 +234,16 @@ def _decode_q8_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, len_ref, o_ref,
 
     @pl.when(j == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
+        _flash_init(acc_ref, m_ref, l_ref)
 
     q = q_ref[0, 0].astype(jnp.float32) * scale
-    # dequantize KV tile on the VPU, straight out of VMEM
-    kqv = kq_ref[0, 0].astype(jnp.float32)                # (bk, d) int8
-    ksc = jnp.repeat(ks_ref[0, 0], qblock, axis=0)        # (bk, 1) -> rows
-    k = kqv * ksc
-    vqv = vq_ref[0, 0].astype(jnp.float32)
-    vsc = jnp.repeat(vs_ref[0, 0], qblock, axis=0)
-    v = vqv * vsc
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
-
-    kv_len = len_ref[0]
-    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
-    mask = k_pos < kv_len
-    s = jnp.where(mask, s, _NEG_INF)
-    m_prev, l_prev = m_ref[0, 0], l_ref[0, 0]
-    m_new = jnp.maximum(m_prev, jnp.max(s))
-    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = (l_prev * alpha + jnp.sum(p))[None, None]
-    m_ref[...] = m_new[None, None]
-    acc_ref[...] = (acc_ref[...] * alpha
-                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    k = _dequant_tile(kq_ref, ks_ref, qblock)
+    v = _dequant_tile(vq_ref, vs_ref, qblock)
+    _flash_block(q, k, v, len_ref[0], j, bk, acc_ref, m_ref, l_ref)
 
     @pl.when(j == pl.num_programs(2) - 1)
     def _store():
-        l = l_ref[0, 0]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        _flash_store(o_ref, acc_ref, l_ref)
 
 
 def decode_attention_q8_pallas(q, k_q, k_scale, v_q, v_scale, kv_lengths, *,
@@ -184,3 +288,75 @@ def decode_attention_q8_pallas(q, k_q, k_scale, v_q, v_scale, kv_lengths, *,
         ],
         interpret=interpret,
     )(q4, k_q, k_scale, v_q, v_scale, kv_lengths)[:, :, 0, :]
+
+
+def _decode_q8_la_kernel(len_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
+                         o_ref, acc_ref, m_ref, l_ref, *, scale: float,
+                         bk: int, qblock: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _flash_init(acc_ref, m_ref, l_ref)
+
+    kv_len = len_ref[pl.program_id(0)]
+
+    @pl.when(j * bk < kv_len)                  # skip dead blocks entirely
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = _dequant_tile(kq_ref, ks_ref, qblock)
+        v = _dequant_tile(vq_ref, vs_ref, qblock)
+        _flash_block(q, k, v, kv_len, j, bk, acc_ref, m_ref, l_ref)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _store():
+        _flash_store(o_ref, acc_ref, l_ref)
+
+
+def decode_attention_q8_lengthaware_pallas(q, k_q, k_scale, v_q, v_scale,
+                                           kv_lengths, *, scale=None,
+                                           bk: int = 512, qblock: int = 32,
+                                           interpret: bool = False):
+    """Length-aware quantized-KV decode: q8 tiles (values AND scales)
+    past the live length are never fetched."""
+    b, h, d = q.shape
+    _, hkv, sk, _ = k_q.shape
+    group = h // hkv
+    bk = min(bk, sk)
+    assert sk % bk == 0 and bk % qblock == 0
+    scale = float(scale if scale is not None else d ** -0.5)
+    srows = bk // qblock
+    kernel = functools.partial(_decode_q8_la_kernel, scale=scale, bk=bk,
+                               qblock=qblock)
+    q4 = q[:, :, None, :]
+
+    def kv_index(bb, hh, j, lens_ref):
+        jj = jnp.minimum(j, _last_live_block(lens_ref, bb, bk))
+        return (bb, hh // group, jj, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda bb, hh, j, lens_ref: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), kv_index),
+            pl.BlockSpec((1, 1, srows, 1), kv_index),
+            pl.BlockSpec((1, 1, bk, d), kv_index),
+            pl.BlockSpec((1, 1, srows, 1), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda bb, hh, j, lens_ref: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(kv_lengths.astype(jnp.int32), q4, k_q, k_scale, v_q,
+      v_scale)[:, :, 0, :]

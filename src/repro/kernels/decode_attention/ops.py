@@ -1,4 +1,10 @@
-"""Jitted wrapper for decode attention, dense + quantized-KV."""
+"""Jitted wrapper for decode attention, dense + quantized-KV.
+
+``length_aware=True`` (the default for the Pallas path) routes to the
+scalar-prefetch kernels whose HBM reads scale with the live cache
+length; ``length_aware=False`` keeps the masked full-``max_len`` stream
+as the parity reference.  The jnp oracle is unaffected by the flag.
+"""
 
 from __future__ import annotations
 
@@ -6,27 +12,38 @@ import functools
 
 import jax
 
-from repro.kernels.decode_attention.kernel import (decode_attention_pallas,
-                                                   decode_attention_q8_pallas)
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_lengthaware_pallas, decode_attention_pallas,
+    decode_attention_q8_lengthaware_pallas, decode_attention_q8_pallas)
 from repro.kernels.decode_attention.ref import (decode_attention_q8_ref,
                                                 decode_attention_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bk"))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bk",
+                                             "length_aware"))
 def decode_attention(q, k, v, kv_lengths, *, use_pallas: bool = False,
-                     interpret: bool = False, bk: int = 512):
+                     interpret: bool = False, bk: int = 512,
+                     length_aware: bool = True):
     if use_pallas:
+        if length_aware:
+            return decode_attention_lengthaware_pallas(
+                q, k, v, kv_lengths, bk=bk, interpret=interpret)
         return decode_attention_pallas(q, k, v, kv_lengths, bk=bk,
                                        interpret=interpret)
     return decode_attention_ref(q, k, v, kv_lengths)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bk",
-                                             "qblock"))
+                                             "qblock", "length_aware"))
 def decode_attention_q8(q, k_q, k_scale, v_q, v_scale, kv_lengths, *,
                         use_pallas: bool = False, interpret: bool = False,
-                        bk: int = 512, qblock: int = 32):
+                        bk: int = 512, qblock: int = 32,
+                        length_aware: bool = True):
     if use_pallas:
+        if length_aware:
+            return decode_attention_q8_lengthaware_pallas(
+                q, k_q, k_scale, v_q, v_scale, kv_lengths, bk=bk,
+                qblock=qblock, interpret=interpret)
         return decode_attention_q8_pallas(q, k_q, k_scale, v_q, v_scale,
                                           kv_lengths, bk=bk, qblock=qblock,
                                           interpret=interpret)

@@ -249,6 +249,16 @@ _LOWER = {"train": lower_train, "prefill": lower_prefill,
           "decode": lower_decode}
 
 
+def _cost_dict(compiled) -> dict:
+    """Normalize Compiled.cost_analysis() across jax versions: newer
+    releases return a list with one dict per partition (all identical on
+    an SPMD module); older ones return the dict directly."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost or {})
+
+
 # ----------------------------------------------------------------------
 # cell runner
 # ----------------------------------------------------------------------
@@ -299,7 +309,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     compiled, t_lower, t_compile = _compile_once(cfg, mesh, shape_name,
                                                  unroll=False)
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
 
     # pass 2 -- unrolled build (single-pod only): per-layer-accurate
@@ -316,7 +326,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     if cost_pass and can_unroll:
         compiled_u, _, t_u = _compile_once(cfg, mesh, shape_name,
                                            unroll=True, microbatches=1)
-        cost = compiled_u.cost_analysis() or cost
+        cost = _cost_dict(compiled_u) or cost
         coll = collective_bytes(compiled_u.as_text())
         t_compile += t_u
         del compiled_u
@@ -328,7 +338,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled_1, _, t_1 = _compile_once(cfg, mesh, shape_name,
                                            unroll=False, microbatches=1,
                                            moe_chunk=0)
-        cost = compiled_1.cost_analysis() or cost
+        cost = _cost_dict(compiled_1) or cost
         coll = collective_bytes(compiled_1.as_text())
         t_compile += t_1
         del compiled_1

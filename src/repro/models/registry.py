@@ -54,6 +54,21 @@ class Model:
                                                tokens)
         return transformer.lm_decode_step(params, self.cfg, cache, tokens)
 
+    def decode_n_steps(self, params, cache, tokens, rng, remaining,
+                       lane_seed, tok_idx, *, n_steps, temperature=0.0,
+                       len_cap=0):
+        """Multi-token decode dispatch (see transformer.lm_decode_n_steps);
+        works for every family with a decode step, including enc-dec."""
+        if self.cfg.is_encdec:
+            step_fn = lambda c, t: whisper.whisper_decode_step(  # noqa: E731
+                params, self.cfg, c, t)
+        else:
+            step_fn = None
+        return transformer.lm_decode_n_steps(
+            params, self.cfg, cache, tokens, rng, remaining, lane_seed,
+            tok_idx, n_steps=n_steps, temperature=temperature,
+            len_cap=len_cap, step_fn=step_fn)
+
     def encode(self, params, frames):
         assert self.cfg.is_encdec
         return whisper.encode(params, frames, self.cfg)

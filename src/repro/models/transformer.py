@@ -141,11 +141,17 @@ def lm_forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig, *,
 
 
 def lm_prefill_batched(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
-                       vision_embeds: Optional[jnp.ndarray] = None):
+                       vision_embeds: Optional[jnp.ndarray] = None,
+                       last_pos: Optional[jnp.ndarray] = None):
     """Serving prefill: full-sequence pass that RETURNS the KV cache and
     only the last-position logits (llama.cpp semantics).  Attention-free
     families return logits only (their state is O(1) and rebuilt by the
-    engine)."""
+    engine).
+
+    ``last_pos`` (B,) selects which position's logits to return; it lets
+    the engine right-pad prompts to a shape bucket (causal attention
+    keeps positions < last_pos untouched by the padding) so prompt
+    lengths stop forcing one XLA compile each."""
     x = embed(params["embed"], tokens, cfg.compute_dtype)
     x = _maybe_inject_vision(x, vision_embeds, cfg)
     x = constrain(x, "batch", "seq", None)
@@ -177,7 +183,12 @@ def lm_prefill_batched(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
 
     x, kv = layer_scan(body, x, params["blocks"])
     x = apply_norm(params["final_norm"], x, cfg.norm)
-    logits = lm_logits(params["embed"], x[:, -1], cfg)
+    if last_pos is None:
+        x_last = x[:, -1]
+    else:
+        x_last = jnp.take_along_axis(
+            x, last_pos.astype(jnp.int32)[:, None, None], axis=1)[:, 0]
+    logits = lm_logits(params["embed"], x_last, cfg)
     return (logits, kv) if has_attn else (logits, None)
 
 
@@ -307,6 +318,94 @@ def lm_decode_step(params: Params, cfg: ModelConfig, cache: Params,
     new_cache = dict(stack)
     new_cache["len"] = cache_len + 1
     return logits, new_cache
+
+
+def sample_tokens(logits: jnp.ndarray, rng, temperature: float
+                  ) -> jnp.ndarray:
+    """On-device greedy/temperature sampling. logits (B, V) -> (B,) int32.
+
+    Lives next to the decode step so the logits tensor never leaves the
+    device: the serving engine's per-token host round-trip (device->host
+    logits copy + numpy argmax/categorical) collapses into the jitted
+    step."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        rng, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def sample_tokens_lanes(logits: jnp.ndarray, keys: jnp.ndarray,
+                        temperature: float) -> jnp.ndarray:
+    """Per-lane-keyed sampling: logits (B, V), keys (B,) of PRNG keys.
+
+    Each lane draws with its own key, so a request's sampled stream is a
+    pure function of (its key lineage, its token index) -- independent
+    of lane neighbors, admission timing, and dispatch granularity."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.vmap(
+        lambda k, l: jax.random.categorical(k, l / temperature))(
+            keys, logits).astype(jnp.int32)
+
+
+def lm_decode_sample_step(params: Params, cfg: ModelConfig, cache: Params,
+                          tokens: jnp.ndarray, rng, *,
+                          temperature: float = 0.0
+                          ) -> Tuple[jnp.ndarray, Params]:
+    """Fused decode step: advance one token AND sample the next, all on
+    device. tokens (B,) -> (sampled (B,) int32, updated cache)."""
+    logits, cache = lm_decode_step(params, cfg, cache, tokens)
+    return sample_tokens(logits, rng, temperature), cache
+
+
+def lm_decode_n_steps(params: Params, cfg: ModelConfig, cache: Params,
+                      tokens: jnp.ndarray, rng, remaining: jnp.ndarray,
+                      lane_seed: jnp.ndarray, tok_idx: jnp.ndarray, *,
+                      n_steps: int, temperature: float = 0.0,
+                      len_cap: int = 0, step_fn=None):
+    """Advance every lane ``n_steps`` tokens in ONE host dispatch.
+
+    A ``jax.lax.scan`` over the fused decode+sample step; tokens and
+    validity flags accumulate on device and are drained by the caller in
+    a single host transfer.  Each lane samples with key
+    ``fold_in(fold_in(rng, lane_seed), tok_idx)`` -- ``lane_seed`` is
+    the request's admission index, ``tok_idx`` its generated-token count
+    -- so a request's stream is a pure function of its own identity:
+    invariant to dispatch granularity, admission timing, and lane
+    neighbors.
+
+    ``remaining`` (B,) int32 is each lane's generation budget; exhausted
+    lanes keep stepping (their KV writes land in a lane that will be
+    re-prefilled on admission) but their samples are flagged invalid,
+    their token index stops advancing, and their cache length is frozen
+    (so the length-aware kernel does not stream a retired context).
+    ``len_cap`` > 0 zeroes the budget once the cache length reaches it
+    (the engine passes ``max_len - 1``).
+
+    Returns (tokens (n, B), valid (n, B) bool, next_tokens (B,), cache,
+    remaining, tok_idx).
+    """
+    if step_fn is None:
+        step_fn = functools.partial(lm_decode_step, params, cfg)
+    lane_keys = jax.vmap(lambda s: jax.random.fold_in(rng, s))(lane_seed)
+
+    def body(carry, _):
+        cache, tok, rem, idx = carry
+        live = rem > 0
+        len_before = cache["len"]
+        logits, cache = step_fn(cache, tok)
+        cache["len"] = jnp.where(live, cache["len"], len_before)
+        keys = jax.vmap(jax.random.fold_in)(lane_keys, idx)
+        nxt = sample_tokens_lanes(logits, keys, temperature)
+        rem = jnp.where(live, rem - 1, 0)
+        if len_cap > 0:
+            rem = jnp.where(cache["len"] >= len_cap, 0, rem)
+        idx = idx + live.astype(jnp.int32)
+        return (cache, nxt, rem, idx), (nxt, live)
+
+    (cache, tok, remaining, tok_idx), (toks, valid) = jax.lax.scan(
+        body, (cache, tokens, remaining, tok_idx), None, length=n_steps)
+    return toks, valid, tok, cache, remaining, tok_idx
 
 
 def lm_prefill(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,

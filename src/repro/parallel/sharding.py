@@ -73,8 +73,37 @@ def mesh_logical_axes(mesh: Mesh, mode: str = "train") -> Dict[str, Any]:
 # global mesh context
 # ----------------------------------------------------------------------
 
+_last_active: list = [None]   # mesh the cached traces were created under
+
+
+def _activate(mesh: Optional[Mesh]) -> None:
+    """Guard every mesh (re)activation -- context entry AND the exit
+    path restoring an outer context.
+
+    `constrain` bakes the CONCRETE mesh into the traced jaxpr, but
+    jax's jaxpr trace cache is keyed on (function, avals) only -- so
+    re-jitting the same step function under a different mesh (elastic
+    re-mesh, dry-run cell sweeps, nested contexts) would silently reuse
+    constraints pointing at the old device set.  Dropping the caches on
+    every mesh CHANGE keeps the invariant "cached traces belong to
+    `_last_active`".  clear_caches() is deliberately global
+    (wrong-device constraints are a correctness bug, retracing is only
+    a cost); mesh-free paths and repeated same-mesh contexts never pay
+    it, and mesh-alternating paths are compile-everything sweeps
+    anyway.  Like jax's own trace caches (and clear_caches itself) this
+    guard is process-global: concurrent use_mesh from multiple threads
+    with DIFFERENT meshes is unsupported -- every launcher/dry-run path
+    in this repo activates meshes from one thread."""
+    if mesh is None:        # mesh-free traces are constraint-free: safe
+        return
+    if _last_active[0] is not None and mesh != _last_active[0]:
+        jax.clear_caches()
+    _last_active[0] = mesh
+
+
 @contextlib.contextmanager
 def use_mesh(mesh: Optional[Mesh], mode: str = "train"):
+    _activate(mesh)
     prev = getattr(_ctx, "mesh", None)
     prev_mode = getattr(_ctx, "mode", "train")
     _ctx.mesh = mesh
@@ -84,6 +113,7 @@ def use_mesh(mesh: Optional[Mesh], mode: str = "train"):
     finally:
         _ctx.mesh = prev
         _ctx.mode = prev_mode
+        _activate(prev)
 
 
 def current_mesh() -> Optional[Mesh]:

@@ -5,18 +5,28 @@ is the framework-scale version: a lane-based continuous batcher
 (vLLM-style, fixed lanes instead of paged blocks -- the TPU-friendly
 layout) in front of the model zoo's prefill/decode functions.
 
-* ``prefill`` runs the batched flash path and scatters the prompt KV
-  into a free lane (per-lane lengths make the batch ragged);
-* ``decode_step`` advances every live lane one token;
+The decode hot path is host-sync-free:
+
+* ``prefill`` pads prompts to power-of-two buckets (one XLA compile per
+  bucket, not per prompt length) and scatters the prompt KV into a free
+  lane;
+* ``decode_n`` advances every lane ``dispatch_n`` tokens per Python
+  dispatch via a jitted ``lax.scan``: sampling (greedy or temperature)
+  happens on device, tokens and done-flags accumulate on device, and one
+  host transfer drains the block;
+* lane retirement/admission happens only at dispatch boundaries;
 * weights can be stored block-quantized (``quantize_params``): the
   bandwidth saving is what the paper's decode evaluation is about.
 
-Sampling: greedy or temperature; logits arrive already vocab-masked.
+Sampling keys fold from (request admission index, per-request token
+index), so a request's generated stream -- greedy or temperature -- is
+invariant to dispatch granularity, admission timing, and lane neighbors.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -25,7 +35,8 @@ import numpy as np
 
 from repro.models.common import ModelConfig
 from repro.models.registry import Model, build_model
-from repro.models.transformer import init_cache, lm_prefill_batched
+from repro.models.transformer import (init_cache, lm_prefill_batched,
+                                      sample_tokens)
 from repro.quant.quantize import QTensor, dequantize, quantize
 
 
@@ -81,24 +92,77 @@ class Request:
     done: bool = False
 
 
+def _bucket_len(n: int, floor: int = 8) -> int:
+    """Smallest power-of-two >= n (>= floor) -- the prefill shape bucket."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
 class ServeEngine:
-    """Fixed-lane continuous batcher around the LM decode step."""
+    """Fixed-lane continuous batcher around the LM decode step.
+
+    ``dispatch_n`` is the decode granularity: tokens generated per Python
+    dispatch (per lane).  ``stats`` tracks dispatches, decode steps,
+    generated tokens, and prefill compiles for the perf regression
+    benches.
+    """
 
     def __init__(self, cfg: ModelConfig, params, n_lanes: int = 4,
                  max_len: int = 512, temperature: float = 0.0,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, dispatch_n: int = 8,
+                 prefill_bucketing: bool = True):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
         self.n_lanes = n_lanes
         self.max_len = max_len
-        self.temperature = temperature
+        # fixed at construction: the value is baked into the jitted
+        # dispatch below, so post-hoc mutation would silently desync the
+        # prefill-sampled first token from the decode stream
+        self.temperature = float(temperature)
+        self.dispatch_n = max(1, dispatch_n)
+        self.prefill_bucketing = prefill_bucketing
         self.cache = init_cache(cfg, n_lanes, max_len)
         self.lane_req: List[Optional[Request]] = [None] * n_lanes
-        self._rng = jax.random.PRNGKey(rng_seed)
+        base = jax.random.PRNGKey(rng_seed)
+        self._rng_decode = jax.random.fold_in(base, 0)
+        self._rng_prefill = jax.random.fold_in(base, 1)
         self._next_token = jnp.zeros((n_lanes,), jnp.int32)
+        self._remaining = jnp.zeros((n_lanes,), jnp.int32)
+        self._remaining_host = np.zeros((n_lanes,), np.int64)
+        # per-lane sampling identity: the admission index seeds the
+        # lane's key lineage, tok_idx is its generated-token counter --
+        # streams depend only on (admission order, token index)
+        self._lane_seed = jnp.zeros((n_lanes,), jnp.int32)
+        self._tok_idx = jnp.zeros((n_lanes,), jnp.int32)
+        self._admit_count = 0        # admission counter (key lineages)
+        self.stats = {"decode_dispatches": 0, "decode_steps": 0,
+                      "generated_tokens": 0, "prefill_compiles": 0}
         self._decode = jax.jit(
             lambda p, c, t: self.model.decode_step(p, c, t))
+        self._temperature = self.temperature      # captured, see above
+        self._decode_n = jax.jit(
+            functools.partial(self._decode_n_fn,
+                              temperature=self._temperature,
+                              len_cap=self.max_len - 1),
+            static_argnames=("n_steps",))
+
+        def prefill_fn(p, tokens, last_pos):
+            # Python side effect fires once per trace == once per shape
+            # bucket; the recompile regression test pins this counter.
+            self.stats["prefill_compiles"] += 1
+            return lm_prefill_batched(p, tokens, self.cfg,
+                                      last_pos=last_pos)
+
+        self._prefill = jax.jit(prefill_fn)
+
+    def _decode_n_fn(self, params, cache, tokens, rng, remaining,
+                     lane_seed, tok_idx, *, n_steps, temperature, len_cap):
+        return self.model.decode_n_steps(
+            params, cache, tokens, rng, remaining, lane_seed, tok_idx,
+            n_steps=n_steps, temperature=temperature, len_cap=len_cap)
 
     # -- admission --------------------------------------------------------
     def free_lanes(self) -> List[int]:
@@ -109,41 +173,66 @@ class ServeEngine:
         if not lanes:
             return False
         lane = lanes[0]
+        self._lane_seed = self._lane_seed.at[lane].set(self._admit_count)
+        self._tok_idx = self._tok_idx.at[lane].set(0)
         self._prefill_into_lane(req, lane)
         self.lane_req[lane] = req
+        self._remaining = self._remaining.at[lane].set(req.max_new_tokens)
+        self._remaining_host[lane] = req.max_new_tokens
         return True
 
     def _prefill_into_lane(self, req: Request, lane: int) -> None:
-        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        logits, kv = lm_prefill_batched(self.params, tokens, self.cfg)
-        plen = int(req.prompt.shape[0])
+        prompt = req.prompt
+        # a fixed-lane cache cannot hold more than max_len - 1 prompt
+        # positions and still decode: keep the TAIL of over-long prompts
+        # (coherent positions/KV, llama.cpp-style truncation) instead of
+        # recording a length the cache cannot back.
+        limit = self.max_len - 1
+        if prompt.shape[0] > limit:
+            prompt = prompt[-limit:]
+        plen = int(prompt.shape[0])
+        bucket = _bucket_len(plen) if self.prefill_bucketing else plen
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :plen] = prompt
+        logits, kv = self._prefill(self.params, jnp.asarray(padded),
+                                   jnp.asarray([plen - 1], jnp.int32))
         if kv is not None:
-            k, v = kv        # (L, 1, Hkv, S_prompt, D)
+            k, v = kv        # (L, 1, Hkv, S_bucket, D)
             smax = self.cache["k"].shape[3]
             take = min(plen, smax)
             self.cache["k"] = jax.lax.dynamic_update_slice(
-                self.cache["k"], k[:, :, :, -take:, :].astype(
+                self.cache["k"], k[:, :, :, plen - take:plen, :].astype(
                     self.cache["k"].dtype), (0, lane, 0, 0, 0))
             self.cache["v"] = jax.lax.dynamic_update_slice(
-                self.cache["v"], v[:, :, :, -take:, :].astype(
+                self.cache["v"], v[:, :, :, plen - take:plen, :].astype(
                     self.cache["v"].dtype), (0, lane, 0, 0, 0))
         if "ssm_h" in self.cache:
             # SSM state is rebuilt by streaming the prompt through the
             # decode path (exactly once, O(len) state updates).
-            self._stream_ssm_prompt(req, lane)
+            self._stream_ssm_prompt(prompt, lane)
             return
         self.cache["len"] = self.cache["len"].at[lane].set(plen)
-        tok = self._sample(logits)[0]
+        self._set_first_token(logits, lane)
+
+    def _set_first_token(self, logits: jnp.ndarray, lane: int) -> None:
+        key = jax.random.fold_in(self._rng_prefill, self._admit_count)
+        self._admit_count += 1
+        tok = sample_tokens(logits, key, self._temperature)[0]
         self._next_token = self._next_token.at[lane].set(tok)
 
-    def _stream_ssm_prompt(self, req: Request, lane: int) -> None:
+    def _stream_ssm_prompt(self, prompt: np.ndarray, lane: int) -> None:
         lane_cache = jax.tree_util.tree_map(
             lambda x: x[:, lane:lane + 1] if x.ndim > 1 else x[lane:lane + 1],
             self.cache)
         lane_cache["len"] = jnp.zeros((1,), jnp.int32)
+        # a re-admitted lane must NOT inherit the previous request's
+        # recurrent state (init_mamba2_state is all-zeros)
+        for key in ("ssm_h", "ssm_conv"):
+            if key in lane_cache:
+                lane_cache[key] = jnp.zeros_like(lane_cache[key])
         logits = None
-        for t in req.prompt:
-            logits, lane_cache = self.model.decode_step(
+        for t in prompt:
+            logits, lane_cache = self._decode(
                 self.params, lane_cache, jnp.asarray([t], jnp.int32))
 
         def put(full, one):
@@ -153,46 +242,67 @@ class ServeEngine:
             return full.at[lane].set(one[0])
 
         self.cache = jax.tree_util.tree_map(put, self.cache, lane_cache)
-        tok = self._sample(logits)[0]
-        self._next_token = self._next_token.at[lane].set(tok)
+        self._set_first_token(logits, lane)
 
     # -- stepping ----------------------------------------------------------
-    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
-        if self.temperature <= 0.0:
-            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        self._rng, k = jax.random.split(self._rng)
-        return np.asarray(jax.random.categorical(
-            k, logits / self.temperature, axis=-1), np.int32)
+    def _dispatch_size(self, n: Optional[int]) -> int:
+        """Tokens per dispatch: dispatch_n, shrunk (to a power of two, to
+        bound recompiles) when every live lane owes fewer tokens."""
+        n = n or self.dispatch_n
+        live = [i for i, r in enumerate(self.lane_req) if r is not None]
+        max_rem = int(self._remaining_host[live].max()) if live else 0
+        return min(n, _bucket_len(max(max_rem, 1), floor=1))
 
-    def decode_step(self) -> Dict[int, int]:
-        """Advance every live lane one token; returns {uid: token}."""
+    def decode_n(self, n: Optional[int] = None) -> Dict[int, List[int]]:
+        """Advance all live lanes up to ``n`` tokens in ONE dispatch.
+
+        Returns {uid: [tokens]} for this block; requests that exhaust
+        their budget (or the cache) are retired at the boundary.
+        """
         live = [i for i, r in enumerate(self.lane_req) if r is not None]
         if not live:
             return {}
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self._next_token)
-        toks = self._sample(logits)
-        out: Dict[int, int] = {}
+        n = self._dispatch_size(n)
+        (toks, valid, self._next_token, self.cache, self._remaining,
+         self._tok_idx) = self._decode_n(
+            self.params, self.cache, self._next_token, self._rng_decode,
+            self._remaining, self._lane_seed, self._tok_idx, n_steps=n)
+        self.stats["decode_dispatches"] += 1
+        self.stats["decode_steps"] += n
+        # one host transfer drains the whole block
+        toks_h, valid_h, rem_h = jax.device_get(
+            (toks, valid, self._remaining))
+        self._remaining_host = np.asarray(rem_h, np.int64)
+        out: Dict[int, List[int]] = {}
         for lane in live:
             req = self.lane_req[lane]
-            tok = int(toks[lane])
-            req.generated.append(tok)
-            out[req.uid] = tok
-            self._next_token = self._next_token.at[lane].set(tok)
-            if (len(req.generated) >= req.max_new_tokens
-                    or int(self.cache["len"][lane]) >= self.max_len - 1):
+            seq = [int(t) for t in toks_h[valid_h[:, lane], lane]]
+            req.generated.extend(seq)
+            out[req.uid] = seq
+            self.stats["generated_tokens"] += len(seq)
+            if self._remaining_host[lane] <= 0:
                 req.done = True
                 self.lane_req[lane] = None
+                # a retired lane is DEAD until re-admission: zero its
+                # cache length so the length-aware kernel pins a single
+                # key block instead of streaming the stale context.
+                self.cache["len"] = self.cache["len"].at[lane].set(0)
         return out
 
-    def run(self, requests: List[Request]) -> List[Request]:
-        """Serve a workload to completion with continuous admission."""
+    def decode_step(self) -> Dict[int, int]:
+        """Single-token compatibility wrapper; returns {uid: token}."""
+        return {uid: seq[0] for uid, seq in self.decode_n(1).items() if seq}
+
+    def run(self, requests: List[Request],
+            dispatch_n: Optional[int] = None) -> List[Request]:
+        """Serve a workload to completion with continuous admission.
+
+        Retirement rides the done-flags returned by the batched dispatch
+        (no per-step completion scan over the request list).
+        """
         pending = list(requests)
-        done: List[Request] = []
         while pending or any(r is not None for r in self.lane_req):
             while pending and self.free_lanes():
                 self.admit(pending.pop(0))
-            self.decode_step()
-            done.extend(r for r in requests
-                        if r.done and r not in done)
+            self.decode_n(dispatch_n)
         return requests
