@@ -4,20 +4,28 @@
 # PR must hold).  `make test-fast` is the quick inner loop: it skips the
 # @pytest.mark.slow subprocess/end-to-end tests (~7 min of the full run)
 # so a fleet-sim or model change gets feedback in seconds, not minutes.
+# `make test-paged` runs only the paged KV-cache layer (kernel/engine/
+# allocator invariants) -- the quick loop when touching the paged path.
 # `make bench-smoke` runs the measured decode-path bench on a tiny config
-# and emits BENCH_decode.json (tokens/s, dispatches/token, bytes/token)
-# -- the decode perf trajectory is tracked from PR 2 onward.
+# and emits BENCH_decode.json (tokens/s, dispatches/token, bytes/token,
+# and the paged section: admission capacity, paged-vs-dense token parity,
+# bytes/token parity) -- the decode perf trajectory is tracked from PR 2
+# onward; the bench FAILS if the paged section is missing or paged
+# bytes/token drifts >10% from dense at full occupancy.
 
 PYTEST := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest
 PYRUN  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast bench bench-smoke
+.PHONY: test test-fast test-paged bench bench-smoke
 
 test:
 	$(PYTEST) -x -q
 
 test-fast:
 	$(PYTEST) -q -m "not slow"
+
+test-paged:
+	$(PYTEST) -q -m paged
 
 bench:
 	$(PYRUN) -m benchmarks.run

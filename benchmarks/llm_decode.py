@@ -21,6 +21,13 @@ serving decode path on a smoke config and emits ``BENCH_decode.json``:
   layout);
 * ``greedy_token_exact`` -- the batched engine reproduces the per-token
   engine's greedy stream token for token.
+
+The ``paged`` section compares the page-pool cache against the dense
+fixed-lane layout at EQUAL KV memory: admission capacity at 25/50/100%
+mean live context (paged admits by bytes, dense by lanes), token-exact
+parity of the paged engine, and bytes-read/token parity of the
+block-table kernel vs the length-aware dense kernel at full occupancy
+(``make bench-smoke`` gates on <= 10%).
 """
 
 from __future__ import annotations
@@ -125,6 +132,103 @@ def _legacy_greedy(cfg, params, prompt, max_new: int, max_len: int):
     return out
 
 
+def _kv_bytes_per_step_paged(lens, cfg, bt_width: int, page_size: int) -> int:
+    """KV bytes one paged decode step streams, following the block-table
+    index map: ``clip(ceil(len/ps), 1, T)`` pages per lane, costed like
+    :func:`_kv_bytes_per_step`."""
+    import numpy as np
+    from repro.kernels.decode_attention import kv_pages_fetched
+    pages = int(kv_pages_fetched(np.asarray(lens), bt_width,
+                                 page_size).sum())
+    if cfg.kv_quant == "int8":
+        per_row = cfg.hd * 1 + 4
+    else:
+        per_row = cfg.hd * (
+            2 if str(cfg.compute_dtype) == "bfloat16" else 4)
+    per_page = page_size * per_row * cfg.n_kv_heads
+    return pages * per_page * 2 * cfg.n_layers                # k + v
+
+
+def paged_metrics(cfg, params, prompts, *, n_lanes: int, max_len: int,
+                  max_new: int, dispatch_n: int, page_size: int) -> dict:
+    """Paged-vs-dense section of BENCH_decode.json.
+
+    The pool is sized to EXACTLY the dense engine's KV memory
+    (``n_lanes`` full contexts); the paged engine gets a wider batch
+    (4x lanes) so the admission test measures the POOL, not the batch
+    width.  Capacity at mean live context c is how many concurrent
+    requests fit before ``admit`` refuses -- dense is always
+    ``n_lanes``.
+    """
+    import numpy as np
+    from repro.serving import Request, ServeEngine
+
+    bt_width = max_len // page_size
+    pool_pages = n_lanes * bt_width
+
+    # -- admission capacity vs mean context --------------------------
+    rng = np.random.default_rng(1)
+    capacity = {}
+    for frac in (0.25, 0.5, 1.0):
+        ctx = max(2, int(max_len * frac))
+        plen = max(1, ctx // 2)
+        gen = ctx - plen - 1
+        eng = ServeEngine(cfg, params, n_lanes=4 * n_lanes,
+                          max_len=max_len, dispatch_n=dispatch_n,
+                          paged=True, page_size=page_size,
+                          n_pages=pool_pages)
+        admitted = 0
+        for uid in range(8 * n_lanes):
+            prompt = rng.integers(0, cfg.vocab_size, plen, dtype=np.int32)
+            if not eng.admit(Request(uid=uid, prompt=prompt,
+                                     max_new_tokens=max(gen, 1))):
+                break
+            admitted += 1
+        capacity[f"{int(frac * 100)}%"] = {
+            "mean_context": ctx,
+            "paged_admitted": admitted,
+            "dense_admitted": n_lanes,
+            "admission_gain_x": round(admitted / n_lanes, 2),
+        }
+
+    # -- token-exact parity (same lanes => same admission order) ------
+    def serve(paged):
+        reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        eng = ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
+                          dispatch_n=dispatch_n, paged=paged,
+                          page_size=page_size)
+        eng.run(reqs)
+        return [tuple(r.generated) for r in reqs], eng
+
+    dense_out, _ = serve(False)
+    paged_out, peng = serve(True)
+    peng.pool.check()
+
+    # -- bytes/token parity at full occupancy -------------------------
+    lens = [max_len] * n_lanes
+    paged_bytes = _kv_bytes_per_step_paged(lens, cfg, bt_width, page_size)
+    dense_bytes = _kv_bytes_per_step(lens, cfg, max_len, page_size,
+                                     length_aware=True)
+    return {
+        "page_size": page_size,
+        "pool_pages": pool_pages,
+        "block_table_width": bt_width,
+        "dense_lane_capacity": n_lanes,
+        "admission_capacity": capacity,
+        "token_exact_vs_dense": dense_out == paged_out,
+        "kv_pages_hwm": peng.stats["kv_pages_hwm"],
+        "kv_admit_blocked": peng.stats["kv_admit_blocked"],
+        "pool_leak_free": (peng.pool.n_in_use == 0
+                          and peng.pool.n_free == pool_pages),
+        "bytes_read_per_token_full_occupancy": {
+            "paged": paged_bytes // n_lanes,
+            "dense_lengthaware": dense_bytes // n_lanes,
+            "ratio": round(paged_bytes / dense_bytes, 4),
+        },
+    }
+
+
 def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
                         max_len: int = 64, prompt_len: int = 8,
                         max_new: int = 16, n_requests: int = 8,
@@ -221,6 +325,9 @@ def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
         "greedy_token_exact": exact,
         "bytes_read_per_token": occupancy,
         "bytes_read_context_sweep": context_sweep,
+        "paged": paged_metrics(cfg, params, prompts, n_lanes=n_lanes,
+                               max_len=max_len, max_new=max_new,
+                               dispatch_n=dispatch_n, page_size=bk),
     }
 
 
@@ -243,12 +350,28 @@ def main(argv=None) -> int:
     print(json.dumps(rec, indent=2))
     sweep = [v["lengthaware_bytes_per_token"]
              for v in rec["bytes_read_context_sweep"].values()]
+    paged = rec.get("paged", {})
+    paged_ok = (
+        bool(paged)
+        and paged["token_exact_vs_dense"]
+        and paged["pool_leak_free"]
+        # paged bytes/token within 10% of dense at full occupancy
+        and abs(paged["bytes_read_per_token_full_occupancy"]["ratio"] - 1.0)
+        <= 0.10
+        # admission proportional to bytes: strictly beats the dense lane
+        # count whenever mean live context < max_len / 2
+        and paged["admission_capacity"]["25%"]["paged_admitted"]
+        > paged["dense_lane_capacity"]
+        and paged["admission_capacity"]["50%"]["paged_admitted"]
+        > paged["dense_lane_capacity"])
     ok = (rec["greedy_token_exact"]
           and rec["dispatch_reduction_x"] >= 5.0
           and all(a < b for a, b in zip(sweep, sweep[1:]))
           and rec["bytes_read_per_token"]["25%"][
               "lengthaware_bytes_per_token"]
-          < rec["bytes_read_per_token"]["25%"]["masked_bytes_per_token"])
+          < rec["bytes_read_per_token"]["25%"]["masked_bytes_per_token"]
+          and paged_ok)
+    print("BENCH_decode paged section:", "PASS" if paged_ok else "FAIL")
     print("BENCH_decode:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

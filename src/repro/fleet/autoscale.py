@@ -44,7 +44,14 @@ class QueueDepthAutoscaler:
 
     def _depth(self, node: SimNode, now: float) -> float:
         if node.role in ("decode", "both"):
-            return node.decode_load() / max(node.decode_lanes, 1)
+            lane_depth = node.decode_load() / max(node.decode_lanes, 1)
+            if node.kv_pool_pages is not None:
+                # paged capacity is bytes: pressure is whichever binds
+                # first, lanes or page-pool occupancy
+                page_depth = (node.kv_pages_in_use()
+                              / max(node.kv_pool_pages, 1))
+                return max(lane_depth, page_depth)
+            return lane_depth
         svc = node.prefill_service_s(self.ref_prompt_len)
         return node.est_prefill_wait_s(now) / max(svc, 1e-9)
 

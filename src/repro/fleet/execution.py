@@ -29,26 +29,43 @@ from repro.serving.engine import Request, ServeEngine
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionResult:
-    """Token accounting from a real engine replay of a trace."""
+    """Token accounting from a real engine replay of a trace.
+
+    ``kv_pages_hwm`` / ``kv_spill_events`` surface the paged engine's
+    page-pool pressure: peak pages promised+mapped, and requests that
+    found a free lane but had to WAIT for pages (counted once per
+    blocked episode, so the number is dispatch-granularity invariant).
+    Zero for a fixed-lane replay.  These feed the sim-to-real
+    calibration loop: the simulator's ``SimNode.kv_pages_hwm`` models
+    the same peak; its ``kv_spill_events`` counts over-commit
+    transitions, the sim-side analogue of a blocked episode (the sim
+    over-commits where the engine defers).
+    """
 
     prompt_tokens: int
     gen_tokens: int
     gen_by_uid: Dict[int, int]
     decode_dispatches: int = 0
     decode_steps: int = 0
+    kv_pages_hwm: int = 0
+    kv_spill_events: int = 0
 
 
 def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
                         params, n_lanes: int = 2, max_len: int = 64,
                         vocab_size: Optional[int] = None,
                         seed: int = 0,
-                        dispatch_n: int = 8) -> ExecutionResult:
+                        dispatch_n: int = 8,
+                        paged: bool = False, page_size: int = 16,
+                        n_pages: Optional[int] = None) -> ExecutionResult:
     """Serve ``trace`` through the real continuous batcher.
 
     Prompt token ids are derived deterministically from the request uid,
     so the replay itself is seed-reproducible.  ``dispatch_n`` is the
     engine's multi-token decode granularity (tokens per host dispatch);
-    the replayed token counts are dispatch-size invariant.
+    the replayed token counts are dispatch-size invariant.  ``paged``
+    replays through the page-pool cache (token counts are layout
+    invariant; the page stats are what changes).
     """
     vocab = vocab_size or cfg.vocab_size
     rng = np.random.default_rng(seed)
@@ -58,7 +75,8 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
                     max_new_tokens=r.gen_len)
             for r in sorted(trace, key=lambda r: (r.arrival_s, r.uid))]
     engine = ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
-                         dispatch_n=dispatch_n)
+                         dispatch_n=dispatch_n, paged=paged,
+                         page_size=page_size, n_pages=n_pages)
     engine.run(reqs)
     gen_by_uid = {r.uid: len(r.generated) for r in reqs}
     return ExecutionResult(
@@ -66,7 +84,9 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
         gen_tokens=sum(gen_by_uid.values()),
         gen_by_uid=gen_by_uid,
         decode_dispatches=engine.stats["decode_dispatches"],
-        decode_steps=engine.stats["decode_steps"])
+        decode_steps=engine.stats["decode_steps"],
+        kv_pages_hwm=engine.stats["kv_pages_hwm"],
+        kv_spill_events=engine.stats["kv_admit_blocked"])
 
 
 def simulated_token_accounting(sim: FleetSim,

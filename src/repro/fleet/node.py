@@ -20,6 +20,18 @@ its per-phase estimates into *service processes*:
 A ``role="both"`` node time-slices 50/50 between the phases (both rates
 halved), mirroring the planner's seed split.
 
+Paged KV occupancy (``kv_pool_pages``): mirrors the engine's page-pool
+layout -- each resident decode slot occupies ``ceil(context /
+page_size)`` pages, growing as it generates.  When the sum exceeds the
+pool the board is over-committed and the overflow pages must stream
+over the HOST link (PCIe 1.1 x4 on the CMP 170HX) instead of HBM: the
+spilled share of the per-step KV traffic is slowed by the
+``hbm_bw / interconnect_bw`` ratio, which on this board is ~3 orders of
+magnitude -- the model's way of saying "don't over-commit".  Routers
+consult :meth:`SimNode.kv_overcommit` to see capacity as bytes rather
+than lanes; ``kv_pool_pages=None`` (default) disables the constraint
+and reproduces the pre-paging behavior exactly.
+
 Energy: the node integrates board power over simulated time (idle floor
 plus dynamic power scaled by instantaneous occupancy); each request is
 additionally charged its solo-cost joules via
@@ -59,6 +71,7 @@ class DecodeSlot:
     t_comp_s: float          # per-step MAC+epilogue time for this context
     t_kv_s: float            # per-step KV streaming time for this context
     dyn_j_per_tok: float     # dynamic (above-idle) joules per token
+    prompt_len: int = 0      # live context = prompt_len + tokens_done
     tokens_done: float = 0.0
     t_first_token: Optional[float] = None
 
@@ -68,7 +81,8 @@ class SimNode:
 
     def __init__(self, node_id: str, profile: DeviceProfile, role: str,
                  fmt: str, spec: LLMSpec = QWEN25_1P5B,
-                 decode_lanes: int = 1):
+                 decode_lanes: int = 1, page_size: int = 16,
+                 kv_pool_pages: Optional[int] = None):
         assert role in ("prefill", "decode", "both"), role
         self.node_id = node_id
         self.profile = profile
@@ -76,6 +90,8 @@ class SimNode:
         self.fmt = fmt
         self.spec = spec
         self.decode_lanes = decode_lanes
+        self.page_size = page_size
+        self.kv_pool_pages = kv_pool_pages
         self._model = InferencePerfModel(profile, spec)
         self._split = 0.5 if role == "both" else 1.0
         self._idle_w = InferencePerfModel.IDLE_FRACTION * profile.tdp_watts
@@ -106,6 +122,9 @@ class SimNode:
         self.prefill_busy_s = 0.0
         self.tokens_prefilled = 0
         self.tokens_decoded = 0
+        self.kv_pages_hwm = 0        # peak page occupancy observed
+        self.kv_spill_events = 0     # over-commit transitions
+        self._spilled = False
 
     # ------------------------------------------------------------------
     # phase-estimate caches
@@ -179,19 +198,75 @@ class SimNode:
         return now + svc
 
     # ------------------------------------------------------------------
-    # decode: lane-limited processor sharing
+    # decode: lane-limited processor sharing + page-pool occupancy
     # ------------------------------------------------------------------
+    def _slot_pages(self, slot: DecodeSlot) -> int:
+        """Pages a resident slot occupies at its CURRENT live context."""
+        ctx = slot.prompt_len + int(slot.tokens_done)
+        return max(-(-ctx // self.page_size), 1)
+
+    def kv_pages_in_use(self) -> int:
+        return sum(self._slot_pages(s) for s in self.decode_active.values())
+
+    def kv_pages_free(self) -> int:
+        """Free pages (negative when over-committed); unbounded when no
+        pool is configured."""
+        if self.kv_pool_pages is None:
+            return 1 << 30
+        return self.kv_pool_pages - self.kv_pages_in_use()
+
+    def kv_bytes_free(self) -> float:
+        """Router-facing capacity in BYTES, the paged-cache currency."""
+        return (self.kv_pages_free() * self.page_size
+                * self.spec.kv_bytes_per_token())
+
+    def kv_overcommit(self, prompt_len: int = 0, gen_len: int = 0) -> int:
+        """Pages by which admitting such a request (at its steady-state
+        mid-generation context) would exceed the pool; 0 if it fits or
+        no pool is configured."""
+        if self.kv_pool_pages is None:
+            return 0
+        ctx = prompt_len + gen_len // 2
+        need = -(-ctx // self.page_size) if ctx > 0 else 0
+        return max(need - self.kv_pages_free(), 0)
+
+    def _spill_factor(self) -> float:
+        """Multiplier on the KV-stream term when over-committed: the
+        overflow share of pages streams over the host link instead of
+        HBM."""
+        if self.kv_pool_pages is None:
+            return 1.0
+        in_use = self.kv_pages_in_use()
+        if in_use <= self.kv_pool_pages:
+            return 1.0
+        spilled = (in_use - self.kv_pool_pages) / in_use
+        link_ratio = (self.profile.hbm_bw_gbps
+                      / max(self.profile.total_interconnect_gbps(), 1e-9))
+        return 1.0 + spilled * (link_ratio - 1.0)
+
+    def _note_occupancy(self) -> None:
+        """Track page high-water mark and over-commit transitions."""
+        in_use = self.kv_pages_in_use()
+        self.kv_pages_hwm = max(self.kv_pages_hwm, in_use)
+        over = (self.kv_pool_pages is not None
+                and in_use > self.kv_pool_pages)
+        if over and not self._spilled:
+            self.kv_spill_events += 1
+        self._spilled = over
+
     def _step_time_s(self) -> float:
         """Current per-token step time shared by all active lanes.
 
         Per-lane MACs and KV reads accumulate across the batch; the
         weight stream is paid once per step (the continuous-batching
-        bandwidth saving).
+        bandwidth saving).  An over-committed page pool slows the KV
+        term by the spilled share's host-link penalty.
         """
         if not self.decode_active:
             return 0.0
         comp_sum = sum(s.t_comp_s for s in self.decode_active.values())
         kv_sum = sum(s.t_kv_s for s in self.decode_active.values())
+        kv_sum *= self._spill_factor()
         return max(comp_sum, self._t_weights + kv_sum) / self._split
 
     def decode_load(self) -> int:
@@ -204,6 +279,7 @@ class SimNode:
         kv_sum = sum(s.t_kv_s for s in self.decode_active.values())
         comp_sum += extra * t_comp
         kv_sum += extra * t_kv
+        kv_sum *= self._spill_factor()
         return max(comp_sum, t_w + kv_sum) / self._split
 
     def make_slot(self, uid: int, prompt_len: int,
@@ -211,7 +287,8 @@ class SimNode:
         context = prompt_len + gen_len // 2
         t_comp, t_w, t_kv, dyn_j = self._decode_parts(context)
         return DecodeSlot(uid=uid, gen_len=gen_len, t_comp_s=t_comp,
-                          t_kv_s=t_kv, dyn_j_per_tok=dyn_j)
+                          t_kv_s=t_kv, dyn_j_per_tok=dyn_j,
+                          prompt_len=prompt_len)
 
     def decode_admit(self, slot: DecodeSlot, now: float) -> bool:
         """Returns True if the slot went active (else queued)."""
@@ -219,6 +296,7 @@ class SimNode:
         if len(self.decode_active) < self.decode_lanes:
             self.decode_active[slot.uid] = slot
             self.decode_version += 1
+            self._note_occupancy()
             return True
         self.decode_queue.append(slot)
         return False
@@ -252,6 +330,7 @@ class SimNode:
             self.decode_active[nxt.uid] = nxt
         if finished:
             self.decode_version += 1
+        self._note_occupancy()
         self._decode_last_t = now
         return finished
 

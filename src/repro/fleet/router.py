@@ -36,6 +36,17 @@ def decode_candidates(nodes: Sequence[SimNode]) -> List[SimNode]:
     return [n for n in nodes if n.role in ("decode", "both")]
 
 
+def kv_capacity_penalty(record, node: SimNode) -> float:
+    """Additive decode-score penalty for a node whose page pool cannot
+    hold the request: capacity is BYTES, not lanes, so a board with a
+    free lane but a full pool must lose to one with pages to spare
+    (spilling over the PCIe 1.1 x4 host link is ~1000x slower than HBM).
+    Zero for nodes without a configured pool -- legacy scores unchanged.
+    """
+    over = node.kv_overcommit(record.req.prompt_len, record.req.gen_len)
+    return 1e9 * over if over else 0.0
+
+
 class Router:
     """Base policy; subclasses override the two scoring hooks."""
 
@@ -78,7 +89,7 @@ class LeastLoadedRouter(Router):
 
     def _decode_score(self, record, src: SimNode, node: SimNode,
                       now: float) -> float:
-        return float(node.decode_load())
+        return float(node.decode_load()) + kv_capacity_penalty(record, node)
 
 
 class CostAwareRouter(Router):
@@ -108,7 +119,8 @@ class CostAwareRouter(Router):
         t_req = (record.req.gen_len
                  * node.est_decode_step_s(ctx, extra=1 + node.decode_load()
                                           - len(node.decode_active)))
-        return t_req * self._usd_per_s(node) / max(record.req.gen_len, 1)
+        return (t_req * self._usd_per_s(node) / max(record.req.gen_len, 1)
+                + kv_capacity_penalty(record, node))
 
 
 class SLOAwareRouter(Router):
@@ -138,4 +150,5 @@ class SLOAwareRouter(Router):
         # SLO violators sort after every compliant node; among
         # compliant nodes deeper backlogs (longer queue wait) lose
         penalty = 1e6 if step > self.tpot_slo_s else 0.0
+        penalty += kv_capacity_penalty(record, node)
         return penalty + step * (1.0 + queued / max(node.decode_lanes, 1))

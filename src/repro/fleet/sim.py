@@ -48,6 +48,9 @@ class NodeSpec:
     count: int
     role: str                 # "prefill" | "decode" | "both"
     decode_lanes: int = 1
+    #: paged-KV model (see SimNode): pages per board; None = unconstrained
+    kv_pool_pages: Optional[int] = None
+    page_size: int = 16
 
 
 def fleet_from_plan(plan: FleetPlan, decode_lanes: int = 1) -> List[NodeSpec]:
@@ -152,7 +155,9 @@ class FleetSim:
         node = SimNode(node_id=f"{ns.profile}/{ns.role}#{self._node_seq}",
                        profile=get_profile(ns.profile), role=ns.role,
                        fmt=self.fmt, spec=self.spec,
-                       decode_lanes=ns.decode_lanes)
+                       decode_lanes=ns.decode_lanes,
+                       page_size=ns.page_size,
+                       kv_pool_pages=ns.kv_pool_pages)
         self._node_seq += 1
         node.available_at = now
         self.nodes.append(node)

@@ -1,16 +1,25 @@
 from repro.kernels.decode_attention.kernel import (
-    decode_attention_lengthaware_pallas, decode_attention_pallas,
+    decode_attention_lengthaware_pallas, decode_attention_paged_pallas,
+    decode_attention_paged_q8_pallas, decode_attention_pallas,
     decode_attention_q8_lengthaware_pallas, decode_attention_q8_pallas,
-    kv_blocks_fetched)
+    kv_blocks_fetched, kv_pages_fetched)
 from repro.kernels.decode_attention.ops import (decode_attention,
+                                                decode_attention_paged,
+                                                decode_attention_paged_q8,
                                                 decode_attention_q8)
-from repro.kernels.decode_attention.ref import (decode_attention_q8_ref,
-                                                decode_attention_ref,
-                                                dequant_kv_q8, quantize_kv_q8)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_paged_q8_ref, decode_attention_paged_ref,
+    decode_attention_q8_ref, decode_attention_ref, dequant_kv_q8,
+    gather_pages, quantize_kv_q8)
 
 __all__ = ["decode_attention_pallas", "decode_attention_q8_pallas",
            "decode_attention_lengthaware_pallas",
-           "decode_attention_q8_lengthaware_pallas", "kv_blocks_fetched",
+           "decode_attention_q8_lengthaware_pallas",
+           "decode_attention_paged_pallas",
+           "decode_attention_paged_q8_pallas",
+           "kv_blocks_fetched", "kv_pages_fetched",
            "decode_attention", "decode_attention_q8",
+           "decode_attention_paged", "decode_attention_paged_q8",
            "decode_attention_q8_ref", "decode_attention_ref",
-           "dequant_kv_q8", "quantize_kv_q8"]
+           "decode_attention_paged_ref", "decode_attention_paged_q8_ref",
+           "dequant_kv_q8", "gather_pages", "quantize_kv_q8"]

@@ -223,6 +223,195 @@ def kv_blocks_fetched(kv_lengths, sk: int, bk: int = 512):
     return np.maximum(-(-lens // bk), 1).astype(np.int64)
 
 
+def kv_pages_fetched(kv_lengths, bt_width: int, page_size: int):
+    """Modeled page fetch count per lane for the paged kernels.
+
+    Follows the block-table index map exactly: a lane of length L DMAs
+    ``clip(ceil(L/page_size), 1, bt_width)`` pages -- identical to
+    :func:`kv_blocks_fetched` when ``page_size == bk``, which is the
+    paged-vs-dense bytes/token parity the bench pins.
+    """
+    import numpy as np
+    lens = np.asarray(kv_lengths)
+    return np.clip(-(-lens // page_size), 1, bt_width).astype(np.int64)
+
+
+# ----------------------------------------------------------------------
+# paged (block-table) variants: the KV lives in a global page pool
+# ----------------------------------------------------------------------
+#
+# The length-aware kernels above still address a dense per-lane cache
+# (B, Hkv, S, D): capacity is partitioned at allocation time.  Here the
+# cache is a page POOL (P, Hkv, ps, D) shared by all lanes, and each
+# lane's pages are named by a block table (B, T) of physical page ids in
+# logical order.  Both the per-lane lengths and the block tables are
+# scalar-prefetched, so the k/v index maps can (a) translate the logical
+# page index through the table and (b) keep the live-length clamp: pages
+# past ceil(len/ps) are never fetched.  Table slot ``j`` holds logical
+# positions [j*ps, (j+1)*ps) -- a sliding-window lane rotates pages at
+# the table level (slot = position mod window), which is safe because
+# the online softmax is permutation-invariant once every slot is live.
+
+
+def _paged_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
+                  m_ref, l_ref, *, scale: float, ps: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _flash_init(acc_ref, m_ref, l_ref)
+
+    kv_len = len_ref[pl.program_id(0)]
+
+    @pl.when(j * ps < kv_len)                  # skip dead pages entirely
+    def _page():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (ps, d)
+        v = v_ref[0, 0].astype(jnp.float32)              # (ps, d)
+        _flash_block(q, k, v, kv_len, j, ps, acc_ref, m_ref, l_ref)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _store():
+        _flash_store(o_ref, acc_ref, l_ref)
+
+
+def decode_attention_paged_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                  v_pages: jnp.ndarray,
+                                  block_tables: jnp.ndarray,
+                                  kv_lengths: jnp.ndarray, *, scale=None,
+                                  interpret: bool = False) -> jnp.ndarray:
+    """Block-table decode attention over a global page pool.
+
+    q: (B, H, D); k_pages/v_pages: (P, Hkv, ps, D); block_tables: (B, T)
+    int32 physical page ids in logical order; kv_lengths: (B,) int32.
+    One grid step streams one page; the table walk is clamped to the
+    last live page, so HBM reads scale with the live context at page
+    granularity.
+    """
+    b, h, d = q.shape
+    _, hkv, ps, _ = k_pages.shape
+    t = block_tables.shape[1]
+    assert h % hkv == 0
+    group = h // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    kernel = functools.partial(_paged_kernel, scale=scale, ps=ps)
+    q4 = q[:, :, None, :]
+
+    def kv_index(bb, hh, j, lens_ref, bt_ref):
+        jj = jnp.minimum(j, _last_live_block(lens_ref, bb, ps))
+        return (bt_ref[bb, jj], hh // group, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda bb, hh, j, lens_ref, bt_ref: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d), kv_index),
+            pl.BlockSpec((1, 1, ps, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, d),
+            lambda bb, hh, j, lens_ref, bt_ref: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(kv_lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+      q4, k_pages, v_pages)[:, :, 0, :]
+
+
+def _paged_q8_kernel(len_ref, bt_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
+                     o_ref, acc_ref, m_ref, l_ref, *, scale: float, ps: int,
+                     qblock: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _flash_init(acc_ref, m_ref, l_ref)
+
+    kv_len = len_ref[pl.program_id(0)]
+
+    @pl.when(j * ps < kv_len)                  # skip dead pages entirely
+    def _page():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = _dequant_tile(kq_ref, ks_ref, qblock)
+        v = _dequant_tile(vq_ref, vs_ref, qblock)
+        _flash_block(q, k, v, kv_len, j, ps, acc_ref, m_ref, l_ref)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _store():
+        _flash_store(o_ref, acc_ref, l_ref)
+
+
+def decode_attention_paged_q8_pallas(q, k_pages, k_scale_pages, v_pages,
+                                     v_scale_pages, block_tables,
+                                     kv_lengths, *, scale=None,
+                                     qblock: int = 32,
+                                     interpret: bool = False):
+    """Paged quantized-KV decode: q8 pages (values AND scales) are
+    fetched through the block table; pages past the live length are
+    never fetched.
+
+    k_pages/v_pages: (P, Hkv, ps, D) int8; scale pages:
+    (P, Hkv, ps/qblock, 1) f32 per-``qblock``-key scales (``qblock``
+    must divide the page size -- pass ``qblock=16`` for the engine's
+    default 16-token pages).  Like the dense q8 kernel, this is the
+    kernel-level artifact for per-block-scale caches; the MODEL's int8
+    paged cache keeps per-token scales and dequantizes at the attention
+    read (``attention_decode_paged``), mirroring the dense int8 path.
+    """
+    b, h, d = q.shape
+    _, hkv, ps, _ = k_pages.shape
+    t = block_tables.shape[1]
+    group = h // hkv
+    assert ps % qblock == 0
+    scale = float(scale if scale is not None else d ** -0.5)
+    srows = ps // qblock
+    kernel = functools.partial(_paged_q8_kernel, scale=scale, ps=ps,
+                               qblock=qblock)
+    q4 = q[:, :, None, :]
+
+    def kv_index(bb, hh, j, lens_ref, bt_ref):
+        jj = jnp.minimum(j, _last_live_block(lens_ref, bb, ps))
+        return (bt_ref[bb, jj], hh // group, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda bb, hh, j, lens_ref, bt_ref: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d), kv_index),
+            pl.BlockSpec((1, 1, srows, 1), kv_index),
+            pl.BlockSpec((1, 1, ps, d), kv_index),
+            pl.BlockSpec((1, 1, srows, 1), kv_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, d),
+            lambda bb, hh, j, lens_ref, bt_ref: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(kv_lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+      q4, k_pages, k_scale_pages, v_pages, v_scale_pages)[:, :, 0, :]
+
+
 # ----------------------------------------------------------------------
 # quantized-KV variant (q8_0 along the key axis)
 # ----------------------------------------------------------------------

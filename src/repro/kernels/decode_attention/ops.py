@@ -13,10 +13,12 @@ import functools
 import jax
 
 from repro.kernels.decode_attention.kernel import (
-    decode_attention_lengthaware_pallas, decode_attention_pallas,
+    decode_attention_lengthaware_pallas, decode_attention_paged_pallas,
+    decode_attention_paged_q8_pallas, decode_attention_pallas,
     decode_attention_q8_lengthaware_pallas, decode_attention_q8_pallas)
-from repro.kernels.decode_attention.ref import (decode_attention_q8_ref,
-                                                decode_attention_ref)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_paged_q8_ref, decode_attention_paged_ref,
+    decode_attention_q8_ref, decode_attention_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bk",
@@ -49,3 +51,35 @@ def decode_attention_q8(q, k_q, k_scale, v_q, v_scale, kv_lengths, *,
                                           interpret=interpret)
     return decode_attention_q8_ref(q, k_q, k_scale, v_q, v_scale, kv_lengths,
                                    qblock=qblock)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def decode_attention_paged(q, k_pages, v_pages, block_tables, kv_lengths, *,
+                           use_pallas: bool = False,
+                           interpret: bool = False):
+    """Block-table decode attention over a global page pool.
+
+    The Pallas path is always length-aware (the table walk is clamped to
+    the last live page); the jnp oracle gathers the pages first.
+    """
+    if use_pallas:
+        return decode_attention_paged_pallas(q, k_pages, v_pages,
+                                             block_tables, kv_lengths,
+                                             interpret=interpret)
+    return decode_attention_paged_ref(q, k_pages, v_pages, block_tables,
+                                      kv_lengths)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_pallas", "interpret", "qblock"))
+def decode_attention_paged_q8(q, k_pages, k_scale_pages, v_pages,
+                              v_scale_pages, block_tables, kv_lengths, *,
+                              use_pallas: bool = False,
+                              interpret: bool = False, qblock: int = 32):
+    if use_pallas:
+        return decode_attention_paged_q8_pallas(
+            q, k_pages, k_scale_pages, v_pages, v_scale_pages,
+            block_tables, kv_lengths, qblock=qblock, interpret=interpret)
+    return decode_attention_paged_q8_ref(
+        q, k_pages, k_scale_pages, v_pages, v_scale_pages, block_tables,
+        kv_lengths, qblock=qblock)

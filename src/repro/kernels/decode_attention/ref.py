@@ -52,3 +52,41 @@ def decode_attention_q8_ref(q, k_q, k_scale, v_q, v_scale, kv_lengths, *,
     k = dequant_kv_q8(k_q, k_scale, qblock)
     v = dequant_kv_q8(v_q, v_scale, qblock)
     return decode_attention_ref(q, k, v, kv_lengths, scale=scale)
+
+
+# ----------------------------------------------------------------------
+# paged (block-table) oracles
+# ----------------------------------------------------------------------
+
+def gather_pages(pages: jnp.ndarray, block_tables: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Materialize each lane's logical KV view from the page pool.
+
+    pages: (P, Hkv, ps, D); block_tables: (B, T) int32 physical page ids
+    in logical order -> (B, Hkv, T*ps, D).  Because the table lists the
+    lane's pages in logical order, the gathered array holds exactly the
+    values a dense per-lane cache would -- the paged-vs-dense parity
+    tests lean on this being an identity up to page naming.
+    """
+    g = pages[block_tables]                    # (B, T, Hkv, ps, D)
+    b, t, hkv, ps, d = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, t * ps, d)
+
+
+def decode_attention_paged_ref(q, k_pages, v_pages, block_tables,
+                               kv_lengths, *, scale=None):
+    """q: (B, H, D); pools (P, Hkv, ps, D); block_tables (B, T)."""
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    return decode_attention_ref(q, k, v, kv_lengths, scale=scale)
+
+
+def decode_attention_paged_q8_ref(q, k_pages, k_scale_pages, v_pages,
+                                  v_scale_pages, block_tables, kv_lengths,
+                                  *, scale=None, qblock: int = 32):
+    """Paged q8 oracle; scale pools are (P, Hkv, ps/qblock, 1)."""
+    k = dequant_kv_q8(gather_pages(k_pages, block_tables),
+                      gather_pages(k_scale_pages, block_tables), qblock)
+    v = dequant_kv_q8(gather_pages(v_pages, block_tables),
+                      gather_pages(v_scale_pages, block_tables), qblock)
+    return decode_attention_ref(q, k, v, kv_lengths, scale=scale)

@@ -7,7 +7,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                decode_attention_paged)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.parallel.sharding import constrain
 from repro.models.common import (ModelConfig, apply_rope, dense_init,
@@ -105,7 +106,11 @@ def attention_decode(p, x: jnp.ndarray, cfg: ModelConfig, k_cache, v_cache,
     k = constrain(apply_rope(k, cos, sin)[:, 0], "batch", None, None)
     v = constrain(v[:, 0], "batch", None, None)
     smax = k_cache.shape[2]
-    slot = cache_len % smax if cfg.sliding_window else cache_len
+    # uniform ring addressing: slot = position mod capacity.  For a
+    # full-context cache positions never wrap (the engine caps length at
+    # smax), so the modulo is the identity; for a window cache it IS the
+    # rotation -- one formula, no sliding-window special case.
+    slot = cache_len % smax
 
     def put(cache, val, i):
         return jax.vmap(
@@ -135,3 +140,63 @@ def attention_decode(p, x: jnp.ndarray, cfg: ModelConfig, k_cache, v_cache,
     if quant:
         return out, k_cache, v_cache, k_scale, v_scale
     return out, k_cache, v_cache
+
+
+def attention_decode_paged(p, x: jnp.ndarray, cfg: ModelConfig, k_pages,
+                           v_pages, block_tables, cache_len,
+                           k_scale_pages=None, v_scale_pages=None):
+    """Single-token decode against a paged KV cache.
+
+    x: (B, 1, d); k_pages/v_pages: (P, Hkv, ps, D) -- one layer's slice
+    of the global page pool; block_tables: (B, T) physical page ids in
+    logical order.  The lane's capacity is ``T*ps`` positions: a
+    sliding-window lane owns a FIXED set of pages and rotates through
+    them at page granularity (slot = position mod T*ps), so the ring
+    write and the block-table gather share one formula with the
+    full-context case.  With ``cfg.kv_quant == "int8"`` the pools are
+    int8 with per-token f32 scale pools (P, Hkv, ps, 1), dequantized at
+    the attention read exactly like the dense cache.
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg)
+    cos, sin = rope_angles(cache_len[:, None], cfg.hd, cfg.rope_theta)
+    q = constrain(apply_rope(q, cos, sin)[:, 0], "batch", None, None)
+    k = constrain(apply_rope(k, cos, sin)[:, 0], "batch", None, None)
+    v = constrain(v[:, 0], "batch", None, None)
+    ps = k_pages.shape[2]
+    t = block_tables.shape[1]
+    cap = t * ps                         # positions the table can back
+    slot = cache_len % cap
+    page = jnp.take_along_axis(block_tables, (slot // ps)[:, None],
+                               axis=1)[:, 0]
+    off = slot % ps
+
+    def put(pool, val):
+        # distinct lanes own distinct pages (allocator invariant), so
+        # the batched scatter writes never collide
+        return pool.at[page, :, off].set(val.astype(pool.dtype))
+
+    quant = cfg.kv_quant == "int8"
+    if quant:
+        kq, ks = quantize_kv_token(k)
+        vq, vs = quantize_kv_token(v)
+        k_pages = put(k_pages, kq)
+        v_pages = put(v_pages, vq)
+        k_scale_pages = put(k_scale_pages, ks)
+        v_scale_pages = put(v_scale_pages, vs)
+        k_eff = k_pages.astype(jnp.float32) * k_scale_pages
+        v_eff = v_pages.astype(jnp.float32) * v_scale_pages
+    else:
+        k_pages = put(k_pages, k)
+        v_pages = put(v_pages, v)
+        k_eff, v_eff = k_pages, v_pages
+    eff_len = jnp.minimum(cache_len + 1, cap)
+    out = decode_attention_paged(q, k_eff, v_eff,
+                                 block_tables.astype(jnp.int32),
+                                 eff_len.astype(jnp.int32),
+                                 use_pallas=cfg.use_pallas)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+    if quant:
+        return out, k_pages, v_pages, k_scale_pages, v_scale_pages
+    return out, k_pages, v_pages

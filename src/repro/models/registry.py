@@ -48,6 +48,15 @@ class Model:
                                               max_len)
         return transformer.init_cache(self.cfg, batch, max_len)
 
+    def init_paged_cache(self, params, batch: int, max_len: int, *,
+                         page_size: int = 16, n_pages=None):
+        """Page-pool decode cache (see transformer.init_paged_cache);
+        enc-dec caches hold cross-attention state and stay dense."""
+        assert not self.cfg.is_encdec, "paged cache: decoder-only families"
+        return transformer.init_paged_cache(self.cfg, batch, max_len,
+                                            page_size=page_size,
+                                            n_pages=n_pages)
+
     def decode_step(self, params, cache, tokens):
         if self.cfg.is_encdec:
             return whisper.whisper_decode_step(params, self.cfg, cache,

@@ -14,8 +14,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import (attention_decode, attention_forward,
-                                    init_attention)
+from repro.models.attention import (attention_decode, attention_decode_paged,
+                                    attention_forward, init_attention)
 from repro.models.common import (ModelConfig, apply_norm, cross_entropy, layer_scan,
                                  embed, init_embedding, init_norm, lm_logits,
                                  split_keys)
@@ -235,9 +235,92 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     return cache
 
 
+#: cache keys that are NOT stacked per layer: ``len`` is per-lane
+#: metadata; ``block_tables`` names pool pages shared by every layer.
+CACHE_SHARED_KEYS = ("len", "block_tables")
+
+
+def paged_capacity(max_len: int, cfg: ModelConfig) -> int:
+    """Positions one lane's block table must back: the window if the
+    config slides, else the full context."""
+    win = cfg.sliding_window
+    return min(max_len, win) if win else max_len
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     page_size: int = 16,
+                     n_pages: Optional[int] = None) -> Params:
+    """Paged decode cache: a global page pool plus per-lane block tables.
+
+    Layout (vs :func:`init_cache`'s dense ``(L, B, Hkv, smax, D)``):
+
+    * ``k_pages``/``v_pages``: ``(L, P, Hkv, ps, D)`` -- one pool shared
+      by all lanes; a physical page holds ``ps`` consecutive positions
+      of ONE lane (all layers use the same page id for a given logical
+      page, so the table is per-lane, not per-layer);
+    * ``block_tables``: ``(B, T)`` int32, lane's physical page ids in
+      logical order (``T = capacity/ps``); rides the scan carry next to
+      ``len``, un-sliced by the layer loop;
+    * int8 adds ``k_scale_pages``/``v_scale_pages`` ``(L, P, Hkv, ps, 1)``
+      per-token scales (same quantization as the dense int8 cache).
+
+    ``n_pages`` defaults to dense-equivalent capacity
+    (``batch * T``); a SERVING caller passes fewer lanes' worth and
+    admission becomes proportional to live KV bytes instead of lanes.
+    SSM/hybrid recurrent state is O(1) per lane and stays dense.
+
+    Block tables initialize to page 0 for every lane: the CALLER owns
+    the lane -> page mapping and must assign disjoint pages before
+    decoding more than one lane (``ServeEngine`` additionally keeps a
+    scratch page for dead lanes, whose frozen-slot writes would
+    otherwise land on re-issued pages).
+    """
+    L = cfg.n_layers
+    cache: Params = {"len": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family != "ssm":
+        s = paged_capacity(max_len, cfg)
+        assert s % page_size == 0, (
+            f"page_size {page_size} must divide cache capacity {s}")
+        bt_width = s // page_size
+        if n_pages is None:
+            n_pages = batch * bt_width
+        cache["block_tables"] = jnp.zeros((batch, bt_width), jnp.int32)
+        kv_shape = (L, n_pages, cfg.n_kv_heads, page_size, cfg.hd)
+        if cfg.kv_quant == "int8":
+            cache["k_pages"] = jnp.zeros(kv_shape, jnp.int8)
+            cache["v_pages"] = jnp.zeros(kv_shape, jnp.int8)
+            sc_shape = (L, n_pages, cfg.n_kv_heads, page_size, 1)
+            cache["k_scale_pages"] = jnp.ones(sc_shape, jnp.float32)
+            cache["v_scale_pages"] = jnp.ones(sc_shape, jnp.float32)
+        else:
+            cache["k_pages"] = jnp.zeros(kv_shape, cfg.compute_dtype)
+            cache["v_pages"] = jnp.zeros(kv_shape, cfg.compute_dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        st = init_mamba2_state(cfg, batch)
+        cache["ssm_h"] = jnp.broadcast_to(
+            st["h"][None], (L,) + st["h"].shape).copy()
+        cache["ssm_conv"] = jnp.broadcast_to(
+            st["conv"][None], (L,) + st["conv"].shape).copy()
+    return cache
+
+
 def _attn_decode(p, h, cfg, layer_cache, cache_len, new_cache,
-                 attn_key="attn"):
-    """Run cached attention, handling the quantized-KV layout."""
+                 attn_key="attn", block_tables=None):
+    """Run cached attention, handling the quantized-KV and paged layouts."""
+    if block_tables is not None:
+        if cfg.kv_quant == "int8":
+            att, kp, vp, ks, vs = attention_decode_paged(
+                p[attn_key], h, cfg, layer_cache["k_pages"],
+                layer_cache["v_pages"], block_tables, cache_len,
+                layer_cache["k_scale_pages"], layer_cache["v_scale_pages"])
+            new_cache.update(k_pages=kp, v_pages=vp, k_scale_pages=ks,
+                             v_scale_pages=vs)
+        else:
+            att, kp, vp = attention_decode_paged(
+                p[attn_key], h, cfg, layer_cache["k_pages"],
+                layer_cache["v_pages"], block_tables, cache_len)
+            new_cache.update(k_pages=kp, v_pages=vp)
+        return att
     if cfg.kv_quant == "int8":
         att, kc, vc, ks, vs = attention_decode(
             p[attn_key], h, cfg, layer_cache["k"], layer_cache["v"],
@@ -252,8 +335,13 @@ def _attn_decode(p, h, cfg, layer_cache, cache_len, new_cache,
 
 
 def block_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig,
-                 layer_cache: Params, cache_len) -> Tuple[jnp.ndarray, Params]:
-    """One-token decode through one block. x: (B, 1, d)."""
+                 layer_cache: Params, cache_len,
+                 block_tables=None) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode through one block. x: (B, 1, d).
+
+    ``block_tables`` (B, T) selects the paged-attention path; the dense
+    per-lane cache path is the pinned parity reference.
+    """
     new_cache = dict(layer_cache)
     h = apply_norm(p["norm1"], x, cfg.norm)
     if cfg.family == "ssm":
@@ -263,7 +351,8 @@ def block_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig,
         new_cache.update(ssm_h=st["h"], ssm_conv=st["conv"])
         return x + y, new_cache
     if cfg.family == "hybrid":
-        att = _attn_decode(p, h, cfg, layer_cache, cache_len, new_cache)
+        att = _attn_decode(p, h, cfg, layer_cache, cache_len, new_cache,
+                           block_tables=block_tables)
         ssm, st = mamba2_decode(p["ssm"], h, cfg,
                                 {"h": layer_cache["ssm_h"],
                                  "conv": layer_cache["ssm_conv"]})
@@ -271,7 +360,8 @@ def block_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig,
         x = x + 0.5 * (att + ssm)
         h2 = apply_norm(p["norm2"], x, cfg.norm)
         return x + swiglu(p["mlp"], h2), new_cache
-    att = _attn_decode(p, h, cfg, layer_cache, cache_len, new_cache)
+    att = _attn_decode(p, h, cfg, layer_cache, cache_len, new_cache,
+                       block_tables=block_tables)
     x = x + att
     h2 = apply_norm(p["norm2"], x, cfg.norm)
     if cfg.family == "moe":
@@ -290,11 +380,14 @@ def lm_decode_step(params: Params, cfg: ModelConfig, cache: Params,
     aliases while-loop carries in place, so the multi-GB KV cache is
     updated without the double buffering a scan-output cache would cost.
     Each layer dynamic-slices its page out of the stack and writes the
-    new token back at its layer index.
+    new token back at its layer index.  A paged cache carries its
+    ``block_tables`` un-sliced next to ``len`` (the table is per-lane,
+    shared by every layer); everything else stacks as before.
     """
     x = embed(params["embed"], tokens[:, None], cfg.compute_dtype)
     cache_len = cache["len"]
-    layer_keys = [k for k in cache if k != "len"]
+    block_tables = cache.get("block_tables")
+    layer_keys = [k for k in cache if k not in CACHE_SHARED_KEYS]
     stack = {k: cache[k] for k in layer_keys}
 
     def body(carry, inp):
@@ -304,7 +397,7 @@ def lm_decode_step(params: Params, cfg: ModelConfig, cache: Params,
             k: jax.lax.dynamic_index_in_dim(stack[k], i, 0, keepdims=False)
             for k in layer_keys}
         x, new_lc = block_decode(layer_params, x, cfg, layer_cache,
-                                 cache_len)
+                                 cache_len, block_tables=block_tables)
         stack = {
             k: jax.lax.dynamic_update_index_in_dim(stack[k], new_lc[k], i, 0)
             for k in layer_keys}
@@ -317,6 +410,8 @@ def lm_decode_step(params: Params, cfg: ModelConfig, cache: Params,
     logits = lm_logits(params["embed"], x[:, 0], cfg)
     new_cache = dict(stack)
     new_cache["len"] = cache_len + 1
+    if block_tables is not None:
+        new_cache["block_tables"] = block_tables
     return logits, new_cache
 
 

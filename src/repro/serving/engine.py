@@ -1,26 +1,41 @@
-"""Serving engine: continuous batching over a fixed-lane KV cache.
+"""Serving engine: continuous batching over a fixed-lane or paged KV cache.
 
 The paper's deployment target is single-board LLM inference; this engine
-is the framework-scale version: a lane-based continuous batcher
-(vLLM-style, fixed lanes instead of paged blocks -- the TPU-friendly
-layout) in front of the model zoo's prefill/decode functions.
+is the framework-scale version: a continuous batcher (vLLM-style) in
+front of the model zoo's prefill/decode functions.
+
+Two cache layouts:
+
+* **fixed-lane** (default, the pinned parity reference): the cache is
+  partitioned as ``n_lanes x max_len`` at construction -- admission
+  capacity is lanes, independent of live context;
+* **paged** (``paged=True``): KV lives in a global page pool governed by
+  :class:`PagePool`; each lane holds a block table of page ids.  Pages
+  are allocated at admission (prompt) and at dispatch boundaries
+  (generation growth), freed at retirement, and admission is gated on
+  free PAGES, not free lanes -- a board's concurrency becomes
+  proportional to actual KV bytes, which is the §6.2 economics argument
+  (1.5 TB/s HBM decode engine, capacity-constrained).  Lane reuse is
+  copy-free: re-admission just rewrites the lane's block-table row.
 
 The decode hot path is host-sync-free:
 
 * ``prefill`` pads prompts to power-of-two buckets (one XLA compile per
   bucket, not per prompt length) and scatters the prompt KV into a free
-  lane;
+  lane (or its pages);
 * ``decode_n`` advances every lane ``dispatch_n`` tokens per Python
   dispatch via a jitted ``lax.scan``: sampling (greedy or temperature)
   happens on device, tokens and done-flags accumulate on device, and one
   host transfer drains the block;
-* lane retirement/admission happens only at dispatch boundaries;
+* lane retirement/admission (and page mapping) happens only at dispatch
+  boundaries;
 * weights can be stored block-quantized (``quantize_params``): the
   bandwidth saving is what the paper's decode evaluation is about.
 
 Sampling keys fold from (request admission index, per-request token
 index), so a request's generated stream -- greedy or temperature -- is
-invariant to dispatch granularity, admission timing, and lane neighbors.
+invariant to dispatch granularity, admission timing, lane neighbors,
+and cache layout (paged vs dense is token-exact).
 """
 
 from __future__ import annotations
@@ -35,7 +50,8 @@ import numpy as np
 
 from repro.models.common import ModelConfig
 from repro.models.registry import Model, build_model
-from repro.models.transformer import (init_cache, lm_prefill_batched,
+from repro.models.transformer import (init_cache, init_paged_cache,
+                                      lm_prefill_batched, paged_capacity,
                                       sample_tokens)
 from repro.quant.quantize import QTensor, dequantize, quantize
 
@@ -80,6 +96,85 @@ def dequantize_params(q_params):
 
 
 # ----------------------------------------------------------------------
+# page-pool allocator
+# ----------------------------------------------------------------------
+
+class PagePool:
+    """Host-side free-list allocator over the global KV page pool.
+
+    Invariants (pinned by the allocator-churn tests):
+
+    * conservation -- ``n_free + n_in_use == n_pages`` at all times;
+    * no double-free / no double-alloc -- page ids move between exactly
+      two disjoint sets;
+    * reservation safety -- ``reserve(n)`` promises ``n`` future
+      ``alloc`` pages; ``available()`` (what admission gates on) never
+      counts pages already promised to admitted requests, so a lane's
+      mid-generation growth cannot fail;
+    * zero fragmentation by construction -- pages are an unordered pool
+      (the block table supplies ordering), so any free page serves any
+      request: the free list can never be "too fragmented to admit".
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self._in_use: set = set()
+        self._reserved = 0
+        self.hwm = 0                 # high-water mark: in-use + reserved
+        self.alloc_count = 0
+        self.free_count = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_in_use(self) -> int:
+        return len(self._in_use)
+
+    def available(self) -> int:
+        """Pages admissible to NEW requests (free minus promised)."""
+        return len(self._free) - self._reserved
+
+    def reserve(self, n: int) -> bool:
+        """Promise ``n`` pages to a request; False if over-committed."""
+        if n > self.available():
+            return False
+        self._reserved += n
+        self.hwm = max(self.hwm, self.n_in_use + self._reserved)
+        return True
+
+    def unreserve(self, n: int) -> None:
+        assert 0 <= n <= self._reserved, "unreserve exceeds reservation"
+        self._reserved -= n
+
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` previously reserved pages off the free list."""
+        assert n <= self._reserved, "alloc without reservation"
+        assert n <= len(self._free), "free list underflow"
+        self._reserved -= n
+        pages = [self._free.pop() for _ in range(n)]
+        self._in_use.update(pages)
+        self.alloc_count += n
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            assert p in self._in_use, f"double free of page {p}"
+            self._in_use.remove(p)
+            self._free.append(p)
+        self.free_count += len(pages)
+
+    def check(self) -> None:
+        """Assert the conservation invariant (test hook)."""
+        assert len(self._free) + len(self._in_use) == self.n_pages
+        assert len(set(self._free)) == len(self._free)
+        assert not self._in_use.intersection(self._free)
+
+
+# ----------------------------------------------------------------------
 # continuous-batching engine
 # ----------------------------------------------------------------------
 
@@ -100,19 +195,33 @@ def _bucket_len(n: int, floor: int = 8) -> int:
     return b
 
 
+#: cache keys holding the shared page pool (no lane axis)
+_POOL_KEYS = ("k_pages", "v_pages", "k_scale_pages", "v_scale_pages")
+#: cache keys indexed by lane on axis 0 (everything else stacks (L, B, ...))
+_LANE0_KEYS = ("len", "block_tables")
+
+
 class ServeEngine:
-    """Fixed-lane continuous batcher around the LM decode step.
+    """Continuous batcher around the LM decode step (fixed-lane or paged).
 
     ``dispatch_n`` is the decode granularity: tokens generated per Python
     dispatch (per lane).  ``stats`` tracks dispatches, decode steps,
     generated tokens, and prefill compiles for the perf regression
-    benches.
+    benches; a paged engine adds page-pool high-water mark and
+    page-blocked admission counts.
+
+    Paged mode: ``n_lanes`` bounds the decode batch width, ``n_pages``
+    bounds KV bytes (default: dense-equivalent, ``n_lanes`` full
+    contexts' worth).  Size ``n_lanes`` above ``n_pages / (max_len /
+    page_size)`` and short-context admission exceeds the dense lane
+    count -- the BENCH_decode paged section measures exactly this.
     """
 
     def __init__(self, cfg: ModelConfig, params, n_lanes: int = 4,
                  max_len: int = 512, temperature: float = 0.0,
                  rng_seed: int = 0, dispatch_n: int = 8,
-                 prefill_bucketing: bool = True):
+                 prefill_bucketing: bool = True, paged: bool = False,
+                 page_size: int = 16, n_pages: Optional[int] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -124,7 +233,40 @@ class ServeEngine:
         self.temperature = float(temperature)
         self.dispatch_n = max(1, dispatch_n)
         self.prefill_bucketing = prefill_bucketing
-        self.cache = init_cache(cfg, n_lanes, max_len)
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        if self.paged:
+            assert not cfg.is_encdec, "paged cache: decoder-only families"
+            if cfg.attn_free:
+                self._bt_width = 0      # O(1) recurrent state, no pages
+            else:
+                self._bt_width = paged_capacity(max_len, cfg) // page_size
+            if n_pages is None:
+                n_pages = n_lanes * self._bt_width
+            assert n_pages >= self._bt_width, (
+                "page pool smaller than one full context: no request "
+                "could ever be admitted")
+            self.pool = PagePool(n_pages, page_size)
+            # one extra physical page the allocator never hands out: a
+            # DEAD lane still steps inside the jitted batch and writes
+            # its (frozen) slot through its block table -- pointing dead
+            # rows at the scratch page keeps that write off pages the
+            # allocator may have re-issued to a live lane
+            self._scratch_page = n_pages
+            self.cache = init_paged_cache(cfg, n_lanes, max_len,
+                                          page_size=page_size,
+                                          n_pages=n_pages + 1)
+            if "block_tables" in self.cache:
+                self.cache["block_tables"] = jnp.full_like(
+                    self.cache["block_tables"], self._scratch_page)
+            self._lane_pages: List[List[int]] = [[] for _ in range(n_lanes)]
+            self._lane_reserved = [0] * n_lanes
+            self._blocked_uids: set = set()
+        else:
+            self.pool = None
+            self._bt_width = 0
+            self.cache = init_cache(cfg, n_lanes, max_len)
+        self._len_host = np.zeros((n_lanes,), np.int64)
         self.lane_req: List[Optional[Request]] = [None] * n_lanes
         base = jax.random.PRNGKey(rng_seed)
         self._rng_decode = jax.random.fold_in(base, 0)
@@ -139,7 +281,9 @@ class ServeEngine:
         self._tok_idx = jnp.zeros((n_lanes,), jnp.int32)
         self._admit_count = 0        # admission counter (key lineages)
         self.stats = {"decode_dispatches": 0, "decode_steps": 0,
-                      "generated_tokens": 0, "prefill_compiles": 0}
+                      "generated_tokens": 0, "prefill_compiles": 0,
+                      "ssm_prefill_compiles": 0, "kv_pages_hwm": 0,
+                      "kv_admit_blocked": 0}
         self._decode = jax.jit(
             lambda p, c, t: self.model.decode_step(p, c, t))
         self._temperature = self.temperature      # captured, see above
@@ -158,6 +302,12 @@ class ServeEngine:
 
         self._prefill = jax.jit(prefill_fn)
 
+        def ssm_prefill_fn(p, lane_cache, tokens, plen):
+            self.stats["ssm_prefill_compiles"] += 1
+            return self._ssm_prefill_scan(p, lane_cache, tokens, plen)
+
+        self._ssm_prefill = jax.jit(ssm_prefill_fn)
+
     def _decode_n_fn(self, params, cache, tokens, rng, remaining,
                      lane_seed, tok_idx, *, n_steps, temperature, len_cap):
         return self.model.decode_n_steps(
@@ -168,11 +318,54 @@ class ServeEngine:
     def free_lanes(self) -> List[int]:
         return [i for i, r in enumerate(self.lane_req) if r is None]
 
+    def _pages_needed(self, positions: int) -> int:
+        """Pages backing ``positions`` cache slots; a sliding-window lane
+        rotates within its fixed ``bt_width`` page set, so the need is
+        capped there."""
+        if self._bt_width == 0:
+            return 0
+        ps = self.page_size
+        return min(-(-int(positions) // ps), self._bt_width)
+
+    def _trunc_plen(self, req: Request) -> int:
+        return min(int(req.prompt.shape[0]), self.max_len - 1)
+
+    def admission_pages(self, req: Request) -> int:
+        """Worst-case page need of ``req`` (prompt + full budget + the
+        trailing write slot) -- what admission gates on."""
+        return self._pages_needed(self._trunc_plen(req)
+                                  + req.max_new_tokens + 1)
+
+    def can_admit(self, req: Request) -> bool:
+        if not self.free_lanes():
+            return False
+        if not self.paged:
+            return True
+        return self.admission_pages(req) <= self.pool.available()
+
     def admit(self, req: Request) -> bool:
         lanes = self.free_lanes()
         if not lanes:
             return False
         lane = lanes[0]
+        if self.paged:
+            need = self.admission_pages(req)
+            if not self.pool.reserve(need):
+                # a lane is free but the KV bytes are not: admission is
+                # gated on pages, the caller retries after retirements.
+                # Counted once per blocked EPISODE (not per retry), so
+                # the stat is dispatch-granularity invariant.
+                if req.uid not in self._blocked_uids:
+                    self._blocked_uids.add(req.uid)
+                    self.stats["kv_admit_blocked"] += 1
+                return False
+            self._blocked_uids.discard(req.uid)
+            self._lane_reserved[lane] = need
+            self._lane_pages[lane] = []
+            # map the prompt's pages (plus the first decode write slot);
+            # generation growth maps the rest at dispatch boundaries
+            self._map_pages(lane, self._pages_needed(
+                self._trunc_plen(req) + 1))
         self._lane_seed = self._lane_seed.at[lane].set(self._admit_count)
         self._tok_idx = self._tok_idx.at[lane].set(0)
         self._prefill_into_lane(req, lane)
@@ -180,6 +373,24 @@ class ServeEngine:
         self._remaining = self._remaining.at[lane].set(req.max_new_tokens)
         self._remaining_host[lane] = req.max_new_tokens
         return True
+
+    def _map_pages(self, lane: int, target: int) -> None:
+        """Grow ``lane``'s block table to ``target`` mapped pages, drawing
+        on the reservation made at admission (which makes this infallible
+        mid-flight).  Lane reuse is copy-free: the row is simply
+        rewritten, pages of the previous occupant were freed at its
+        retirement."""
+        have = len(self._lane_pages[lane])
+        if target <= have:
+            return
+        new = self.pool.alloc(target - have)
+        self._lane_reserved[lane] -= len(new)
+        self._lane_pages[lane].extend(new)
+        self.cache["block_tables"] = (
+            self.cache["block_tables"].at[lane, have:target]
+            .set(jnp.asarray(new, jnp.int32)))
+        self.stats["kv_pages_hwm"] = max(self.stats["kv_pages_hwm"],
+                                         self.pool.hwm)
 
     def _prefill_into_lane(self, req: Request, lane: int) -> None:
         prompt = req.prompt
@@ -191,21 +402,17 @@ class ServeEngine:
         if prompt.shape[0] > limit:
             prompt = prompt[-limit:]
         plen = int(prompt.shape[0])
+        self._len_host[lane] = plen
         bucket = _bucket_len(plen) if self.prefill_bucketing else plen
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :plen] = prompt
         logits, kv = self._prefill(self.params, jnp.asarray(padded),
                                    jnp.asarray([plen - 1], jnp.int32))
         if kv is not None:
-            k, v = kv        # (L, 1, Hkv, S_bucket, D)
-            smax = self.cache["k"].shape[3]
-            take = min(plen, smax)
-            self.cache["k"] = jax.lax.dynamic_update_slice(
-                self.cache["k"], k[:, :, :, plen - take:plen, :].astype(
-                    self.cache["k"].dtype), (0, lane, 0, 0, 0))
-            self.cache["v"] = jax.lax.dynamic_update_slice(
-                self.cache["v"], v[:, :, :, plen - take:plen, :].astype(
-                    self.cache["v"].dtype), (0, lane, 0, 0, 0))
+            if self.paged:
+                self._scatter_prompt_paged(kv, lane, plen)
+            else:
+                self._scatter_prompt_dense(kv, lane, plen)
         if "ssm_h" in self.cache:
             # SSM state is rebuilt by streaming the prompt through the
             # decode path (exactly once, O(len) state updates).
@@ -214,34 +421,151 @@ class ServeEngine:
         self.cache["len"] = self.cache["len"].at[lane].set(plen)
         self._set_first_token(logits, lane)
 
+    def _prompt_kv_views(self, kv, plen: int, smax: int):
+        """Last ``min(plen, smax)`` prompt positions of the prefill KV,
+        laid out at their ring slots (``slot = position mod smax``) and
+        quantized when the cache is int8 (via ``quantize_kv_token``, the
+        same per-(token, head) scales the decode write path uses).
+
+        Returns (entries, take): ``entries`` maps cache key -> a
+        (L, Hkv, take[, pad], ...) array in the cache's dtype.
+        """
+        from repro.models.attention import quantize_kv_token
+
+        k, v = kv                       # (L, 1, Hkv, S_bucket, D)
+        take = min(plen, smax)
+        k = k[:, 0, :, plen - take:plen, :]
+        v = v[:, 0, :, plen - take:plen, :]
+        if take == smax:
+            # window cache and the prompt filled (or wrapped) it: place
+            # position p at slot p % smax, so the decode step's ring
+            # write (same formula) evicts the true oldest position
+            shift = plen % smax
+            if shift:
+                k = jnp.roll(k, shift, axis=2)
+                v = jnp.roll(v, shift, axis=2)
+        if self.cfg.kv_quant == "int8":
+            kq, ks = quantize_kv_token(k)
+            vq, vs = quantize_kv_token(v)
+            return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}, take
+        return {"k": k, "v": v}, take
+
+    def _scatter_prompt_dense(self, kv, lane: int, plen: int) -> None:
+        smax = self.cache["k"].shape[3]
+        entries, take = self._prompt_kv_views(kv, plen, smax)
+        for key, val in entries.items():
+            self.cache[key] = jax.lax.dynamic_update_slice(
+                self.cache[key], val[:, None].astype(self.cache[key].dtype),
+                (0, lane, 0, 0, 0))
+
+    def _scatter_prompt_paged(self, kv, lane: int, plen: int) -> None:
+        """Write the prompt KV into the lane's mapped pages (one
+        dynamic_update_slice per page -- pages are not contiguous in the
+        pool, that is the point)."""
+        ps = self.page_size
+        entries, take = self._prompt_kv_views(kv, plen, ps * self._bt_width)
+        n_pg = -(-take // ps)
+        pad = n_pg * ps - take
+        if pad:
+            entries = {key: jnp.pad(val, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                       for key, val in entries.items()}
+        key_map = {"k": "k_pages", "v": "v_pages",
+                   "k_scale": "k_scale_pages", "v_scale": "v_scale_pages"}
+        for i, page in enumerate(self._lane_pages[lane][:n_pg]):
+            for key, val in entries.items():
+                pk = key_map[key]
+                seg = val[:, None, :, i * ps:(i + 1) * ps]
+                self.cache[pk] = jax.lax.dynamic_update_slice(
+                    self.cache[pk], seg.astype(self.cache[pk].dtype),
+                    (0, page, 0, 0, 0))
+
     def _set_first_token(self, logits: jnp.ndarray, lane: int) -> None:
         key = jax.random.fold_in(self._rng_prefill, self._admit_count)
         self._admit_count += 1
         tok = sample_tokens(logits, key, self._temperature)[0]
         self._next_token = self._next_token.at[lane].set(tok)
 
+    def _slice_lane_cache(self, lane: int) -> Dict[str, jnp.ndarray]:
+        """One lane's view of the cache: per-lane state is sliced to
+        batch 1; the shared page pool passes through whole (the lane's
+        block-table row names its pages)."""
+        out = {}
+        for key, x in self.cache.items():
+            if key in _POOL_KEYS:
+                out[key] = x
+            elif key in _LANE0_KEYS:
+                out[key] = x[lane:lane + 1]
+            else:
+                out[key] = x[:, lane:lane + 1]
+        return out
+
+    def _merge_lane_cache(self, lane_cache: Dict[str, jnp.ndarray],
+                          lane: int) -> None:
+        for key, x in lane_cache.items():
+            if key in _POOL_KEYS:
+                self.cache[key] = x
+            elif key in _LANE0_KEYS:
+                self.cache[key] = self.cache[key].at[lane].set(x[0])
+            else:
+                self.cache[key] = jax.lax.dynamic_update_slice(
+                    self.cache[key], x, (0, lane) + (0,) * (x.ndim - 2))
+
+    def _ssm_prefill_scan(self, params, lane_cache, tokens, plen):
+        """Prompt streaming as ONE ``lax.scan`` over a shape bucket.
+
+        The recurrent families have no batched cache-build path, so the
+        prompt must flow through the decode step; doing it eagerly cost
+        one host dispatch per prompt token.  Here the padded bucket is
+        scanned on device with *state masking*: a pad position computes
+        a decode step but its per-lane state update (length, recurrent
+        state, lane KV) is discarded, so the carry after the scan equals
+        the eager per-token stream exactly, and the logits captured at
+        ``plen - 1`` are the real last-token logits.  Shared page pools
+        are deliberately NOT masked (a pool-wide select per position
+        would stream the whole pool ``bucket`` times): a pad step writes
+        its garbage token at the frozen slot ``plen`` -- exactly where
+        the first real decode token writes next, and nothing surviving
+        the mask reads it first.  One compile per bucket, one dispatch
+        per prompt.
+        """
+        logits0 = jnp.zeros((1, self.cfg.padded_vocab), jnp.float32)
+
+        def body(carry, inp):
+            cache, logits = carry
+            tok, idx = inp
+            live = idx < plen
+            new_logits, new_cache = self.model.decode_step(
+                params, cache, tok[None])
+            cache = {
+                key: (new_cache[key] if key in _POOL_KEYS
+                      else jax.tree_util.tree_map(
+                          lambda new, old: jnp.where(live, new, old),
+                          new_cache[key], cache[key]))
+                for key in cache}
+            logits = jnp.where(idx == plen - 1, new_logits, logits)
+            return (cache, logits), None
+
+        (lane_cache, logits), _ = jax.lax.scan(
+            body, (lane_cache, logits0),
+            (tokens, jnp.arange(tokens.shape[0], dtype=jnp.int32)))
+        return logits, lane_cache
+
     def _stream_ssm_prompt(self, prompt: np.ndarray, lane: int) -> None:
-        lane_cache = jax.tree_util.tree_map(
-            lambda x: x[:, lane:lane + 1] if x.ndim > 1 else x[lane:lane + 1],
-            self.cache)
+        lane_cache = self._slice_lane_cache(lane)
         lane_cache["len"] = jnp.zeros((1,), jnp.int32)
         # a re-admitted lane must NOT inherit the previous request's
         # recurrent state (init_mamba2_state is all-zeros)
         for key in ("ssm_h", "ssm_conv"):
             if key in lane_cache:
                 lane_cache[key] = jnp.zeros_like(lane_cache[key])
-        logits = None
-        for t in prompt:
-            logits, lane_cache = self._decode(
-                self.params, lane_cache, jnp.asarray([t], jnp.int32))
-
-        def put(full, one):
-            if one.ndim > 1:
-                return jax.lax.dynamic_update_slice(
-                    full, one, (0, lane) + (0,) * (one.ndim - 2))
-            return full.at[lane].set(one[0])
-
-        self.cache = jax.tree_util.tree_map(put, self.cache, lane_cache)
+        plen = int(prompt.shape[0])
+        bucket = _bucket_len(plen) if self.prefill_bucketing else plen
+        padded = np.zeros((bucket,), np.int32)
+        padded[:plen] = prompt
+        logits, lane_cache = self._ssm_prefill(
+            self.params, lane_cache, jnp.asarray(padded),
+            jnp.asarray(plen, jnp.int32))
+        self._merge_lane_cache(lane_cache, lane)
         self._set_first_token(logits, lane)
 
     # -- stepping ----------------------------------------------------------
@@ -263,6 +587,14 @@ class ServeEngine:
         if not live:
             return {}
         n = self._dispatch_size(n)
+        if self.paged:
+            # map the pages this block can write into BEFORE the jitted
+            # dispatch (the scan itself never touches the allocator);
+            # the admission-time reservation makes this infallible
+            for lane in live:
+                steps = min(n, int(self._remaining_host[lane]))
+                self._map_pages(lane, self._pages_needed(
+                    int(self._len_host[lane]) + steps + 1))
         (toks, valid, self._next_token, self.cache, self._remaining,
          self._tok_idx) = self._decode_n(
             self.params, self.cache, self._next_token, self._rng_decode,
@@ -280,6 +612,10 @@ class ServeEngine:
             req.generated.extend(seq)
             out[req.uid] = seq
             self.stats["generated_tokens"] += len(seq)
+            # the lane's device-side length advanced once per valid
+            # sample (exhausted lanes freeze it), so the host mirror
+            # tracks it without an extra transfer
+            self._len_host[lane] += len(seq)
             if self._remaining_host[lane] <= 0:
                 req.done = True
                 self.lane_req[lane] = None
@@ -287,6 +623,20 @@ class ServeEngine:
                 # cache length so the length-aware kernel pins a single
                 # key block instead of streaming the stale context.
                 self.cache["len"] = self.cache["len"].at[lane].set(0)
+                self._len_host[lane] = 0
+                if self.paged:
+                    # free at retirement, and point the dead row at the
+                    # scratch page: its ids may be re-issued to another
+                    # lane, but the dead lane keeps stepping (and
+                    # writing its frozen slot) until re-admission
+                    self.pool.free(self._lane_pages[lane])
+                    self.pool.unreserve(self._lane_reserved[lane])
+                    self._lane_pages[lane] = []
+                    self._lane_reserved[lane] = 0
+                    if "block_tables" in self.cache:
+                        self.cache["block_tables"] = (
+                            self.cache["block_tables"].at[lane]
+                            .set(self._scratch_page))
         return out
 
     def decode_step(self) -> Dict[int, int]:
@@ -303,6 +653,11 @@ class ServeEngine:
         pending = list(requests)
         while pending or any(r is not None for r in self.lane_req):
             while pending and self.free_lanes():
-                self.admit(pending.pop(0))
+                if not self.admit(pending[0]):
+                    # paged: a lane is free but the pages are not --
+                    # wait for retirements to refill the pool (a single
+                    # request always fits an empty engine, see __init__)
+                    break
+                pending.pop(0)
             self.decode_n(dispatch_n)
         return requests
