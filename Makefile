@@ -6,6 +6,8 @@
 # so a fleet-sim or model change gets feedback in seconds, not minutes.
 # `make test-paged` runs only the paged KV-cache layer (kernel/engine/
 # allocator invariants) -- the quick loop when touching the paged path.
+# `make test-preempt` runs the preemption/migration layer (checkpoint
+# exactness, allocator churn under eviction, fleet migration).
 # `make bench-smoke` runs the measured decode-path bench on a tiny config
 # and emits BENCH_decode.json (tokens/s, dispatches/token, bytes/token,
 # and the paged section: admission capacity, paged-vs-dense token parity,
@@ -16,7 +18,7 @@
 PYTEST := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest
 PYRUN  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast test-paged bench bench-smoke
+.PHONY: test test-fast test-paged test-preempt bench bench-smoke
 
 test:
 	$(PYTEST) -x -q
@@ -26,6 +28,9 @@ test-fast:
 
 test-paged:
 	$(PYTEST) -q -m paged
+
+test-preempt:
+	$(PYTEST) -q -m preempt
 
 bench:
 	$(PYRUN) -m benchmarks.run

@@ -14,8 +14,9 @@ from __future__ import annotations
 from typing import List
 
 from benchmarks.common import Row
-from repro.fleet import (FleetSim, LengthDist, NodeSpec, bursty_trace,
-                         constant_trace, fleet_from_plan)
+from repro.fleet import (FleetSim, LengthDist, NodeSpec, PreemptionPolicy,
+                         bursty_trace, constant_trace, fleet_from_plan,
+                         poisson_trace)
 from repro.serving import Workload, plan_fleet
 
 WL = Workload(prompt_len=512, gen_len=128, fmt="q8_0")
@@ -62,7 +63,42 @@ def rows() -> List[Row]:
                    f"sim={steady.requests_per_s:.2f}req/s "
                    f"plan={plan.requests_per_s:.2f}req/s "
                    f"ratio={steady.requests_per_s / plan.requests_per_s:.3f}"))
+    out.extend(preemption_rows())
     return out
+
+
+def preemption_rows() -> List[Row]:
+    """Page-exhaustion preemption relieving a saturated board.
+
+    One decode board gets a page pool too small for its lane count (its
+    KV grows over-committed mid-trace and spills over the PCIe 1.1 x4
+    host link at ~1000x HBM cost); a peer board has headroom.  With
+    migration enabled the router sheds the longest resident decodes to
+    the peer, paying the page-granular transfer instead of the spill.
+    """
+    specs = [NodeSpec("a100-40g", 1, "prefill"),
+             NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                      kv_pool_pages=40, page_size=16),
+             NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                      kv_pool_pages=512, page_size=16)]
+    trace = poisson_trace(3.0, 40.0, seed=2,
+                          prompt=LengthDist(256, cv=0.3),
+                          gen=LengthDist(128, cv=0.5))
+    base = FleetSim(specs, trace, fmt=WL.fmt).run()
+    mig = FleetSim(specs, trace, fmt=WL.fmt,
+                   preemption=PreemptionPolicy()).run()
+    return [
+        Row("fleet_preempt[spill_no_migration]", 0.0,
+            f"completed={base.completed}/{base.offered} "
+            f"tpot_p99={base.tpot_p99_s * 1e3:.2f}ms "
+            f"preemptions={base.preemptions}"),
+        Row("fleet_preempt[page_exhaustion_migration]", 0.0,
+            f"completed={mig.completed}/{mig.offered} "
+            f"tpot_p99={mig.tpot_p99_s * 1e3:.2f}ms "
+            f"preemptions={mig.preemptions} "
+            f"pages_migrated={mig.pages_migrated} "
+            f"tpot_p99_gain={base.tpot_p99_s / mig.tpot_p99_s:.2f}x"),
+    ]
 
 
 def execution_replay_rows(dispatch_n: int = 8) -> List[Row]:

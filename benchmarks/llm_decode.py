@@ -28,6 +28,14 @@ mean live context (paged admits by bytes, dense by lanes), token-exact
 parity of the paged engine, and bytes-read/token parity of the
 block-table kernel vs the length-aware dense kernel at full occupancy
 (``make bench-smoke`` gates on <= 10%).
+
+The ``migration`` section exercises evict-and-replay preemption on the
+paged engine (checkpoint a lane mid-decode, release its pages, restore
+through the normal reserve/alloc route): resumed greedy AND temperature
+streams must be token-exact vs the unpreempted run, and the
+transfer-cost model prices ``ceil(ctx/page_size)`` pages over the CMP
+170HX's PCIe 1.1 x4 host link (``make bench-smoke`` gates on resume
+exactness and non-zero migration counters).
 """
 
 from __future__ import annotations
@@ -229,6 +237,63 @@ def paged_metrics(cfg, params, prompts, *, n_lanes: int, max_len: int,
     }
 
 
+def migration_metrics(cfg, params, *, n_lanes: int, max_len: int,
+                      max_new: int, dispatch_n: int,
+                      page_size: int) -> dict:
+    """Preemption / migration section of BENCH_decode.json.
+
+    Replays one trace through the paged engine with evict-and-replay
+    churn injected at every dispatch boundary (greedy AND temperature)
+    and diffs the token streams against the unpreempted run -- the
+    resumed RNG stream must be bit-identical.  The transfer-cost model
+    prices what the fleet pays per move: ``ceil(ctx/page_size)`` pages
+    over the CMP 170HX's PCIe 1.1 x4 host link.
+    """
+    from repro.core.device_profile import CMP_170HX_NOFMA
+    from repro.core.perf_model import QWEN25_1P5B
+    from repro.fleet.execution import validate_preemption_exactness
+    from repro.fleet.workload import FleetRequest
+    from repro.serving import kv_handoff_seconds
+
+    trace = [FleetRequest(uid=i, arrival_s=0.1 * i, prompt_len=5 + i,
+                          gen_len=max_new) for i in range(2 * n_lanes)]
+    kw = dict(n_lanes=n_lanes, max_len=max_len, dispatch_n=dispatch_n,
+              page_size=page_size)
+    greedy = validate_preemption_exactness(trace, cfg, params,
+                                           preempt_every=1, **kw)
+    temp = validate_preemption_exactness(trace, cfg, params,
+                                         preempt_every=1,
+                                         temperature=0.8, **kw)
+
+    # page-granular transfer over the host link (per migrated context)
+    spec = QWEN25_1P5B
+    link = CMP_170HX_NOFMA.total_interconnect_gbps()
+    transfer = {}
+    for ctx in (128, 512, 2048):
+        pages = -(-ctx // page_size)
+        transfer[f"ctx={ctx}"] = {
+            "pages": pages,
+            "mbytes": round(pages * page_size
+                            * spec.kv_bytes_per_token() / 1e6, 2),
+            "transfer_ms": round(kv_handoff_seconds(
+                CMP_170HX_NOFMA, pages * page_size, spec) * 1e3, 2),
+        }
+    return {
+        "preempt_every": 1,
+        "preemptions": greedy["preemptions"],
+        "restores": greedy["restores"],
+        "pages_migrated": greedy["pages_migrated"],
+        "resume_token_exact": {"greedy": greedy["resume_exact"],
+                               "temperature": temp["resume_exact"]},
+        "transfer_model": {
+            "page_size": page_size,
+            "kv_bytes_per_token": spec.kv_bytes_per_token(),
+            "host_link_gbps": link,
+            "per_context": transfer,
+        },
+    }
+
+
 def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
                         max_len: int = 64, prompt_len: int = 8,
                         max_new: int = 16, n_requests: int = 8,
@@ -328,6 +393,10 @@ def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
         "paged": paged_metrics(cfg, params, prompts, n_lanes=n_lanes,
                                max_len=max_len, max_new=max_new,
                                dispatch_n=dispatch_n, page_size=bk),
+        "migration": migration_metrics(cfg, params, n_lanes=n_lanes,
+                                       max_len=max_len, max_new=max_new,
+                                       dispatch_n=dispatch_n,
+                                       page_size=bk),
     }
 
 
@@ -371,7 +440,17 @@ def main(argv=None) -> int:
               "lengthaware_bytes_per_token"]
           < rec["bytes_read_per_token"]["25%"]["masked_bytes_per_token"]
           and paged_ok)
+    mig = rec.get("migration", {})
+    mig_ok = (
+        bool(mig)
+        and mig["resume_token_exact"]["greedy"]
+        and mig["resume_token_exact"]["temperature"]
+        and mig["preemptions"] > 0
+        and mig["restores"] == mig["preemptions"]
+        and mig["pages_migrated"] > 0)
+    ok = ok and mig_ok
     print("BENCH_decode paged section:", "PASS" if paged_ok else "FAIL")
+    print("BENCH_decode migration section:", "PASS" if mig_ok else "FAIL")
     print("BENCH_decode:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

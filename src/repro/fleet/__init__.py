@@ -30,11 +30,13 @@ real `ServeEngine` to validate token accounting).
 
 from repro.fleet.autoscale import QueueDepthAutoscaler
 from repro.fleet.execution import (ExecutionResult, run_trace_on_engine,
+                                   validate_preemption_exactness,
                                    validate_token_accounting)
 from repro.fleet.node import SimNode
 from repro.fleet.router import (CostAwareRouter, LeastLoadedRouter, Router,
                                 SLOAwareRouter)
-from repro.fleet.sim import (FleetReport, FleetSim, NodeSpec, RequestRecord,
+from repro.fleet.sim import (FleetReport, FleetSim, NodeSpec,
+                             PreemptionPolicy, RequestRecord,
                              fleet_from_plan)
 from repro.fleet.workload import (FleetRequest, LengthDist, bursty_trace,
                                   constant_trace, diurnal_trace,
@@ -42,9 +44,11 @@ from repro.fleet.workload import (FleetRequest, LengthDist, bursty_trace,
 
 __all__ = [
     "QueueDepthAutoscaler", "ExecutionResult", "run_trace_on_engine",
-    "validate_token_accounting", "SimNode", "CostAwareRouter",
+    "validate_preemption_exactness", "validate_token_accounting",
+    "SimNode", "CostAwareRouter",
     "LeastLoadedRouter", "Router", "SLOAwareRouter", "FleetReport",
-    "FleetSim", "NodeSpec", "RequestRecord", "fleet_from_plan",
+    "FleetSim", "NodeSpec", "PreemptionPolicy", "RequestRecord",
+    "fleet_from_plan",
     "FleetRequest", "LengthDist", "bursty_trace", "constant_trace",
     "diurnal_trace", "poisson_trace",
 ]

@@ -17,6 +17,7 @@ simulated served-token totals must equal the engine's exactly.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Dict, Optional, Sequence
 
 import numpy as np
@@ -49,6 +50,12 @@ class ExecutionResult:
     decode_steps: int = 0
     kv_pages_hwm: int = 0
     kv_spill_events: int = 0
+    #: mid-decode evictions / checkpoint re-admissions / KV pages that
+    #: crossed an evict->restore cycle during the replay (all zero when
+    #: the replay runs without preemption injection)
+    preemptions: int = 0
+    restores: int = 0
+    pages_migrated: int = 0
 
 
 def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
@@ -57,7 +64,10 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
                         seed: int = 0,
                         dispatch_n: int = 8,
                         paged: bool = False, page_size: int = 16,
-                        n_pages: Optional[int] = None) -> ExecutionResult:
+                        n_pages: Optional[int] = None,
+                        temperature: float = 0.0,
+                        preempt_every: Optional[int] = None
+                        ) -> ExecutionResult:
     """Serve ``trace`` through the real continuous batcher.
 
     Prompt token ids are derived deterministically from the request uid,
@@ -66,6 +76,14 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
     the replayed token counts are dispatch-size invariant.  ``paged``
     replays through the page-pool cache (token counts are layout
     invariant; the page stats are what changes).
+
+    ``preempt_every`` (paged only) injects evict-and-replay churn: at
+    every k-th dispatch boundary the live lane with the LONGEST context
+    is evicted into a :class:`~repro.serving.engine.LaneCheckpoint` and
+    held until the pool re-admits it -- the execution-backed analogue of
+    a fleet migration, minus the wire.  Token counts (and the token
+    streams themselves, see ``validate_preemption_exactness``) must be
+    preemption invariant.
     """
     vocab = vocab_size or cfg.vocab_size
     rng = np.random.default_rng(seed)
@@ -76,8 +94,16 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
             for r in sorted(trace, key=lambda r: (r.arrival_s, r.uid))]
     engine = ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
                          dispatch_n=dispatch_n, paged=paged,
-                         page_size=page_size, n_pages=n_pages)
-    engine.run(reqs)
+                         page_size=page_size, n_pages=n_pages,
+                         temperature=temperature)
+    if preempt_every is None:
+        engine.run(reqs)
+    else:
+        assert paged, "preemption replay needs the paged engine"
+        _run_with_preemption(engine, reqs, preempt_every)
+    if paged:
+        engine.pool.check()
+        assert engine.pool.n_in_use == 0, "replay leaked KV pages"
     gen_by_uid = {r.uid: len(r.generated) for r in reqs}
     return ExecutionResult(
         prompt_tokens=sum(len(r.prompt) for r in reqs),
@@ -86,7 +112,86 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
         decode_dispatches=engine.stats["decode_dispatches"],
         decode_steps=engine.stats["decode_steps"],
         kv_pages_hwm=engine.stats["kv_pages_hwm"],
-        kv_spill_events=engine.stats["kv_admit_blocked"])
+        kv_spill_events=engine.stats["kv_admit_blocked"],
+        preemptions=engine.stats["preemptions"],
+        restores=engine.stats["restores"],
+        pages_migrated=engine.stats["pages_migrated"])
+
+
+def _run_with_preemption(engine: ServeEngine, reqs, every: int) -> None:
+    """Continuous batching with periodic evict-and-replay.
+
+    Held checkpoints have strict re-admission priority over fresh
+    requests (an evicted request must not starve behind the queue it
+    was serving ahead of).  An empty engine always fits one checkpoint
+    -- restore needs at most a full context, the pool's guaranteed
+    minimum -- so the loop cannot wedge.
+    """
+    pending = list(reqs)
+    held: deque = deque()
+    blocks = 0
+    while pending or held or engine.live_lanes():
+        while held and engine.restore(held[0]):
+            held.popleft()
+        if not held:
+            while pending and engine.free_lanes():
+                if not engine.admit(pending[0]):
+                    break
+                pending.pop(0)
+        if not engine.live_lanes():
+            raise RuntimeError("preemption replay made no progress")
+        engine.decode_n()
+        blocks += 1
+        if blocks % every == 0:
+            live = engine.live_lanes()
+            if live:
+                lane = max(live, key=lambda i: (engine.lane_context(i), -i))
+                held.append(engine.evict(lane))
+
+
+def validate_preemption_exactness(trace: Sequence[FleetRequest],
+                                  cfg: ModelConfig, params,
+                                  preempt_every: int = 2,
+                                  **kw) -> Dict[str, object]:
+    """Replay ``trace`` with and without evict-and-replay churn and diff
+    the TOKEN STREAMS (not just counts): a migrated request must resume
+    bit-identically.  Returns the diff plus the preemption counters."""
+    kw = dict(kw, paged=True)
+    vocab = kw.pop("vocab_size", None) or cfg.vocab_size
+
+    def streams(preempt):
+        rng = np.random.default_rng(kw.get("seed", 0))
+        reqs = [Request(uid=r.uid,
+                        prompt=rng.integers(0, vocab, r.prompt_len,
+                                            dtype=np.int32),
+                        max_new_tokens=r.gen_len)
+                for r in sorted(trace, key=lambda r: (r.arrival_s, r.uid))]
+        engine = ServeEngine(cfg, params,
+                             n_lanes=kw.get("n_lanes", 2),
+                             max_len=kw.get("max_len", 64),
+                             dispatch_n=kw.get("dispatch_n", 8),
+                             paged=True,
+                             page_size=kw.get("page_size", 16),
+                             n_pages=kw.get("n_pages"),
+                             temperature=kw.get("temperature", 0.0))
+        if preempt:
+            _run_with_preemption(engine, reqs, preempt_every)
+        else:
+            engine.run(reqs)
+        engine.pool.check()
+        return {r.uid: tuple(r.generated) for r in reqs}, engine.stats
+
+    base, _ = streams(False)
+    moved, stats = streams(True)
+    mismatches = {uid: (base[uid], moved[uid]) for uid in base
+                  if base[uid] != moved[uid]}
+    return {
+        "resume_exact": not mismatches,
+        "mismatches": mismatches,
+        "preemptions": stats["preemptions"],
+        "restores": stats["restores"],
+        "pages_migrated": stats["pages_migrated"],
+    }
 
 
 def simulated_token_accounting(sim: FleetSim,

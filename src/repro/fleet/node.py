@@ -117,6 +117,10 @@ class SimNode:
         self.draining = False
         self.available_at = 0.0   # cold-start: unroutable before this
         self.inbound_inflight = 0  # KV transfers en route to this node
+        # pages promised to migrations still crossing the link: counted
+        # against free capacity so a burst of evictions cannot route
+        # more contexts here than the pool can hold when they land
+        self.inbound_pages = 0
         # accounting
         self.energy_active_j = 0.0   # above-idle joules
         self.prefill_busy_s = 0.0
@@ -125,6 +129,9 @@ class SimNode:
         self.kv_pages_hwm = 0        # peak page occupancy observed
         self.kv_spill_events = 0     # over-commit transitions
         self._spilled = False
+        self.preemptions = 0         # slots evicted mid-decode here
+        self.pages_migrated_out = 0  # KV pages shipped off this board
+        self.pages_migrated_in = 0   # KV pages landed from elsewhere
 
     # ------------------------------------------------------------------
     # phase-estimate caches
@@ -209,11 +216,12 @@ class SimNode:
         return sum(self._slot_pages(s) for s in self.decode_active.values())
 
     def kv_pages_free(self) -> int:
-        """Free pages (negative when over-committed); unbounded when no
-        pool is configured."""
+        """Free pages net of in-flight migration reservations (negative
+        when over-committed); unbounded when no pool is configured."""
         if self.kv_pool_pages is None:
             return 1 << 30
-        return self.kv_pool_pages - self.kv_pages_in_use()
+        return (self.kv_pool_pages - self.kv_pages_in_use()
+                - self.inbound_pages)
 
     def kv_bytes_free(self) -> float:
         """Router-facing capacity in BYTES, the paged-cache currency."""
@@ -229,6 +237,56 @@ class SimNode:
         ctx = prompt_len + gen_len // 2
         need = -(-ctx // self.page_size) if ctx > 0 else 0
         return max(need - self.kv_pages_free(), 0)
+
+    # ------------------------------------------------------------------
+    # preemption / migration: page-granular KV transfer over the host link
+    # ------------------------------------------------------------------
+    def migration_pages(self, context: int) -> int:
+        """Pages a migration must ship for a live ``context`` -- KV
+        moves in page units (``ceil(ctx / page_size)``), the same
+        transfer unit the engine's :class:`LaneCheckpoint` captures."""
+        return max(-(-int(context) // self.page_size), 1)
+
+    def kv_page_transfer_s(self, n_pages: int,
+                           peer: Optional[DeviceProfile] = None) -> float:
+        """Seconds to move ``n_pages`` of KV over the host link,
+        bottlenecked by the slower endpoint when ``peer`` is given --
+        on the CMP 170HX both directions are strangled by the PCIe 1.1
+        x4 link (~1 GB/s), which is the whole migration trade-off."""
+        return kv_handoff_seconds(self.profile, n_pages * self.page_size,
+                                  self.spec, peer=peer)
+
+    def preempt_slot(self, uid: int, now: float) -> DecodeSlot:
+        """Evict a resident slot mid-stream: advance everyone to ``now``
+        first so the slot leaves with its exact token progress, then
+        remove it (promoting queued work into the freed lane)."""
+        self.decode_advance(now)
+        # queued slots occupy no pages and are never migration victims
+        assert uid in self.decode_active, f"preempt of non-resident {uid}"
+        slot = self.decode_active.pop(uid)
+        while (self.decode_queue
+               and len(self.decode_active) < self.decode_lanes):
+            nxt = self.decode_queue.popleft()
+            self.decode_active[nxt.uid] = nxt
+        self.decode_version += 1
+        self.preemptions += 1
+        self._note_occupancy()
+        return slot
+
+    def resume_slot(self, slot: DecodeSlot) -> DecodeSlot:
+        """Clone a preempted slot for residence HERE: identity and token
+        progress carry over; the per-step compute/KV costs are
+        re-estimated for this board at the resumed mid-generation
+        context (the remaining tokens' steady-state view)."""
+        done = int(slot.tokens_done)
+        ctx = slot.prompt_len + done + max(slot.gen_len - done, 0) // 2
+        t_comp, _, t_kv, dyn_j = self._decode_parts(max(ctx, 1))
+        return DecodeSlot(uid=slot.uid, gen_len=slot.gen_len,
+                          t_comp_s=t_comp, t_kv_s=t_kv,
+                          dyn_j_per_tok=dyn_j,
+                          prompt_len=slot.prompt_len,
+                          tokens_done=slot.tokens_done,
+                          t_first_token=slot.t_first_token)
 
     def _spill_factor(self) -> float:
         """Multiplier on the KV-stream term when over-committed: the

@@ -47,6 +47,14 @@ def kv_capacity_penalty(record, node: SimNode) -> float:
     return 1e9 * over if over else 0.0
 
 
+def kv_migration_penalty(ctx: int, remaining: float,
+                         node: SimNode) -> float:
+    """Same page-capacity penalty, expressed for a mid-stream slot
+    (live context + remaining budget) instead of a fresh request."""
+    over = node.kv_overcommit(ctx, int(remaining))
+    return 1e9 * over if over else 0.0
+
+
 class Router:
     """Base policy; subclasses override the two scoring hooks."""
 
@@ -71,6 +79,37 @@ class Router:
         return min(cands, key=lambda n: (self._decode_score(record, src, n,
                                                             now),
                                          n is not src, n.node_id))
+
+    def route_migration(self, slot, src: SimNode,
+                        nodes: Sequence[SimNode], now: float):
+        """Pick the board a preempted slot resumes on, or ``None``.
+
+        Migration is only worth its page traffic when the destination
+        actually has capacity: the score is the page-granular transfer
+        time over the bottleneck host link (``ceil(ctx/page_size)``
+        pages, the same units the engine checkpoint ships) plus the
+        remaining decode time at the destination's current sharing
+        level, with the page-capacity penalty on top.  A destination
+        whose own pool cannot hold the context is refused outright --
+        shipping KV into another over-committed board trades one spill
+        for two plus a transfer.
+        """
+        cands = [n for n in decode_candidates(nodes) if n is not src]
+        if not cands:
+            return None
+        ctx = slot.prompt_len + int(slot.tokens_done)
+        remaining = max(slot.gen_len - slot.tokens_done, 0.0)
+        n_pg = src.migration_pages(ctx)
+
+        def score(n: SimNode) -> float:
+            return (src.kv_page_transfer_s(n_pg, peer=n.profile)
+                    + remaining * n.est_decode_step_s(ctx, extra=1)
+                    + kv_migration_penalty(ctx, remaining, n))
+
+        best = min(cands, key=lambda n: (score(n), n.node_id))
+        if best.kv_overcommit(ctx, int(remaining)) > 0:
+            return None
+        return best
 
     # -- scoring hooks (lower wins) ------------------------------------
     def _prefill_score(self, record, node: SimNode, now: float) -> float:

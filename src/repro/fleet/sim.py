@@ -60,6 +60,29 @@ def fleet_from_plan(plan: FleetPlan, decode_lanes: int = 1) -> List[NodeSpec]:
             for a in plan.assignments]
 
 
+@dataclasses.dataclass(frozen=True)
+class PreemptionPolicy:
+    """When the fleet evicts a live decode and replays it elsewhere.
+
+    * ``on_page_exhaustion`` -- whenever a board's page pool goes
+      over-committed (its KV would spill over the PCIe 1.1 x4 host
+      link at ~1000x HBM cost), shed resident decodes -- largest
+      remaining work first, the "long decode" of the power-capping
+      motivation -- until the pool fits or no destination will take
+      them;
+    * ``straggler_factor`` -- at every decode event, migrate a slot
+      whose predicted completion HERE exceeds ``factor`` x its
+      predicted completion on the best peer INCLUDING the page
+      transfer time (None disables);
+    * ``max_migrations_per_request`` -- thrash bound: a request that
+      has already moved this many times is pinned where it is.
+    """
+
+    on_page_exhaustion: bool = True
+    straggler_factor: Optional[float] = None
+    max_migrations_per_request: int = 1
+
+
 @dataclasses.dataclass
 class RequestRecord:
     """Per-request timeline collected by the simulator."""
@@ -73,6 +96,7 @@ class RequestRecord:
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
     energy_j: float = 0.0
+    preemptions: int = 0      # times this request was evicted mid-decode
 
     @property
     def done(self) -> bool:
@@ -108,11 +132,15 @@ class FleetReport:
     joules_per_request: float   # mean solo-cost attribution (completed)
     usd_per_hour: float
     usd_per_mtok: float
+    preemptions: int = 0        # mid-decode evictions across the fleet
+    pages_migrated: int = 0     # KV pages shipped between boards
     scale_events: Tuple[str, ...] = ()
+    preempt_events: Tuple[str, ...] = ()
 
     def metrics(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
         d.pop("scale_events")
+        d.pop("preempt_events")
         return d
 
 
@@ -127,7 +155,8 @@ class FleetSim:
                  tpot_slo_s: Optional[float] = None,
                  power_usd_per_kwh: float = 0.10,
                  amortization_years: float = 3.0,
-                 autoscaler=None):
+                 autoscaler=None,
+                 preemption: Optional[PreemptionPolicy] = None):
         self.fmt = fmt
         self.spec = spec
         self.router = router or LeastLoadedRouter()
@@ -147,6 +176,9 @@ class FleetSim:
         self.records = [RequestRecord(req=r) for r in trace]
         self._slot_rec: Dict[Tuple[str, int], RequestRecord] = {}
         self.scale_events: List[str] = []
+        self.preemption = preemption
+        self.preempt_events: List[str] = []
+        self._migrations: Dict[int, int] = {}   # uid -> moves so far
         self._heap: List[tuple] = []
         self._seq = 0
 
@@ -251,14 +283,101 @@ class FleetSim:
                               rec.req.gen_len)
         self._slot_rec[(node.node_id, rec.req.uid)] = rec
         node.decode_admit(slot, now)
+        self._maybe_preempt(node, now)
         self._schedule_decode(node, now)
 
     def _on_decode(self, node: SimNode, version: int, now: float) -> None:
         if version != node.decode_version or node not in self.nodes:
             return                          # stale membership snapshot
         self._finish(node, node.decode_advance(now), now)
+        self._maybe_preempt(node, now)
         self._schedule_decode(node, now)
         self._maybe_reap(node, now)
+
+    # -- preemption & KV-page migration --------------------------------
+    def _movable(self, node: SimNode) -> List:
+        """Resident slots eligible for eviction, most remaining work
+        first (deterministic: ties break on uid)."""
+        cap = (self.preemption.max_migrations_per_request
+               if self.preemption else 0)
+        slots = [s for s in node.decode_active.values()
+                 if self._migrations.get(s.uid, 0) < cap]
+        return sorted(slots, key=lambda s: (-(s.gen_len - s.tokens_done),
+                                            s.uid))
+
+    def _maybe_preempt(self, node: SimNode, now: float) -> None:
+        """Apply the preemption policy to ``node`` after its decode
+        state changed: shed slots while the page pool is over-committed,
+        and (optionally) rescue stragglers a peer would finish sooner
+        despite paying the page transfer."""
+        pol = self.preemption
+        if pol is None or node not in self.nodes:
+            return
+        if pol.on_page_exhaustion:
+            while node.kv_pages_free() < 0:
+                moved = False
+                for slot in self._movable(node):
+                    dst = self.router.route_migration(
+                        slot, node, self._routable(now), now)
+                    if dst is not None:
+                        self._migrate(node, slot, dst, now)
+                        moved = True
+                        break
+                if not moved:       # nowhere to shed to: spill and bear it
+                    break
+        if pol.straggler_factor is not None:
+            for slot in self._movable(node):
+                remaining = slot.gen_len - slot.tokens_done
+                if remaining <= 0:
+                    continue
+                t_here = remaining * node.est_decode_step_s(
+                    slot.prompt_len + int(slot.tokens_done), extra=0)
+                dst = self.router.route_migration(
+                    slot, node, self._routable(now), now)
+                if dst is None:
+                    continue
+                ctx = slot.prompt_len + int(slot.tokens_done)
+                t_there = (node.kv_page_transfer_s(
+                    node.migration_pages(ctx), peer=dst.profile)
+                    + remaining * dst.est_decode_step_s(ctx, extra=1))
+                if t_here > pol.straggler_factor * t_there:
+                    self._migrate(node, slot, dst, now)
+
+    def _migrate(self, src: SimNode, slot, dst: SimNode,
+                 now: float) -> None:
+        """Evict ``slot`` from ``src`` and replay it on ``dst`` after
+        its KV pages cross the host link (the request is in flight --
+        nobody decodes it -- for the whole transfer)."""
+        src.preempt_slot(slot.uid, now)
+        ctx = slot.prompt_len + int(slot.tokens_done)
+        n_pg = src.migration_pages(ctx)
+        transfer_s = src.kv_page_transfer_s(n_pg, peer=dst.profile)
+        src.pages_migrated_out += n_pg
+        rec = self._slot_rec.pop((src.node_id, slot.uid))
+        rec.preemptions += 1
+        self._migrations[slot.uid] = self._migrations.get(slot.uid, 0) + 1
+        dst.inbound_inflight += 1      # blocks reaping until KV lands
+        dst.inbound_pages += n_pg      # reserves capacity while in flight
+        self._push(now + transfer_s, "migrate_enter",
+                   (dst, slot, rec, n_pg))
+        self.preempt_events.append(
+            f"t={now:.2f}s uid={slot.uid} {src.node_id} -> {dst.node_id} "
+            f"pages={n_pg} transfer={transfer_s * 1e3:.1f}ms")
+        self._schedule_decode(src, now)
+        self._maybe_reap(src, now)
+
+    def _on_migrate_enter(self, dst: SimNode, slot, rec: RequestRecord,
+                          n_pg: int, now: float) -> None:
+        dst.inbound_inflight -= 1
+        dst.inbound_pages -= n_pg      # reservation becomes occupancy
+        dst.pages_migrated_in += n_pg
+        rec.decode_node = dst.node_id
+        self._finish(dst, dst.decode_advance(now), now)
+        resumed = dst.resume_slot(slot)
+        self._slot_rec[(dst.node_id, resumed.uid)] = rec
+        dst.decode_admit(resumed, now)
+        self._maybe_preempt(dst, now)
+        self._schedule_decode(dst, now)
 
     def _finish(self, node: SimNode, slots, now: float) -> None:
         for slot in slots:
@@ -292,6 +411,9 @@ class FleetSim:
                 self._on_decode_enter(payload[0], payload[1], now)
             elif kind == "decode":
                 self._on_decode(payload[0], payload[1], now)
+            elif kind == "migrate_enter":
+                self._on_migrate_enter(payload[0], payload[1], payload[2],
+                                       payload[3], now)
             elif kind == "autoscale":
                 self._on_autoscale(now)
         return self._report(makespan=now)
@@ -344,4 +466,9 @@ class FleetSim:
             joules_per_request=(sum(r.energy_j for r in done) / len(done)
                                 if done else float("nan")),
             usd_per_hour=usd_hour, usd_per_mtok=usd_per_mtok,
-            scale_events=tuple(self.scale_events))
+            preemptions=sum(n.preemptions
+                            for n in self.nodes + self.retired),
+            pages_migrated=sum(n.pages_migrated_out
+                               for n in self.nodes + self.retired),
+            scale_events=tuple(self.scale_events),
+            preempt_events=tuple(self.preempt_events))

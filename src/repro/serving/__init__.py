@@ -1,13 +1,15 @@
 from repro.serving.disaggregation import (FleetPlan, PoolAssignment,
                                           homogeneous_baseline, plan_fleet)
-from repro.serving.engine import (PagePool, Request, ServeEngine,
-                                  dequantize_params, quantize_params)
+from repro.serving.engine import (LaneCheckpoint, PagePool, Request,
+                                  ServeEngine, dequantize_params,
+                                  quantize_params)
 from repro.serving.phase_model import (Workload, capex_usd_per_hour,
                                        effective_prefill_tps,
                                        energy_usd_per_hour,
                                        kv_handoff_seconds, phase_tps)
 
-__all__ = ["FleetPlan", "PagePool", "PoolAssignment", "Workload",
+__all__ = ["FleetPlan", "LaneCheckpoint", "PagePool", "PoolAssignment",
+           "Workload",
            "homogeneous_baseline", "plan_fleet", "Request", "ServeEngine",
            "dequantize_params", "quantize_params", "phase_tps",
            "kv_handoff_seconds", "effective_prefill_tps",

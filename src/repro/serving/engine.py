@@ -187,6 +187,59 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class LaneCheckpoint:
+    """Host-side snapshot of one live lane, taken at a dispatch boundary.
+
+    Everything a request needs to resume BIT-IDENTICALLY -- on this
+    engine or another one built with the same config, ``rng_seed`` and
+    ``temperature``:
+
+    * ``req`` -- the request itself (uid, prompt, tokens generated so
+      far keep accumulating in place across engines);
+    * ``lane_seed`` / ``tok_idx`` -- the sampling identity: the stream
+      is a pure function of (key lineage, token index), so restoring
+      both replays the exact RNG stream the request would have drawn;
+    * ``next_token`` -- the already-sampled token the next decode step
+      consumes (sampled before eviction, must not be re-drawn);
+    * ``remaining`` / ``ctx_len`` -- generation budget left and live
+      context length;
+    * ``kv_pages`` -- the lane's live KV pages gathered from the pool
+      through its block table, in logical order ``(L, n_pages, Hkv,
+      ps[, D|1])`` per pool key (int8 caches carry their scale pages);
+      the engine's scratch page is never captured;
+    * ``ssm_state`` -- recurrent per-lane state for ssm/hybrid families.
+
+    The payload is plain numpy: it is exactly what a fleet would ship
+    over the host link, ``ceil(ctx/page_size)`` pages at a time.
+    """
+
+    req: Request
+    lane_seed: int
+    tok_idx: int
+    remaining: int
+    ctx_len: int
+    next_token: int
+    page_size: int
+    kv_pages: Dict[str, np.ndarray]
+    ssm_state: Dict[str, np.ndarray]
+
+    @property
+    def uid(self) -> int:
+        return self.req.uid
+
+    @property
+    def n_pages(self) -> int:
+        for v in self.kv_pages.values():
+            return int(v.shape[1])
+        return 0
+
+    def nbytes(self) -> int:
+        """Bytes a migration must move over the link (KV + state)."""
+        return sum(int(v.nbytes) for v in self.kv_pages.values()) + sum(
+            int(v.nbytes) for v in self.ssm_state.values())
+
+
 def _bucket_len(n: int, floor: int = 8) -> int:
     """Smallest power-of-two >= n (>= floor) -- the prefill shape bucket."""
     b = floor
@@ -283,7 +336,8 @@ class ServeEngine:
         self.stats = {"decode_dispatches": 0, "decode_steps": 0,
                       "generated_tokens": 0, "prefill_compiles": 0,
                       "ssm_prefill_compiles": 0, "kv_pages_hwm": 0,
-                      "kv_admit_blocked": 0}
+                      "kv_admit_blocked": 0, "preemptions": 0,
+                      "restores": 0, "pages_migrated": 0}
         self._decode = jax.jit(
             lambda p, c, t: self.model.decode_step(p, c, t))
         self._temperature = self.temperature      # captured, see above
@@ -332,9 +386,14 @@ class ServeEngine:
 
     def admission_pages(self, req: Request) -> int:
         """Worst-case page need of ``req`` (prompt + full budget + the
-        trailing write slot) -- what admission gates on."""
-        return self._pages_needed(self._trunc_plen(req)
-                                  + req.max_new_tokens + 1)
+        trailing write slot) -- what admission gates on.  The worst case
+        is CLAMPED to ``max_len`` positions: generation stops at the
+        ``len_cap`` regardless of budget, so a request whose budget
+        exceeds the cache must not demand more pages than the cache can
+        ever back (it could otherwise never be admitted)."""
+        worst = min(self._trunc_plen(req) + req.max_new_tokens + 1,
+                    self.max_len)
+        return self._pages_needed(worst)
 
     def can_admit(self, req: Request) -> bool:
         if not self.free_lanes():
@@ -618,26 +677,143 @@ class ServeEngine:
             self._len_host[lane] += len(seq)
             if self._remaining_host[lane] <= 0:
                 req.done = True
-                self.lane_req[lane] = None
-                # a retired lane is DEAD until re-admission: zero its
-                # cache length so the length-aware kernel pins a single
-                # key block instead of streaming the stale context.
-                self.cache["len"] = self.cache["len"].at[lane].set(0)
-                self._len_host[lane] = 0
-                if self.paged:
-                    # free at retirement, and point the dead row at the
-                    # scratch page: its ids may be re-issued to another
-                    # lane, but the dead lane keeps stepping (and
-                    # writing its frozen slot) until re-admission
-                    self.pool.free(self._lane_pages[lane])
-                    self.pool.unreserve(self._lane_reserved[lane])
-                    self._lane_pages[lane] = []
-                    self._lane_reserved[lane] = 0
-                    if "block_tables" in self.cache:
-                        self.cache["block_tables"] = (
-                            self.cache["block_tables"].at[lane]
-                            .set(self._scratch_page))
+                self._release_lane(lane)
         return out
+
+    def _release_lane(self, lane: int) -> None:
+        """Return a lane to the DEAD state (retirement and eviction both
+        end here): zero its cache length so the length-aware kernel pins
+        a single key block instead of streaming the stale context, free
+        its pages, and point the dead block-table row at the scratch
+        page -- its page ids may be re-issued to another lane, but the
+        dead lane keeps stepping (and writing its frozen slot) until
+        re-admission."""
+        self.lane_req[lane] = None
+        self.cache["len"] = self.cache["len"].at[lane].set(0)
+        self._len_host[lane] = 0
+        if self.paged:
+            self.pool.free(self._lane_pages[lane])
+            self.pool.unreserve(self._lane_reserved[lane])
+            self._lane_pages[lane] = []
+            self._lane_reserved[lane] = 0
+            if "block_tables" in self.cache:
+                self.cache["block_tables"] = (
+                    self.cache["block_tables"].at[lane]
+                    .set(self._scratch_page))
+
+    # -- preemption: evict-and-replay checkpointing ------------------------
+    def live_lanes(self) -> List[int]:
+        return [i for i, r in enumerate(self.lane_req) if r is not None]
+
+    def lane_context(self, lane: int) -> int:
+        """Live context length of ``lane`` (host mirror, no sync)."""
+        return int(self._len_host[lane])
+
+    def evict(self, lane: int) -> LaneCheckpoint:
+        """Checkpoint and release a live lane at a dispatch boundary.
+
+        The checkpoint captures the request, its sampling identity
+        (``lane_seed``, ``tok_idx``), the pre-sampled next token, and
+        the lane's live KV pages gathered from the pool through its
+        block table -- everything :meth:`restore` needs to resume the
+        exact token stream, here or on another engine built with the
+        same config / ``rng_seed`` / ``temperature``.  The lane's pages
+        return to the pool immediately (that is the point: a page-
+        exhausted board sheds the decode without losing its tokens).
+
+        The scratch page is dead-lane plumbing, not request state: it is
+        never captured, never freed, never migrated.
+        """
+        assert self.paged, "evict/restore: paged engines only"
+        req = self.lane_req[lane]
+        assert req is not None, f"evict of idle lane {lane}"
+        pages = list(self._lane_pages[lane])
+        assert self._scratch_page not in pages, \
+            "scratch page leaked into a live block table"
+        idx = jnp.asarray(pages, jnp.int32)
+        kv = {key: jnp.take(self.cache[key], idx, axis=1)
+              for key in _POOL_KEYS if key in self.cache}
+        ssm = {key: self.cache[key][:, lane]
+               for key in ("ssm_h", "ssm_conv") if key in self.cache}
+        kv, ssm, nxt, seed, idx_t = jax.device_get(
+            (kv, ssm, self._next_token[lane], self._lane_seed[lane],
+             self._tok_idx[lane]))
+        ckpt = LaneCheckpoint(
+            req=req, lane_seed=int(seed), tok_idx=int(idx_t),
+            remaining=int(self._remaining_host[lane]),
+            ctx_len=int(self._len_host[lane]), next_token=int(nxt),
+            page_size=self.page_size,
+            kv_pages={k: np.asarray(v) for k, v in kv.items()},
+            ssm_state={k: np.asarray(v) for k, v in ssm.items()})
+        # the evicted lane is DEAD: freeze its budget so a dispatch that
+        # runs before re-admission samples only invalid tokens for it
+        self._remaining = self._remaining.at[lane].set(0)
+        self._remaining_host[lane] = 0
+        self._release_lane(lane)
+        self.stats["preemptions"] += 1
+        return ckpt
+
+    def restore_pages(self, ckpt: LaneCheckpoint) -> int:
+        """Pages :meth:`restore` will reserve for ``ckpt`` -- the
+        checkpointed pages plus headroom for the remaining budget,
+        clamped (like admission) to what the cache can back."""
+        worst = min(ckpt.ctx_len + ckpt.remaining + 1, self.max_len)
+        return max(self._pages_needed(worst), ckpt.n_pages)
+
+    def can_restore(self, ckpt: LaneCheckpoint) -> bool:
+        if not self.free_lanes():
+            return False
+        return self.restore_pages(ckpt) <= self.pool.available()
+
+    def restore(self, ckpt: LaneCheckpoint) -> bool:
+        """Re-admit a checkpointed request through the normal
+        reserve/alloc route and scatter its pages into a fresh block
+        table.  Returns False when no lane or pages are available (the
+        caller retries after retirements, exactly like admission).
+
+        Restoration does NOT consume an admission index: the lane
+        inherits the checkpoint's ``lane_seed``/``tok_idx``, so the
+        resumed RNG stream continues bit-identically, and the first
+        resumed step consumes the checkpoint's pre-sampled token
+        instead of re-sampling from a prefill.
+        """
+        assert self.paged, "evict/restore: paged engines only"
+        assert ckpt.page_size == self.page_size, \
+            "checkpoint page size does not match this engine"
+        lanes = self.free_lanes()
+        if not lanes:
+            return False
+        lane = lanes[0]
+        need = self.restore_pages(ckpt)
+        if not self.pool.reserve(need):
+            if ckpt.uid not in self._blocked_uids:
+                self._blocked_uids.add(ckpt.uid)
+                self.stats["kv_admit_blocked"] += 1
+            return False
+        self._blocked_uids.discard(ckpt.uid)
+        self._lane_reserved[lane] = need
+        self._lane_pages[lane] = []
+        self._map_pages(lane, ckpt.n_pages)
+        for i, page in enumerate(self._lane_pages[lane]):
+            for key, val in ckpt.kv_pages.items():
+                seg = jnp.asarray(val[:, i:i + 1])
+                self.cache[key] = jax.lax.dynamic_update_slice(
+                    self.cache[key], seg.astype(self.cache[key].dtype),
+                    (0, page, 0, 0, 0))
+        for key, val in ckpt.ssm_state.items():
+            self.cache[key] = self.cache[key].at[:, lane].set(
+                jnp.asarray(val))
+        self.cache["len"] = self.cache["len"].at[lane].set(ckpt.ctx_len)
+        self._len_host[lane] = ckpt.ctx_len
+        self._lane_seed = self._lane_seed.at[lane].set(ckpt.lane_seed)
+        self._tok_idx = self._tok_idx.at[lane].set(ckpt.tok_idx)
+        self._next_token = self._next_token.at[lane].set(ckpt.next_token)
+        self._remaining = self._remaining.at[lane].set(ckpt.remaining)
+        self._remaining_host[lane] = ckpt.remaining
+        self.lane_req[lane] = ckpt.req
+        self.stats["restores"] += 1
+        self.stats["pages_migrated"] += ckpt.n_pages
+        return True
 
     def decode_step(self) -> Dict[int, int]:
         """Single-token compatibility wrapper; returns {uid: token}."""
@@ -659,5 +835,17 @@ class ServeEngine:
                     # request always fits an empty engine, see __init__)
                     break
                 pending.pop(0)
+            if not any(r is not None for r in self.lane_req):
+                # the head request was refused with NOTHING in flight:
+                # no retirement can ever free a lane or a page, so the
+                # loop would spin on no-op dispatches forever.  Fail
+                # loudly instead of livelocking.
+                head = pending[0]
+                raise RuntimeError(
+                    f"request uid={head.uid} can never be admitted "
+                    f"(n_lanes={self.n_lanes}, "
+                    + (f"need={self.admission_pages(head)} pages of "
+                       f"{self.pool.n_pages}" if self.paged else "dense")
+                    + ") and no request is in flight to retire")
             self.decode_n(dispatch_n)
         return requests

@@ -1,0 +1,387 @@
+"""Preemption & KV-page migration: evict-and-replay end to end.
+
+Four layers of invariants:
+
+* engine -- a lane evicted mid-decode and restored (same engine or a
+  fresh one with the same config/seed) produces the EXACT token stream
+  of an unpreempted run, for greedy and temperature sampling, dense and
+  int8 KV caches, and the hybrid (attention + SSM) family;
+* allocator -- PagePool conservation / no-double-free across
+  evict->migrate->restore churn, and the scratch page is never
+  allocated, captured, or remapped;
+* admission -- worst-case page need is clamped to what the cache can
+  back (over-budget requests stay admissible), and ``run()`` fails
+  loudly instead of livelocking when the head request can never be
+  admitted;
+* fleet -- the simulator migrates page-granular KV over the host link
+  deterministically: page-exhaustion preemption relieves a saturated
+  board, and the execution replay's token accounting is preemption
+  invariant.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Request, ServeEngine
+
+pytestmark = pytest.mark.preempt
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen2.5-1.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+            for n in lens]
+
+
+def _reqs(prompts, max_new):
+    return [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+
+
+ENGINE_KW = dict(n_lanes=2, max_len=32, dispatch_n=4, paged=True,
+                 page_size=8, rng_seed=7)
+
+
+def _drain(*engines):
+    """Decode every engine until all its lanes retire."""
+    for eng in engines:
+        while eng.live_lanes():
+            eng.decode_n()
+
+
+# ----------------------------------------------------------------------
+# engine: evict -> restore token exactness
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.9])
+@pytest.mark.parametrize("kv_quant", [None, "int8"])
+@pytest.mark.parametrize("cross_engine", [False, True])
+def test_evict_restore_token_exact(small_model, temperature, kv_quant,
+                                   cross_engine):
+    """Mid-decode eviction + restore reproduces the unpreempted stream
+    bit-identically -- the checkpoint carries the sampling identity
+    (lane_seed, tok_idx) and the pre-sampled next token, so the RNG
+    lineage continues instead of restarting."""
+    cfg, params = small_model
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=kv_quant)
+    prompts = _prompts(cfg, [5, 9], seed=1)
+    kw = dict(ENGINE_KW, temperature=temperature)
+
+    base = _reqs(prompts, 12)
+    eng = ServeEngine(cfg, params, **kw)
+    eng.run(base)
+
+    reqs = _reqs(prompts, 12)
+    src = ServeEngine(cfg, params, **kw)
+    for r in reqs:
+        assert src.admit(r)
+    src.decode_n()                       # 4 tokens into each stream
+    ckpt = src.evict(0)
+    src.decode_n()                       # lane 1 advances alone
+    dst = ServeEngine(cfg, params, **kw) if cross_engine else src
+    assert dst.restore(ckpt)
+    _drain(src, dst)
+
+    assert [r.generated for r in reqs] == [r.generated for r in base]
+    src.pool.check()
+    dst.pool.check()
+    assert src.pool.n_in_use == 0 and dst.pool.n_in_use == 0
+    assert src.stats["preemptions"] == 1
+    assert dst.stats["restores"] == 1
+    assert dst.stats["pages_migrated"] == ckpt.n_pages > 0
+
+
+def test_evict_restore_hybrid_ssm_state(small_model):
+    """Hybrid family: the checkpoint must carry the recurrent SSM state
+    alongside the KV pages, or the resumed stream diverges."""
+    cfg = get_config("hymba-1.5b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, [6, 7], seed=5)
+
+    base = _reqs(prompts, 8)
+    ServeEngine(cfg, params, **ENGINE_KW).run(base)
+
+    reqs = _reqs(prompts, 8)
+    eng = ServeEngine(cfg, params, **ENGINE_KW)
+    for r in reqs:
+        assert eng.admit(r)
+    eng.decode_n()
+    ckpt = eng.evict(1)
+    assert ckpt.ssm_state                  # recurrent state captured
+    eng.decode_n()
+    assert eng.restore(ckpt)
+    _drain(eng)
+    assert [r.generated for r in reqs] == [r.generated for r in base]
+    eng.pool.check()
+
+
+def test_checkpoint_is_host_side_and_sized(small_model):
+    """The checkpoint payload is numpy (shippable) and its page count is
+    exactly ceil((ctx+1)/page_size) -- the fleet's transfer unit."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, **ENGINE_KW)
+    req = Request(uid=0, prompt=_prompts(cfg, [9], seed=2)[0],
+                  max_new_tokens=8)
+    assert eng.admit(req)
+    eng.decode_n()
+    ctx = eng.lane_context(0)
+    ckpt = eng.evict(0)
+    assert ckpt.ctx_len == ctx == 9 + 4
+    assert all(isinstance(v, np.ndarray) for v in ckpt.kv_pages.values())
+    assert ckpt.n_pages == -(-(ctx + 1) // eng.page_size)
+    assert ckpt.nbytes() > 0
+    assert ckpt.remaining == 4
+
+
+# ----------------------------------------------------------------------
+# allocator: churn + scratch-page invariants
+# ----------------------------------------------------------------------
+
+def test_pagepool_conservation_across_evict_restore_churn(small_model):
+    """Evict->hold->restore cycles injected into admit/retire churn:
+    conservation holds at every dispatch boundary, nothing double-frees,
+    the pool drains to empty, and the scratch page never enters the
+    allocator, a checkpoint, or a mapped table row."""
+    cfg, params = small_model
+    pool = 6
+    eng = ServeEngine(cfg, params, n_lanes=3, max_len=32, dispatch_n=4,
+                      paged=True, page_size=8, n_pages=pool)
+    scratch = eng._scratch_page
+    rng = np.random.default_rng(4)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 3 + (i % 7),
+                                        dtype=np.int32),
+                    max_new_tokens=2 + (i % 5))
+            for i in range(14)]
+    pending = list(reqs)
+    held = []
+    blocks = 0
+    while pending or held or eng.live_lanes():
+        while held and eng.restore(held[0]):
+            held.pop(0)
+        if not held:
+            while pending and eng.free_lanes():
+                if not eng.admit(pending[0]):
+                    break
+                pending.pop(0)
+        if eng.live_lanes():
+            eng.decode_n()
+        blocks += 1
+        if blocks % 2 == 0 and eng.live_lanes():
+            lane = max(eng.live_lanes(), key=eng.lane_context)
+            held.append(eng.evict(lane))
+        eng.pool.check()                   # conservation every block
+        assert eng.pool.hwm <= pool
+        for lane_pages in eng._lane_pages:
+            assert scratch not in lane_pages
+    assert all(r.done for r in reqs)
+    assert [len(r.generated) for r in reqs] == [2 + (i % 5)
+                                                for i in range(14)]
+    assert eng.pool.n_in_use == 0 and eng.pool.n_free == pool
+    assert eng.pool.alloc_count == eng.pool.free_count > 0
+    assert eng.stats["preemptions"] == eng.stats["restores"] > 0
+
+
+def test_scratch_page_never_migrates(small_model):
+    """Eviction gathers only allocator-issued pages; restore maps only
+    allocator-issued pages; freed lanes point at the scratch row."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, **ENGINE_KW)
+    scratch = eng._scratch_page
+    reqs = _reqs(_prompts(cfg, [9, 7], seed=7), 8)
+    for r in reqs:
+        assert eng.admit(r)
+    eng.decode_n()
+    ckpt = eng.evict(0)
+    # the evicted lane's table row is parked on the scratch page
+    assert bool(np.all(np.asarray(eng.cache["block_tables"][0]) == scratch))
+    assert eng.restore(ckpt)
+    mapped = np.asarray(eng.cache["block_tables"][0][:ckpt.n_pages])
+    assert scratch not in mapped
+    assert set(mapped.tolist()) == set(eng._lane_pages[0])
+    _drain(eng)
+    eng.pool.check()
+
+
+# ----------------------------------------------------------------------
+# admission clamp + run() no-progress guard
+# ----------------------------------------------------------------------
+
+def test_admission_pages_clamped_to_cache_capacity(small_model):
+    """A budget far beyond max_len must not demand more pages than the
+    cache can ever back: generation stops at the len cap, so the
+    worst-case need is _pages_needed(max_len) and the request stays
+    admissible on a pool of exactly one full context."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, n_lanes=2, max_len=32, dispatch_n=4,
+                      paged=True, page_size=8, n_pages=4)
+    req = Request(uid=0, prompt=_prompts(cfg, [5], seed=3)[0],
+                  max_new_tokens=10_000)
+    assert eng.admission_pages(req) == eng._pages_needed(eng.max_len) == 4
+    assert eng.can_admit(req)
+    eng.run([req])
+    assert req.done
+    assert len(req.generated) == eng.max_len - 1 - 5   # stopped at cap
+    eng.pool.check()
+
+
+def test_run_raises_instead_of_livelock(small_model):
+    """An engine that can NEVER admit the head request (nothing in
+    flight to retire) must raise, not spin on no-op dispatches."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, n_lanes=0, max_len=32, dispatch_n=4)
+    req = Request(uid=0, prompt=_prompts(cfg, [5], seed=3)[0],
+                  max_new_tokens=4)
+    with pytest.raises(RuntimeError, match="never be admitted"):
+        eng.run([req])
+
+
+def test_decode_n_skips_dispatch_with_no_live_lanes(small_model):
+    """No live lanes -> no device dispatch (and no stats movement)."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, **ENGINE_KW)
+    before = dict(eng.stats)
+    assert eng.decode_n() == {}
+    assert eng.stats == before
+
+
+# ----------------------------------------------------------------------
+# fleet: page-granular migration over the host link
+# ----------------------------------------------------------------------
+
+def _saturated_fleet():
+    from repro.fleet import NodeSpec
+    return [NodeSpec("a100-40g", 1, "prefill"),
+            NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                     kv_pool_pages=40, page_size=16),
+            NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                     kv_pool_pages=512, page_size=16)]
+
+
+def _tail_trace():
+    from repro.fleet import poisson_trace
+    from repro.fleet.workload import LengthDist
+    return poisson_trace(3.0, 40.0, seed=2, prompt=LengthDist(256, cv=0.3),
+                         gen=LengthDist(128, cv=0.5))
+
+
+def test_fleet_page_exhaustion_migration_relieves_saturated_node():
+    """With migration on, the board whose pool over-commits sheds its
+    longest decodes to the peer with page headroom: preemptions happen,
+    pages move, every request still completes, and the per-token tail
+    improves (paying ~ms of page transfer instead of the ~1000x host-
+    link spill on every step)."""
+    from repro.fleet import FleetSim, PreemptionPolicy
+
+    trace = _tail_trace()
+    base = FleetSim(_saturated_fleet(), trace, fmt="q8_0").run()
+    sim = FleetSim(_saturated_fleet(), trace, fmt="q8_0",
+                   preemption=PreemptionPolicy())
+    mig = sim.run()
+    assert base.preemptions == 0 and base.pages_migrated == 0
+    assert mig.preemptions > 0
+    assert mig.pages_migrated > 0
+    assert mig.completed == mig.offered
+    assert mig.tpot_p99_s < base.tpot_p99_s
+    assert len(mig.preempt_events) == mig.preemptions
+    # per-record accounting agrees with the fleet-level counter
+    assert sum(r.preemptions for r in sim.records) == mig.preemptions
+    # in-flight page reservations all landed and were released
+    assert all(n.inbound_pages == 0 and n.inbound_inflight == 0
+               for n in sim.nodes + sim.retired)
+
+
+def test_fleet_migration_deterministic():
+    from repro.fleet import FleetSim, PreemptionPolicy
+
+    trace = _tail_trace()
+    r1 = FleetSim(_saturated_fleet(), trace, fmt="q8_0",
+                  preemption=PreemptionPolicy()).run()
+    r2 = FleetSim(_saturated_fleet(), trace, fmt="q8_0",
+                  preemption=PreemptionPolicy()).run()
+    assert r1.metrics() == r2.metrics()
+    assert r1.preempt_events == r2.preempt_events
+
+
+def test_migration_transfer_time_is_page_granular():
+    """The sim charges ceil(ctx/page_size) pages through the bottleneck
+    host link -- the same arithmetic the engine checkpoint ships."""
+    from repro.core.device_profile import get_profile
+    from repro.fleet import SimNode
+    from repro.serving import kv_handoff_seconds
+
+    cmp_prof = get_profile("cmp-170hx-nofma")
+    node = SimNode("n0", cmp_prof, "decode", "q8_0", page_size=16)
+    assert node.migration_pages(1) == 1
+    assert node.migration_pages(16) == 1
+    assert node.migration_pages(17) == 2
+    assert node.migration_pages(260) == 17
+    t = node.kv_page_transfer_s(17, peer=get_profile("a100-40g"))
+    assert t == pytest.approx(
+        kv_handoff_seconds(cmp_prof, 17 * 16, node.spec,
+                           peer=get_profile("a100-40g")))
+    # 17 pages x 16 tok x ~28.7KB/tok over ~1 GB/s: milliseconds, and
+    # strictly worse over the CMP's own link than over the A100's
+    assert node.kv_page_transfer_s(17) >= t
+
+
+def test_straggler_policy_bounded_by_migration_cap():
+    """straggler_factor migrates at most max_migrations_per_request
+    times per uid -- no ping-pong."""
+    from repro.fleet import FleetSim, PreemptionPolicy
+
+    trace = _tail_trace()
+    pol = PreemptionPolicy(on_page_exhaustion=True, straggler_factor=1.5,
+                           max_migrations_per_request=1)
+    rep = FleetSim(_saturated_fleet(), trace, fmt="q8_0",
+                   preemption=pol).run()
+    assert rep.completed == rep.offered
+    per_uid = {}
+    for ev in rep.preempt_events:
+        uid = int(ev.split("uid=")[1].split()[0])
+        per_uid[uid] = per_uid.get(uid, 0) + 1
+    assert per_uid and max(per_uid.values()) <= 1
+
+
+# ----------------------------------------------------------------------
+# execution replay: preemption-invariant token accounting
+# ----------------------------------------------------------------------
+
+def test_execution_replay_preemption_invariant(small_model):
+    """Replaying the trace with evict-and-replay churn must not change a
+    single token, and the counters must surface the churn."""
+    from repro.fleet.execution import (run_trace_on_engine,
+                                       validate_preemption_exactness)
+    from repro.fleet.workload import FleetRequest
+
+    cfg, params = small_model
+    trace = [FleetRequest(uid=i, arrival_s=0.1 * i, prompt_len=5 + i,
+                          gen_len=8) for i in range(5)]
+    kw = dict(n_lanes=2, max_len=32, dispatch_n=4, page_size=8)
+    plain = run_trace_on_engine(trace, cfg, params, paged=True, **kw)
+    churn = run_trace_on_engine(trace, cfg, params, paged=True,
+                                preempt_every=1, **kw)
+    assert churn.gen_by_uid == plain.gen_by_uid
+    assert churn.preemptions == churn.restores > 0
+    assert churn.pages_migrated > 0
+    assert plain.preemptions == 0
+
+    result = validate_preemption_exactness(trace, cfg, params,
+                                           preempt_every=1,
+                                           temperature=0.8, **kw)
+    assert result["resume_exact"], result["mismatches"]
+    assert result["preemptions"] > 0
