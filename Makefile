@@ -8,6 +8,9 @@
 # allocator invariants) -- the quick loop when touching the paged path.
 # `make test-preempt` runs the preemption/migration layer (checkpoint
 # exactness, allocator churn under eviction, fleet migration).
+# `make test-multimodel` runs the multi-model serving layer (ModelPool
+# weight paging, MultiModelServeEngine exactness, fleet residency
+# routing, PagePool shrink/grow invariants).
 # `make bench-smoke` runs the measured decode-path bench on a tiny config
 # and emits BENCH_decode.json (tokens/s, dispatches/token, bytes/token,
 # and the paged section: admission capacity, paged-vs-dense token parity,
@@ -18,7 +21,7 @@
 PYTEST := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest
 PYRUN  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast test-paged test-preempt bench bench-smoke
+.PHONY: test test-fast test-paged test-preempt test-multimodel bench bench-smoke
 
 test:
 	$(PYTEST) -x -q
@@ -31,6 +34,9 @@ test-paged:
 
 test-preempt:
 	$(PYTEST) -q -m preempt
+
+test-multimodel:
+	$(PYTEST) -q -m multimodel
 
 bench:
 	$(PYRUN) -m benchmarks.run

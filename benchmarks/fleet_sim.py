@@ -14,9 +14,9 @@ from __future__ import annotations
 from typing import List
 
 from benchmarks.common import Row
-from repro.fleet import (FleetSim, LengthDist, NodeSpec, PreemptionPolicy,
-                         bursty_trace, constant_trace, fleet_from_plan,
-                         poisson_trace)
+from repro.fleet import (FleetSim, LeastLoadedRouter, LengthDist, NodeSpec,
+                         PreemptionPolicy, bursty_trace, constant_trace,
+                         fleet_from_plan, multimodel_trace, poisson_trace)
 from repro.serving import Workload, plan_fleet
 
 WL = Workload(prompt_len=512, gen_len=128, fmt="q8_0")
@@ -64,6 +64,7 @@ def rows() -> List[Row]:
                    f"plan={plan.requests_per_s:.2f}req/s "
                    f"ratio={steady.requests_per_s / plan.requests_per_s:.3f}"))
     out.extend(preemption_rows())
+    out.extend(multimodel_rows())
     return out
 
 
@@ -99,6 +100,62 @@ def preemption_rows() -> List[Row]:
             f"pages_migrated={mig.pages_migrated} "
             f"tpot_p99_gain={base.tpot_p99_s / mig.tpot_p99_s:.2f}x"),
     ]
+
+
+def multimodel_rows() -> List[Row]:
+    """Swap-cost vs resident-affinity routing on a two-model trace.
+
+    Two CMP decode boards, each 2 GB -- too small to co-host both
+    models' weights -- one seeded with each model.  The affinity-aware
+    router keeps every request on the board where its model is HOT
+    (zero swaps); the affinity-blind baseline load-balances obliviously,
+    thrashing weights over the PCIe 1.1 x4 link and shrinking the page
+    pools under the swapped-in weights -- the decode tail pays for it.
+    Per-model rows carry the tokens/joule accounting.
+    """
+    from repro.core.perf_model import QWEN25_0P5B, QWEN25_1P5B
+
+    model_specs = {"qwen2.5-1.5b": QWEN25_1P5B,
+                   "qwen2.5-0.5b": QWEN25_0P5B}
+
+    def fleet():
+        return [NodeSpec("a100-40g", 1, "prefill",
+                         model_ids=tuple(model_specs), hbm_gb=40.0),
+                NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                         model_ids=tuple(model_specs),
+                         resident=("qwen2.5-1.5b",), hbm_gb=2.0,
+                         page_size=16),
+                NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                         model_ids=tuple(model_specs),
+                         resident=("qwen2.5-0.5b",), hbm_gb=2.0,
+                         page_size=16)]
+
+    trace = multimodel_trace(
+        poisson_trace(2.0, 60.0, seed=3, prompt=LengthDist(256, cv=0.3),
+                      gen=LengthDist(128, cv=0.4)),
+        {"qwen2.5-1.5b": 1, "qwen2.5-0.5b": 1}, seed=1)
+    aware = FleetSim(fleet(), trace, fmt=WL.fmt, model_specs=model_specs,
+                     router=LeastLoadedRouter()).run()
+    blind = FleetSim(fleet(), trace, fmt=WL.fmt, model_specs=model_specs,
+                     router=LeastLoadedRouter(model_aware=False)).run()
+    rows = [
+        Row("fleet_multimodel[affinity_aware]", 0.0,
+            f"completed={aware.completed}/{aware.offered} "
+            f"model_swaps={aware.model_swaps} "
+            f"swap_bytes={aware.swap_bytes / 1e9:.2f}GB "
+            f"tpot_p99={aware.tpot_p99_s * 1e3:.2f}ms"),
+        Row("fleet_multimodel[affinity_blind]", 0.0,
+            f"completed={blind.completed}/{blind.offered} "
+            f"model_swaps={blind.model_swaps} "
+            f"swap_bytes={blind.swap_bytes / 1e9:.2f}GB "
+            f"tpot_p99={blind.tpot_p99_s * 1e3:.2f}ms "
+            f"tail_vs_aware={blind.tpot_p99_s / aware.tpot_p99_s:.1f}x"),
+    ]
+    for mid, tpot_p50, toks, tpj in aware.per_model:
+        rows.append(Row(f"fleet_multimodel[per_model/{mid}]", 0.0,
+                        f"tpot_p50={tpot_p50 * 1e3:.2f}ms "
+                        f"gen_tokens={toks} tokens_per_joule={tpj:.1f}"))
+    return rows
 
 
 def execution_replay_rows(dispatch_n: int = 8) -> List[Row]:

@@ -36,6 +36,12 @@ streams must be token-exact vs the unpreempted run, and the
 transfer-cost model prices ``ceil(ctx/page_size)`` pages over the CMP
 170HX's PCIe 1.1 x4 host link (``make bench-smoke`` gates on resume
 exactness and non-zero migration counters).
+
+The ``multimodel`` section serves TWO models through one
+``MultiModelServeEngine`` on a roomy and a tight HBM budget: per-model
+streams must be bit-identical to single-model engines (greedy AND
+temperature), token counts budget invariant, and the tight budget must
+show real weight-swap churn (``make bench-smoke`` gates on all three).
 """
 
 from __future__ import annotations
@@ -294,6 +300,76 @@ def migration_metrics(cfg, params, *, n_lanes: int, max_len: int,
     }
 
 
+def multimodel_metrics(cfg, params, *, n_lanes: int, max_len: int,
+                       max_new: int, dispatch_n: int,
+                       page_size: int) -> dict:
+    """Multi-model section of BENCH_decode.json.
+
+    Two models (the smoke config with independent weights, plus the
+    olmo smoke config) share one board through
+    :class:`~repro.serving.modelpool.MultiModelServeEngine`, twice: on
+    a ROOMY budget (both dense-resident, one cold load each) and on a
+    TIGHT budget (weights must page over the host link, KV pools
+    shrink).  Gated claims: per-model token streams are bit-identical
+    to single-model engines (greedy AND temperature), token counts are
+    budget invariant, and the tight budget shows real swap churn.
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.fleet.execution import (dense_hbm_bytes,
+                                       run_multimodel_trace_on_engine,
+                                       validate_multimodel_exactness)
+    from repro.fleet.workload import FleetRequest
+    from repro.models import build_model
+    from repro.serving import kv_page_bytes, params_nbytes
+
+    cfg_b = get_config("olmo-1b", smoke=True)
+    params_b = build_model(cfg_b).init(jax.random.PRNGKey(1))
+    models = {"qwen-smoke": (cfg, params), "olmo-smoke": (cfg_b, params_b)}
+    trace = [FleetRequest(uid=i, arrival_s=0.1 * i, prompt_len=5 + i % 4,
+                          gen_len=max_new,
+                          model_id="qwen-smoke" if i % 2 == 0
+                          else "olmo-smoke")
+             for i in range(2 * n_lanes)]
+    kw = dict(n_lanes=n_lanes, max_len=max_len, dispatch_n=dispatch_n,
+              page_size=page_size)
+
+    roomy_b = dense_hbm_bytes(models, n_lanes=n_lanes, max_len=max_len,
+                              page_size=page_size)
+    bt = max_len // page_size
+    pb_a = kv_page_bytes(cfg, page_size)
+    pb_b = kv_page_bytes(cfg_b, page_size)
+    # one page short of co-residency at the one-full-context floors:
+    # every model switch must evict the idle tenant and reload it later
+    tight_b = (sum(params_nbytes(p) for _, p in models.values())
+               + (bt + 1) * pb_a + (bt + 1) * pb_b - min(pb_a, pb_b))
+    roomy = run_multimodel_trace_on_engine(trace, models, **kw)
+    tight = run_multimodel_trace_on_engine(trace, models,
+                                           hbm_bytes=tight_b, **kw)
+    greedy = validate_multimodel_exactness(trace, models,
+                                           hbm_bytes=tight_b, **kw)
+    temp = validate_multimodel_exactness(trace, models, hbm_bytes=tight_b,
+                                         temperature=0.8, **kw)
+    return {
+        "models": sorted(models),
+        "weight_bytes": {mid: params_nbytes(p)
+                         for mid, (_, p) in models.items()},
+        "hbm_budget_bytes": {"roomy": roomy_b, "tight": tight_b},
+        "gen_by_model": roomy.gen_by_model,
+        "token_counts_budget_invariant":
+            tight.gen_by_uid == roomy.gen_by_uid,
+        "per_model_token_exact": {"greedy": greedy["exact"],
+                                  "temperature": temp["exact"]},
+        "model_swaps": {"roomy": roomy.model_swaps,
+                        "tight": tight.model_swaps},
+        "swap_bytes": {"roomy": roomy.swap_bytes,
+                       "tight": tight.swap_bytes},
+        "weight_evictions": {"roomy": roomy.weight_evictions,
+                             "tight": tight.weight_evictions},
+        "kv_pages_shrunk_tight": tight.kv_pages_shrunk,
+    }
+
+
 def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
                         max_len: int = 64, prompt_len: int = 8,
                         max_new: int = 16, n_requests: int = 8,
@@ -397,6 +473,10 @@ def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
                                        max_len=max_len, max_new=max_new,
                                        dispatch_n=dispatch_n,
                                        page_size=bk),
+        "multimodel": multimodel_metrics(cfg, params, n_lanes=n_lanes,
+                                         max_len=max_len, max_new=max_new,
+                                         dispatch_n=dispatch_n,
+                                         page_size=bk),
     }
 
 
@@ -449,8 +529,21 @@ def main(argv=None) -> int:
         and mig["restores"] == mig["preemptions"]
         and mig["pages_migrated"] > 0)
     ok = ok and mig_ok
+    mm = rec.get("multimodel", {})
+    mm_ok = (
+        bool(mm)
+        and mm["per_model_token_exact"]["greedy"]
+        and mm["per_model_token_exact"]["temperature"]
+        and mm["token_counts_budget_invariant"]
+        # roomy: exactly one cold load per model; tight: real churn
+        and mm["model_swaps"]["roomy"] == len(mm["models"])
+        and mm["model_swaps"]["tight"] > mm["model_swaps"]["roomy"]
+        and mm["weight_evictions"]["tight"] > 0
+        and mm["swap_bytes"]["tight"] > mm["swap_bytes"]["roomy"])
+    ok = ok and mm_ok
     print("BENCH_decode paged section:", "PASS" if paged_ok else "FAIL")
     print("BENCH_decode migration section:", "PASS" if mig_ok else "FAIL")
+    print("BENCH_decode multimodel section:", "PASS" if mm_ok else "FAIL")
     print("BENCH_decode:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

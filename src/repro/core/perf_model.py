@@ -89,6 +89,13 @@ QWEN25_1P5B = LLMSpec(
     name="qwen2.5-1.5b", n_layers=28, d_model=1536, n_heads=12,
     n_kv_heads=2, d_ff=8960, vocab_size=151936, tied_embeddings=True)
 
+# Sibling of the paper's model, one size down (24L, d896, 14Q/2KV GQA):
+# the second tenant in the multi-model serving experiments -- small
+# enough that two models' weights plausibly share an 8 GB board.
+QWEN25_0P5B = LLMSpec(
+    name="qwen2.5-0.5b", n_layers=24, d_model=896, n_heads=14,
+    n_kv_heads=2, d_ff=4864, vocab_size=151936, tied_embeddings=True)
+
 
 # ----------------------------------------------------------------------
 # Format -> path decomposition

@@ -22,33 +22,46 @@ Quick start::
 
 Demo: ``PYTHONPATH=src python examples/fleet_sim_demo.py``.
 
-Modules: `workload` (trace generators), `node` (simulated boards),
-`router` (placement policies), `sim` (event loop + metrics),
-`autoscale` (queue-depth pool scaling), `execution` (replay on the
-real `ServeEngine` to validate token accounting).
+Modules: `workload` (trace generators + multi-model mixes), `node`
+(simulated boards incl. resident-model sets), `router` (placement
+policies incl. model affinity and anticipated eviction cost), `sim`
+(event loop + metrics), `autoscale` (queue-depth pool scaling),
+`execution` (replay on the real `ServeEngine` /
+`MultiModelServeEngine` to validate token accounting).
 """
 
 from repro.fleet.autoscale import QueueDepthAutoscaler
-from repro.fleet.execution import (ExecutionResult, run_trace_on_engine,
+from repro.fleet.execution import (ExecutionResult,
+                                   MultiModelExecutionResult,
+                                   run_multimodel_trace_on_engine,
+                                   run_trace_on_engine,
+                                   validate_multimodel_exactness,
                                    validate_preemption_exactness,
                                    validate_token_accounting)
 from repro.fleet.node import SimNode
-from repro.fleet.router import (CostAwareRouter, LeastLoadedRouter, Router,
-                                SLOAwareRouter)
+from repro.fleet.router import (CostAwareRouter, LeastLoadedRouter,
+                                PreemptionAwareSLORouter, Router,
+                                SLOAwareRouter, anticipated_eviction_s,
+                                model_affinity_penalty)
 from repro.fleet.sim import (FleetReport, FleetSim, NodeSpec,
                              PreemptionPolicy, RequestRecord,
                              fleet_from_plan)
 from repro.fleet.workload import (FleetRequest, LengthDist, bursty_trace,
                                   constant_trace, diurnal_trace,
-                                  poisson_trace)
+                                  multimodel_trace, poisson_trace)
 
 __all__ = [
-    "QueueDepthAutoscaler", "ExecutionResult", "run_trace_on_engine",
+    "QueueDepthAutoscaler", "ExecutionResult",
+    "MultiModelExecutionResult", "run_multimodel_trace_on_engine",
+    "run_trace_on_engine",
+    "validate_multimodel_exactness",
     "validate_preemption_exactness", "validate_token_accounting",
     "SimNode", "CostAwareRouter",
-    "LeastLoadedRouter", "Router", "SLOAwareRouter", "FleetReport",
+    "LeastLoadedRouter", "PreemptionAwareSLORouter", "Router",
+    "SLOAwareRouter", "anticipated_eviction_s", "model_affinity_penalty",
+    "FleetReport",
     "FleetSim", "NodeSpec", "PreemptionPolicy", "RequestRecord",
     "fleet_from_plan",
     "FleetRequest", "LengthDist", "bursty_trace", "constant_trace",
-    "diurnal_trace", "poisson_trace",
+    "diurnal_trace", "multimodel_trace", "poisson_trace",
 ]

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -26,6 +26,7 @@ from repro.fleet.sim import FleetReport, FleetSim
 from repro.fleet.workload import FleetRequest
 from repro.models.common import ModelConfig
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.modelpool import ModelPool, MultiModelServeEngine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,6 +192,157 @@ def validate_preemption_exactness(trace: Sequence[FleetRequest],
         "preemptions": stats["preemptions"],
         "restores": stats["restores"],
         "pages_migrated": stats["pages_migrated"],
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiModelExecutionResult:
+    """Token + swap accounting from a multi-model engine replay."""
+
+    prompt_tokens: int
+    gen_tokens: int
+    gen_by_uid: Dict[int, int]
+    gen_by_model: Dict[str, int]
+    model_swaps: int = 0
+    swap_bytes: int = 0
+    weight_evictions: int = 0
+    kv_pages_shrunk: int = 0
+    kv_pages_grown: int = 0
+
+
+def dense_hbm_bytes(models: Dict[str, Tuple[ModelConfig, object]],
+                    n_lanes: int, max_len: int, page_size: int) -> int:
+    """Board budget holding EVERY model resident at its dense KV target
+    (weights + ``n_lanes`` full contexts + scratch) -- the no-swap
+    baseline; anything tighter exercises weight paging."""
+    from repro.models.transformer import paged_capacity
+    from repro.serving.modelpool import kv_page_bytes, params_nbytes
+
+    total = 0
+    for cfg, params in models.values():
+        bt = (0 if cfg.attn_free
+              else paged_capacity(max_len, cfg) // page_size)
+        total += params_nbytes(params) + (
+            n_lanes * bt + 1) * kv_page_bytes(cfg, page_size)
+    return total
+
+
+def _mm_requests(trace: Sequence[FleetRequest],
+                 models: Dict[str, Tuple[ModelConfig, object]],
+                 seed: int) -> list:
+    """Deterministic multi-model request list from a fleet trace (ids
+    derived from one rng stream, exactly like ``run_trace_on_engine``,
+    clamped to each request's own model vocab)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for r in sorted(trace, key=lambda r: (r.arrival_s, r.uid)):
+        assert r.model_id in models, f"trace uid={r.uid} names " \
+            f"unregistered model {r.model_id!r}"
+        vocab = models[r.model_id][0].vocab_size
+        reqs.append(Request(uid=r.uid,
+                            prompt=rng.integers(0, vocab, r.prompt_len,
+                                                dtype=np.int32),
+                            max_new_tokens=r.gen_len,
+                            model_id=r.model_id))
+    return reqs
+
+
+def run_multimodel_trace_on_engine(
+        trace: Sequence[FleetRequest],
+        models: Dict[str, Tuple[ModelConfig, object]],
+        hbm_bytes: Optional[int] = None,
+        n_lanes: int = 2, max_len: int = 64, seed: int = 0,
+        dispatch_n: int = 8, page_size: int = 16,
+        temperature: float = 0.0) -> MultiModelExecutionResult:
+    """Serve a multi-model ``trace`` through the REAL
+    :class:`~repro.serving.modelpool.MultiModelServeEngine`.
+
+    ``models`` maps model id -> (cfg, params).  ``hbm_bytes`` is the
+    board budget weights and KV pages share; ``None`` sizes it to hold
+    every model at its dense KV target (no swap pressure), which is the
+    accounting baseline -- pass something tighter to exercise weight
+    paging.  Token counts must be budget invariant (streams depend only
+    on per-model admission order); the swap counters are what changes.
+    """
+    if hbm_bytes is None:
+        hbm_bytes = dense_hbm_bytes(models, n_lanes=n_lanes,
+                                    max_len=max_len, page_size=page_size)
+    pool = ModelPool(hbm_bytes, page_size=page_size)
+    for mid in sorted(models):
+        pool.register(mid, models[mid][0], models[mid][1])
+    engine = MultiModelServeEngine(pool, n_lanes=n_lanes, max_len=max_len,
+                                   temperature=temperature, rng_seed=seed,
+                                   dispatch_n=dispatch_n)
+    reqs = _mm_requests(trace, models, seed)
+    engine.run(reqs)
+    for eng in engine.engines.values():
+        eng.pool.check()
+        assert eng.pool.n_in_use == 0, "replay leaked KV pages"
+    gen_by_uid = {r.uid: len(r.generated) for r in reqs}
+    gen_by_model: Dict[str, int] = {}
+    for r in reqs:
+        gen_by_model[r.model_id] = (gen_by_model.get(r.model_id, 0)
+                                    + len(r.generated))
+    return MultiModelExecutionResult(
+        prompt_tokens=sum(len(r.prompt) for r in reqs),
+        gen_tokens=sum(gen_by_uid.values()),
+        gen_by_uid=gen_by_uid, gen_by_model=gen_by_model,
+        model_swaps=engine.stats["model_swaps"],
+        swap_bytes=engine.stats["swap_bytes"],
+        weight_evictions=engine.stats["weight_evictions"],
+        kv_pages_shrunk=engine.stats["kv_pages_shrunk"],
+        kv_pages_grown=engine.stats["kv_pages_grown"])
+
+
+def validate_multimodel_exactness(
+        trace: Sequence[FleetRequest],
+        models: Dict[str, Tuple[ModelConfig, object]],
+        hbm_bytes: Optional[int] = None, **kw) -> Dict[str, object]:
+    """Replay a multi-model trace and diff each model's TOKEN STREAMS
+    against the same requests served ALONE by a single-model
+    ``ServeEngine`` with the same config/seed/temperature -- the
+    exactness contract of the multi-model engine.  Returns the diff
+    plus the swap counters."""
+    seed = kw.get("seed", 0)
+    engine_kw = dict(n_lanes=kw.get("n_lanes", 2),
+                     max_len=kw.get("max_len", 64),
+                     dispatch_n=kw.get("dispatch_n", 8),
+                     temperature=kw.get("temperature", 0.0))
+    page_size = kw.get("page_size", 16)
+
+    reqs = _mm_requests(trace, models, seed)
+    if hbm_bytes is None:
+        hbm_bytes = dense_hbm_bytes(models, n_lanes=engine_kw["n_lanes"],
+                                    max_len=engine_kw["max_len"],
+                                    page_size=page_size)
+    pool = ModelPool(hbm_bytes, page_size=page_size)
+    for mid in sorted(models):
+        pool.register(mid, models[mid][0], models[mid][1])
+    mm = MultiModelServeEngine(pool, rng_seed=seed, **engine_kw)
+    mm.run(reqs)
+    moved = {r.uid: tuple(r.generated) for r in reqs}
+
+    mismatches = {}
+    for mid in sorted(models):
+        cfg, params = models[mid]
+        solo = [Request(uid=r.uid, prompt=r.prompt.copy(),
+                        max_new_tokens=r.max_new_tokens)
+                for r in reqs if r.model_id == mid]
+        ref = ServeEngine(cfg, params, paged=True, page_size=page_size,
+                          rng_seed=seed, **engine_kw)
+        ref.run(solo)
+        for r in solo:
+            if tuple(r.generated) != moved[r.uid]:
+                mismatches[r.uid] = (tuple(r.generated), moved[r.uid])
+    return {
+        "exact": not mismatches,
+        "mismatches": mismatches,
+        "model_swaps": mm.stats["model_swaps"],
+        "swap_bytes": mm.stats["swap_bytes"],
+        "weight_evictions": mm.stats["weight_evictions"],
+        "gen_by_model": {mid: sum(len(r.generated) for r in reqs
+                                  if r.model_id == mid)
+                         for mid in sorted(models)},
     }
 
 

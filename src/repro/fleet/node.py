@@ -32,23 +32,37 @@ consult :meth:`SimNode.kv_overcommit` to see capacity as bytes rather
 than lanes; ``kv_pool_pages=None`` (default) disables the constraint
 and reproduces the pre-paging behavior exactly.
 
+Multi-model residency (``models=``): a node may host a CATALOG of
+models, of which a subset is *resident* (weights in HBM).  Weights and
+KV pages compete for the same ``hbm_gb`` budget -- ``kv_pool_pages``
+becomes whatever the resident weights leave over -- and a request for a
+non-resident model pays the weight transfer over the same PCIe 1.1 x4
+host link the KV migrations cross (``swap_in``), LRU-evicting idle
+resident models to make room.  Each distinct resident model serving the
+decode batch streams its own weights once per step, so co-hosting
+models on one board dilates the shared step time -- the cost the
+router's affinity term weighs against the swap.
+
 Energy: the node integrates board power over simulated time (idle floor
 plus dynamic power scaled by instantaneous occupancy); each request is
 additionally charged its solo-cost joules via
-:func:`repro.core.energy.request_energy_joules`.
+:func:`repro.core.energy.request_energy_joules` -- per-model, so the
+per-model tokens/joule accounting the power-aware benchmarking
+motivates falls out of the report.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Sequence
 
 from collections import deque
 
 from repro.core.device_profile import DeviceProfile
 from repro.core.energy import request_energy_joules
 from repro.core.perf_model import InferencePerfModel, LLMSpec, QWEN25_1P5B
-from repro.serving.phase_model import kv_handoff_seconds
+from repro.quant.formats import bytes_per_weight
+from repro.serving.phase_model import kv_handoff_seconds, link_transfer_seconds
 
 
 def _bucket(n: int, step: int = 32) -> int:
@@ -74,6 +88,10 @@ class DecodeSlot:
     prompt_len: int = 0      # live context = prompt_len + tokens_done
     tokens_done: float = 0.0
     t_first_token: Optional[float] = None
+    model_id: Optional[str] = None
+    #: per-step weight-stream time of THIS slot's model -- paid once per
+    #: step per distinct resident model in the batch, not per lane
+    t_weights_s: float = 0.0
 
 
 class SimNode:
@@ -82,7 +100,11 @@ class SimNode:
     def __init__(self, node_id: str, profile: DeviceProfile, role: str,
                  fmt: str, spec: LLMSpec = QWEN25_1P5B,
                  decode_lanes: int = 1, page_size: int = 16,
-                 kv_pool_pages: Optional[int] = None):
+                 kv_pool_pages: Optional[int] = None,
+                 models: Optional[Dict[str, LLMSpec]] = None,
+                 resident_models: Optional[Sequence[str]] = None,
+                 hbm_gb: Optional[float] = None,
+                 weight_fmt: Optional[str] = None):
         assert role in ("prefill", "decode", "both"), role
         self.node_id = node_id
         self.profile = profile
@@ -91,13 +113,46 @@ class SimNode:
         self.spec = spec
         self.decode_lanes = decode_lanes
         self.page_size = page_size
-        self.kv_pool_pages = kv_pool_pages
+        self._kv_pool_pages_static = kv_pool_pages
         self._model = InferencePerfModel(profile, spec)
+        # multi-model catalog: per-model perf models + weight bytes, a
+        # resident subset, and (optionally) one HBM byte budget that
+        # weights and KV pages share
+        self.models = dict(models) if models else None
+        self._weight_fmt = weight_fmt or fmt
+        if self.models:
+            self._perf = {m: InferencePerfModel(profile, s)
+                          for m, s in self.models.items()}
+            self._weight_bytes = {
+                m: s.params_total * bytes_per_weight(self._weight_fmt)
+                for m, s in self.models.items()}
+            keep = (list(resident_models) if resident_models is not None
+                    else list(self.models))
+            self.resident_models: Dict[str, float] = {m: 0.0 for m in keep}
+        else:
+            self._perf = {}
+            self._weight_bytes = {}
+            self.resident_models = {}
+        self._hbm_bytes = hbm_gb * 1e9 if hbm_gb is not None else None
+        # pages are token-denominated and SHARED across models, so a
+        # multi-model board prices them conservatively at the largest
+        # catalog model's KV row -- capacity is never overcounted
+        kv_tok = spec.kv_bytes_per_token()
+        if self.models:
+            kv_tok = max([kv_tok] + [s.kv_bytes_per_token()
+                                     for s in self.models.values()])
+        self._page_bytes = page_size * kv_tok
+        self._model_pins: Dict[str, int] = {}   # weights en route: no evict
+        self.model_swaps = 0
+        self.swap_bytes = 0.0
+        self.model_evictions = 0
+        self.model_tokens: Dict[str, float] = {}   # decoded tokens by model
+        self.model_energy_j: Dict[str, float] = {}  # dynamic joules by model
         self._split = 0.5 if role == "both" else 1.0
         self._idle_w = InferencePerfModel.IDLE_FRACTION * profile.tdp_watts
-        # caches keyed by bucketed length/context
-        self._prefill_cache: Dict[int, tuple] = {}
-        self._decode_cache: Dict[int, tuple] = {}
+        # caches keyed by (model, bucketed length/context)
+        self._prefill_cache: Dict[tuple, tuple] = {}
+        self._decode_cache: Dict[tuple, tuple] = {}
         self._req_energy_cache: Dict[tuple, float] = {}
         self._t_weights = 0.0    # per-step weight-stream time (ctx-free)
         # prefill FIFO state
@@ -134,51 +189,151 @@ class SimNode:
         self.pages_migrated_in = 0   # KV pages landed from elsewhere
 
     # ------------------------------------------------------------------
+    # multi-model residency: weights vs KV pages in one HBM budget
+    # ------------------------------------------------------------------
+    def _hbm_after_weights(self) -> float:
+        """Budget bytes the resident weights leave for KV -- negative
+        when the weights alone over-commit the board."""
+        return self._hbm_bytes - sum(self._weight_bytes[m]
+                                     for m in self.resident_models)
+
+    @property
+    def kv_pool_pages(self) -> Optional[int]:
+        """Pages the KV pool holds.  With an ``hbm_gb`` budget this is
+        whatever the RESIDENT weights leave over (the multi-model
+        trade-off); otherwise the statically configured count."""
+        if self._hbm_bytes is None:
+            return self._kv_pool_pages_static
+        return max(int(self._hbm_after_weights() // self._page_bytes), 0)
+
+    def _spec_for(self, mid: Optional[str]) -> LLMSpec:
+        if mid is not None and self.models and mid in self.models:
+            return self.models[mid]
+        return self.spec
+
+    def _perf_for(self, mid: Optional[str]) -> InferencePerfModel:
+        if mid is not None and mid in self._perf:
+            return self._perf[mid]
+        return self._model
+
+    def serves_model(self, mid: Optional[str]) -> bool:
+        """Whether this node can host requests for ``mid`` at all."""
+        return mid is None or self.models is None or mid in self.models
+
+    def model_resident(self, mid: Optional[str]) -> bool:
+        return (mid is None or self.models is None
+                or mid in self.resident_models)
+
+    def model_weight_bytes(self, mid: str) -> float:
+        return self._weight_bytes[mid]
+
+    def swap_pages(self, mid: str) -> int:
+        """KV pages the model's weights displace from the shared pool."""
+        return int(-(-self._weight_bytes[mid] // self._page_bytes))
+
+    def swap_in_s(self, mid: Optional[str]) -> float:
+        """Seconds a swap for ``mid`` would spend on the host link
+        (0 when already resident) -- the router's estimate, no mutation."""
+        if self.model_resident(mid):
+            return 0.0
+        return link_transfer_seconds(self.profile, self._weight_bytes[mid])
+
+    def pin_model(self, mid: str) -> None:
+        """Weights (or a request) are en route for ``mid``: not evictable."""
+        self._model_pins[mid] = self._model_pins.get(mid, 0) + 1
+
+    def unpin_model(self, mid: str) -> None:
+        self._model_pins[mid] = self._model_pins.get(mid, 0) - 1
+
+    def _model_in_use(self, mid: str) -> bool:
+        if self._model_pins.get(mid, 0) > 0:
+            return True
+        if any(s.model_id == mid for s in self.decode_active.values()):
+            return True
+        if any(s.model_id == mid for s in self.decode_queue):
+            return True
+        rec = self.prefill_active
+        if rec is not None and getattr(rec.req, "model_id", None) == mid:
+            return True
+        return any(getattr(r.req, "model_id", None) == mid
+                   for r in self.prefill_queue)
+
+    def swap_in(self, mid: Optional[str], now: float) -> float:
+        """Make ``mid`` resident; returns the modeled weight-transfer
+        seconds (0 when already hot).  Idle resident models are LRU-
+        evicted while the pool is over-committed -- a model with live
+        slots (or pinned by an in-flight swap) is never evicted, so a
+        board can end up page-starved instead, which the spill factor
+        and the preemption policy then punish."""
+        if self.model_resident(mid):
+            if mid in self.resident_models:
+                self.resident_models[mid] = now
+            return 0.0
+        t = link_transfer_seconds(self.profile, self._weight_bytes[mid])
+        self.resident_models[mid] = now
+        self.model_swaps += 1
+        self.swap_bytes += self._weight_bytes[mid]
+        while self._hbm_bytes is not None and (
+                self._hbm_after_weights() < 0 or self.kv_pages_free() < 0):
+            cand = [m for m in self.resident_models
+                    if m != mid and not self._model_in_use(m)]
+            if not cand:
+                break
+            victim = min(cand, key=lambda m: (self.resident_models[m], m))
+            del self.resident_models[victim]
+            self.model_evictions += 1
+        return t
+
+    # ------------------------------------------------------------------
     # phase-estimate caches
     # ------------------------------------------------------------------
-    def _prefill_est(self, prompt_len: int):
-        key = _bucket(prompt_len)
+    def _prefill_est(self, prompt_len: int, mid: Optional[str] = None):
+        key = (mid, _bucket(prompt_len))
         if key not in self._prefill_cache:
-            est = self._model.prefill(self.fmt, key)
+            est = self._perf_for(mid).prefill(self.fmt, key[1])
             self._prefill_cache[key] = (est.tokens_per_s, est.watts)
         return self._prefill_cache[key]
 
-    def _decode_parts(self, context: int):
+    def _decode_parts(self, context: int, mid: Optional[str] = None):
         """(t_compute, t_weights, t_kv, dyn_j_per_tok) per decode step."""
-        key = _bucket(context)
+        key = (mid, _bucket(context))
         if key not in self._decode_cache:
-            est0 = self._model.decode(self.fmt, context=0)
-            est = self._model.decode(self.fmt, context=key)
+            perf = self._perf_for(mid)
+            est0 = perf.decode(self.fmt, context=0)
+            est = perf.decode(self.fmt, context=key[1])
             t_comp = est.t_mac_s + est.t_epilogue_s
             t_w = est0.t_memory_s
             t_kv = est.t_memory_s - t_w
             step1 = max(t_comp, t_w + t_kv)
             dyn_j = max(est.watts - self._idle_w, 0.0) * step1
-            self._t_weights = t_w
+            if mid is None:
+                self._t_weights = t_w
             self._decode_cache[key] = (t_comp, t_w, t_kv, dyn_j)
         return self._decode_cache[key]
 
     def request_energy_j(self, prompt_len: int, gen_len: int,
-                         phase: str) -> float:
+                         phase: str, mid: Optional[str] = None) -> float:
         """Solo-cost joules of running ``phase`` of a request here."""
-        key = (prompt_len, gen_len, phase)
+        key = (prompt_len, gen_len, phase, mid)
         if key not in self._req_energy_cache:
             self._req_energy_cache[key] = request_energy_joules(
-                self.profile, prompt_len, gen_len, self.fmt, self.spec,
-                phase=phase)
+                self.profile, prompt_len, gen_len, self.fmt,
+                self._spec_for(mid), phase=phase)
         return self._req_energy_cache[key]
 
     # ------------------------------------------------------------------
     # prefill: serial FIFO
     # ------------------------------------------------------------------
-    def prefill_service_s(self, prompt_len: int) -> float:
-        tps, _ = self._prefill_est(prompt_len)
+    def prefill_service_s(self, prompt_len: int,
+                          mid: Optional[str] = None) -> float:
+        tps, _ = self._prefill_est(prompt_len, mid)
         return prompt_len / (tps * self._split)
 
     def prefill_handoff_s(self, prompt_len: int,
-                          peer: Optional[DeviceProfile] = None) -> float:
-        return kv_handoff_seconds(self.profile, prompt_len, self.spec,
-                                  peer=peer)
+                          peer: Optional[DeviceProfile] = None,
+                          mid: Optional[str] = None) -> float:
+        return kv_handoff_seconds(self.profile, prompt_len,
+                                  self._spec_for(mid), peer=peer)
 
     def est_prefill_wait_s(self, now: float) -> float:
         """Backlog ahead of a newly routed request (router's estimate)."""
@@ -187,16 +342,23 @@ class SimNode:
 
     def note_prefill_routed(self, record, now: float) -> None:
         """Track virtual backlog so routers see in-flight commitments."""
-        svc = self.prefill_service_s(record.req.prompt_len)
-        hand = self.prefill_handoff_s(record.req.prompt_len)
+        mid = getattr(record.req, "model_id", None)
+        svc = self.prefill_service_s(record.req.prompt_len, mid)
+        hand = self.prefill_handoff_s(record.req.prompt_len, mid=mid)
         self._prefill_backlog_s = (self.est_prefill_wait_s(now)
-                                   + svc + hand)
+                                   + svc + hand + self.swap_in_s(mid))
         self._backlog_asof = now
 
     def start_prefill(self, record, now: float) -> float:
-        """Begin compute for ``record``; returns the compute-done time."""
-        svc = self.prefill_service_s(record.req.prompt_len)
-        _, watts = self._prefill_est(record.req.prompt_len)
+        """Begin compute for ``record``; returns the compute-done time.
+
+        A non-resident model's weights cross the host link FIRST (the
+        swap extends this request's occupancy window -- prefill cannot
+        start without the weights)."""
+        mid = getattr(record.req, "model_id", None)
+        swap_s = self.swap_in(mid, now) if self.models else 0.0
+        svc = self.prefill_service_s(record.req.prompt_len, mid) + swap_s
+        _, watts = self._prefill_est(record.req.prompt_len, mid)
         self.prefill_active = record
         self.prefill_busy = True
         self.prefill_busy_s += svc
@@ -227,6 +389,17 @@ class SimNode:
         """Router-facing capacity in BYTES, the paged-cache currency."""
         return (self.kv_pages_free() * self.page_size
                 * self.spec.kv_bytes_per_token())
+
+    def kv_pages_projected(self) -> int:
+        """Pages the CURRENT residents will occupy at their FINAL
+        contexts (plus in-flight reservations) -- what an anticipatory
+        router scores instead of today's occupancy: a board that fits
+        now but cannot fit its residents' futures is a migration (pages
+        x transfer time over the host link) waiting to happen."""
+        final = sum(
+            max(-(-(s.prompt_len + s.gen_len) // self.page_size), 1)
+            for s in self.decode_active.values())
+        return final + self.inbound_pages
 
     def kv_overcommit(self, prompt_len: int = 0, gen_len: int = 0) -> int:
         """Pages by which admitting such a request (at its steady-state
@@ -280,13 +453,15 @@ class SimNode:
         context (the remaining tokens' steady-state view)."""
         done = int(slot.tokens_done)
         ctx = slot.prompt_len + done + max(slot.gen_len - done, 0) // 2
-        t_comp, _, t_kv, dyn_j = self._decode_parts(max(ctx, 1))
+        t_comp, t_w, t_kv, dyn_j = self._decode_parts(max(ctx, 1),
+                                                      slot.model_id)
         return DecodeSlot(uid=slot.uid, gen_len=slot.gen_len,
                           t_comp_s=t_comp, t_kv_s=t_kv,
                           dyn_j_per_tok=dyn_j,
                           prompt_len=slot.prompt_len,
                           tokens_done=slot.tokens_done,
-                          t_first_token=slot.t_first_token)
+                          t_first_token=slot.t_first_token,
+                          model_id=slot.model_id, t_weights_s=t_w)
 
     def _spill_factor(self) -> float:
         """Multiplier on the KV-stream term when over-committed: the
@@ -312,12 +487,27 @@ class SimNode:
             self.kv_spill_events += 1
         self._spilled = over
 
+    def _weights_stream_s(self, extra: Dict[Optional[str], float]) -> float:
+        """Per-step weight-stream time: each DISTINCT model in the
+        decode batch streams its weights once per step (co-hosting two
+        models on one board pays both streams).  ``extra`` maps model
+        ids a caller hypothetically adds to their weight times."""
+        per_model: Dict[Optional[str], float] = {
+            s.model_id: s.t_weights_s if s.model_id is not None
+            else (s.t_weights_s or self._t_weights)
+            for s in self.decode_active.values()}
+        per_model.update(extra)
+        if not per_model:
+            return self._t_weights
+        return sum(per_model.values())
+
     def _step_time_s(self) -> float:
         """Current per-token step time shared by all active lanes.
 
-        Per-lane MACs and KV reads accumulate across the batch; the
-        weight stream is paid once per step (the continuous-batching
-        bandwidth saving).  An over-committed page pool slows the KV
+        Per-lane MACs and KV reads accumulate across the batch; each
+        distinct model's weight stream is paid once per step (the
+        continuous-batching bandwidth saving -- diluted when several
+        models co-reside).  An over-committed page pool slows the KV
         term by the spilled share's host-link penalty.
         """
         if not self.decode_active:
@@ -325,31 +515,36 @@ class SimNode:
         comp_sum = sum(s.t_comp_s for s in self.decode_active.values())
         kv_sum = sum(s.t_kv_s for s in self.decode_active.values())
         kv_sum *= self._spill_factor()
-        return max(comp_sum, self._t_weights + kv_sum) / self._split
+        return max(comp_sum, self._weights_stream_s({}) + kv_sum) / self._split
 
     def decode_load(self) -> int:
         return len(self.decode_active) + len(self.decode_queue)
 
-    def est_decode_step_s(self, context: int, extra: int = 1) -> float:
+    def est_decode_step_s(self, context: int, extra: int = 1,
+                          mid: Optional[str] = None) -> float:
         """Predicted step time if ``extra`` more such lanes were active."""
-        t_comp, t_w, t_kv, _ = self._decode_parts(context)
+        t_comp, t_w, t_kv, _ = self._decode_parts(context, mid)
         comp_sum = sum(s.t_comp_s for s in self.decode_active.values())
         kv_sum = sum(s.t_kv_s for s in self.decode_active.values())
         comp_sum += extra * t_comp
         kv_sum += extra * t_kv
         kv_sum *= self._spill_factor()
-        return max(comp_sum, t_w + kv_sum) / self._split
+        t_weights = self._weights_stream_s({mid: t_w})
+        return max(comp_sum, t_weights + kv_sum) / self._split
 
-    def make_slot(self, uid: int, prompt_len: int,
-                  gen_len: int) -> DecodeSlot:
+    def make_slot(self, uid: int, prompt_len: int, gen_len: int,
+                  model_id: Optional[str] = None) -> DecodeSlot:
         context = prompt_len + gen_len // 2
-        t_comp, t_w, t_kv, dyn_j = self._decode_parts(context)
+        t_comp, t_w, t_kv, dyn_j = self._decode_parts(context, model_id)
         return DecodeSlot(uid=uid, gen_len=gen_len, t_comp_s=t_comp,
                           t_kv_s=t_kv, dyn_j_per_tok=dyn_j,
-                          prompt_len=prompt_len)
+                          prompt_len=prompt_len, model_id=model_id,
+                          t_weights_s=t_w)
 
     def decode_admit(self, slot: DecodeSlot, now: float) -> bool:
         """Returns True if the slot went active (else queued)."""
+        if slot.model_id is not None and slot.model_id in self.resident_models:
+            self.resident_models[slot.model_id] = now   # LRU touch
         self.decode_advance(now)
         if len(self.decode_active) < self.decode_lanes:
             self.decode_active[slot.uid] = slot
@@ -377,6 +572,12 @@ class SimNode:
                                       + (1.0 - before) * step)
             self.energy_active_j += slot.dyn_j_per_tok * advanced
             self.tokens_decoded += advanced
+            if slot.model_id is not None:
+                self.model_tokens[slot.model_id] = (
+                    self.model_tokens.get(slot.model_id, 0.0) + advanced)
+                self.model_energy_j[slot.model_id] = (
+                    self.model_energy_j.get(slot.model_id, 0.0)
+                    + slot.dyn_j_per_tok * advanced)
             if slot.tokens_done >= slot.gen_len - _DONE_EPS:
                 slot.tokens_done = float(slot.gen_len)
                 finished.append(slot)

@@ -51,6 +51,12 @@ class NodeSpec:
     #: paged-KV model (see SimNode): pages per board; None = unconstrained
     kv_pool_pages: Optional[int] = None
     page_size: int = 16
+    #: multi-model serving: catalog of model ids this board can host
+    #: (resolved against FleetSim's ``model_specs``), the subset resident
+    #: at t=0 (None = all), and the HBM budget weights and KV pages share
+    model_ids: Optional[Tuple[str, ...]] = None
+    resident: Optional[Tuple[str, ...]] = None
+    hbm_gb: Optional[float] = None
 
 
 def fleet_from_plan(plan: FleetPlan, decode_lanes: int = 1) -> List[NodeSpec]:
@@ -134,13 +140,22 @@ class FleetReport:
     usd_per_mtok: float
     preemptions: int = 0        # mid-decode evictions across the fleet
     pages_migrated: int = 0     # KV pages shipped between boards
+    model_swaps: int = 0        # weight loads over host links
+    swap_bytes: float = 0.0     # weight bytes those swaps moved
+    #: per-model decode quality/efficiency: (model_id, tpot_p50_s,
+    #: gen_tokens, tokens_per_joule) -- the power-aware per-model
+    #: accounting; empty for single-model traces
+    per_model: Tuple[Tuple[str, float, int, float], ...] = ()
     scale_events: Tuple[str, ...] = ()
     preempt_events: Tuple[str, ...] = ()
+    swap_events: Tuple[str, ...] = ()
 
     def metrics(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
         d.pop("scale_events")
         d.pop("preempt_events")
+        d.pop("swap_events")
+        d.pop("per_model")
         return d
 
 
@@ -156,9 +171,11 @@ class FleetSim:
                  power_usd_per_kwh: float = 0.10,
                  amortization_years: float = 3.0,
                  autoscaler=None,
-                 preemption: Optional[PreemptionPolicy] = None):
+                 preemption: Optional[PreemptionPolicy] = None,
+                 model_specs: Optional[Dict[str, LLMSpec]] = None):
         self.fmt = fmt
         self.spec = spec
+        self.model_specs = model_specs
         self.router = router or LeastLoadedRouter()
         self.ttft_slo_s = ttft_slo_s
         self.tpot_slo_s = tpot_slo_s
@@ -176,6 +193,7 @@ class FleetSim:
         self.records = [RequestRecord(req=r) for r in trace]
         self._slot_rec: Dict[Tuple[str, int], RequestRecord] = {}
         self.scale_events: List[str] = []
+        self.swap_events: List[str] = []
         self.preemption = preemption
         self.preempt_events: List[str] = []
         self._migrations: Dict[int, int] = {}   # uid -> moves so far
@@ -184,12 +202,19 @@ class FleetSim:
 
     # -- fleet mutation (autoscaler hooks) -----------------------------
     def add_node(self, ns: NodeSpec, now: float) -> SimNode:
+        models = None
+        if ns.model_ids is not None:
+            assert self.model_specs is not None, (
+                "NodeSpec names model_ids but FleetSim has no model_specs")
+            models = {m: self.model_specs[m] for m in ns.model_ids}
         node = SimNode(node_id=f"{ns.profile}/{ns.role}#{self._node_seq}",
                        profile=get_profile(ns.profile), role=ns.role,
                        fmt=self.fmt, spec=self.spec,
                        decode_lanes=ns.decode_lanes,
                        page_size=ns.page_size,
-                       kv_pool_pages=ns.kv_pool_pages)
+                       kv_pool_pages=ns.kv_pool_pages,
+                       models=models, resident_models=ns.resident,
+                       hbm_gb=ns.hbm_gb)
         self._node_seq += 1
         node.available_at = now
         self.nodes.append(node)
@@ -243,16 +268,18 @@ class FleetSim:
                          now: float) -> None:
         rec.t_prefill_done = now
         node.prefill_active = None
+        mid = getattr(rec.req, "model_id", None)
         dst = self.router.route_decode(rec, node, self._routable(now), now)
         rec.decode_node = dst.node_id
         plen = rec.req.prompt_len
         if dst is node:
             occupancy_s = transfer_s = 0.0    # KV stays in HBM
         else:
-            occupancy_s = node.prefill_handoff_s(plen)
-            transfer_s = node.prefill_handoff_s(plen, peer=dst.profile)
+            occupancy_s = node.prefill_handoff_s(plen, mid=mid)
+            transfer_s = node.prefill_handoff_s(plen, peer=dst.profile,
+                                                mid=mid)
         rec.energy_j += node.request_energy_j(plen, rec.req.gen_len,
-                                              phase="prefill")
+                                              phase="prefill", mid=mid)
         dst.inbound_inflight += 1      # blocks reaping until KV lands
         self._push(now + transfer_s, "decode_enter", (dst, rec))
         if occupancy_s > 0:
@@ -267,8 +294,27 @@ class FleetSim:
         self._maybe_reap(node, now)
 
     def _on_decode_enter(self, node: SimNode, rec: RequestRecord,
-                         now: float) -> None:
+                         now: float, pinned: bool = False) -> None:
         node.inbound_inflight -= 1
+        mid = getattr(rec.req, "model_id", None)
+        if pinned:
+            node.unpin_model(mid)
+        if node.models is not None and mid is not None:
+            # weights must be resident before the first decode step: a
+            # cold model swaps in over the host link, and the request
+            # re-enters once the shards land.  The pin keeps the model
+            # from being LRU-evicted while its weights are in flight
+            # (a second request for the same model piggybacks on the
+            # swap already underway: swap_in sees it resident).
+            swap_s = node.swap_in(mid, now)
+            if swap_s > 0:
+                node.pin_model(mid)
+                node.inbound_inflight += 1   # still en route: no reaping
+                self.swap_events.append(
+                    f"t={now:.2f}s {node.node_id} <- weights[{mid}] "
+                    f"({swap_s * 1e3:.0f}ms)")
+                self._push(now + swap_s, "decode_enter", (node, rec, True))
+                return
         rec.t_decode_enter = now
         if rec.req.gen_len <= 0:      # nothing to decode: done on arrival
             rec.t_first_token = now
@@ -277,10 +323,10 @@ class FleetSim:
             return
         rec.energy_j += node.request_energy_j(rec.req.prompt_len,
                                               rec.req.gen_len,
-                                              phase="decode")
+                                              phase="decode", mid=mid)
         self._finish(node, node.decode_advance(now), now)
         slot = node.make_slot(rec.req.uid, rec.req.prompt_len,
-                              rec.req.gen_len)
+                              rec.req.gen_len, model_id=mid)
         self._slot_rec[(node.node_id, rec.req.uid)] = rec
         node.decode_admit(slot, now)
         self._maybe_preempt(node, now)
@@ -331,7 +377,8 @@ class FleetSim:
                 if remaining <= 0:
                     continue
                 t_here = remaining * node.est_decode_step_s(
-                    slot.prompt_len + int(slot.tokens_done), extra=0)
+                    slot.prompt_len + int(slot.tokens_done), extra=0,
+                    mid=getattr(slot, "model_id", None))
                 dst = self.router.route_migration(
                     slot, node, self._routable(now), now)
                 if dst is None:
@@ -339,7 +386,8 @@ class FleetSim:
                 ctx = slot.prompt_len + int(slot.tokens_done)
                 t_there = (node.kv_page_transfer_s(
                     node.migration_pages(ctx), peer=dst.profile)
-                    + remaining * dst.est_decode_step_s(ctx, extra=1))
+                    + remaining * dst.est_decode_step_s(
+                        ctx, extra=1, mid=getattr(slot, "model_id", None)))
                 if t_here > pol.straggler_factor * t_there:
                     self._migrate(node, slot, dst, now)
 
@@ -352,6 +400,13 @@ class FleetSim:
         ctx = slot.prompt_len + int(slot.tokens_done)
         n_pg = src.migration_pages(ctx)
         transfer_s = src.kv_page_transfer_s(n_pg, peer=dst.profile)
+        mid = getattr(slot, "model_id", None)
+        if dst.models is not None and mid is not None:
+            # a destination without the slot's model hot swaps its
+            # weights in alongside the KV pages (same host link); the
+            # pin keeps them from being evicted before the slot lands
+            transfer_s += dst.swap_in(mid, now)
+            dst.pin_model(mid)
         src.pages_migrated_out += n_pg
         rec = self._slot_rec.pop((src.node_id, slot.uid))
         rec.preemptions += 1
@@ -371,6 +426,9 @@ class FleetSim:
         dst.inbound_inflight -= 1
         dst.inbound_pages -= n_pg      # reservation becomes occupancy
         dst.pages_migrated_in += n_pg
+        mid = getattr(slot, "model_id", None)
+        if dst.models is not None and mid is not None:
+            dst.unpin_model(mid)
         rec.decode_node = dst.node_id
         self._finish(dst, dst.decode_advance(now), now)
         resumed = dst.resume_slot(slot)
@@ -408,7 +466,8 @@ class FleetSim:
             elif kind == "prefill_free":
                 self._on_prefill_free(payload, now)
             elif kind == "decode_enter":
-                self._on_decode_enter(payload[0], payload[1], now)
+                self._on_decode_enter(payload[0], payload[1], now,
+                                      *payload[2:])
             elif kind == "decode":
                 self._on_decode(payload[0], payload[1], now)
             elif kind == "migrate_enter":
@@ -454,6 +513,22 @@ class FleetSim:
         gen_tok_s = gen_tok / makespan
         usd_per_mtok = usd_hour / max(gen_tok_s * 3600.0 / 1e6, 1e-9)
         good = sum(1 for r in done if meets_slo(r))
+        # per-model decode accounting (tpot + tokens/joule), multi-model
+        # traces only -- the nodes integrate per-model dynamic energy
+        by_model: Dict[str, List[float]] = {}
+        for r in done:
+            mid = getattr(r.req, "model_id", None)
+            if mid is not None:
+                by_model.setdefault(mid, []).append(r.tpot_s)
+        per_model = []
+        for mid in sorted(by_model):
+            toks = sum(n.model_tokens.get(mid, 0.0)
+                       for n in self.nodes + self.retired)
+            joules = sum(n.model_energy_j.get(mid, 0.0)
+                         for n in self.nodes + self.retired)
+            per_model.append((mid, pct(np.asarray(sorted(by_model[mid])), 50),
+                              int(round(toks)),
+                              toks / joules if joules > 0 else float("nan")))
         return FleetReport(
             offered=len(self.records), completed=len(done),
             makespan_s=makespan,
@@ -470,5 +545,11 @@ class FleetSim:
                             for n in self.nodes + self.retired),
             pages_migrated=sum(n.pages_migrated_out
                                for n in self.nodes + self.retired),
+            model_swaps=sum(n.model_swaps
+                            for n in self.nodes + self.retired),
+            swap_bytes=sum(n.swap_bytes
+                           for n in self.nodes + self.retired),
+            per_model=tuple(per_model),
             scale_events=tuple(self.scale_events),
-            preempt_events=tuple(self.preempt_events))
+            preempt_events=tuple(self.preempt_events),
+            swap_events=tuple(self.swap_events))

@@ -33,6 +33,9 @@ class FleetRequest:
     arrival_s: float
     prompt_len: int
     gen_len: int
+    #: which registered model serves this request (None = single-model
+    #: fleet, the pre-multimodel behavior)
+    model_id: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +136,30 @@ def diurnal_trace(base_rps: float, peak_rps: float, duration_s: float,
         if rng.uniform() < rate / peak_rps:
             arrivals.append(t)
     return _emit(arrivals, rng, prompt, gen)
+
+
+def multimodel_trace(trace: List[FleetRequest], mix: dict,
+                     seed: int = 0) -> List[FleetRequest]:
+    """Assign a ``model_id`` to every request of ``trace`` by weighted
+    draw -- the multi-model request mix.
+
+    ``mix`` maps model id -> weight (normalized internally); the draw
+    is seeded separately from the arrival process so the same arrival
+    trace can be replayed under different mixes.  Composes with every
+    generator above::
+
+        trace = multimodel_trace(poisson_trace(3.0, 60.0, seed=0),
+                                 {"qwen2.5-1.5b": 2, "qwen2.5-0.5b": 1},
+                                 seed=1)
+    """
+    assert mix and all(w > 0 for w in mix.values()), mix
+    ids = sorted(mix)
+    weights = np.asarray([mix[i] for i in ids], np.float64)
+    weights = weights / weights.sum()
+    rng = np.random.default_rng(seed)
+    draws = rng.choice(len(ids), size=len(trace), p=weights)
+    return [dataclasses.replace(r, model_id=ids[d])
+            for r, d in zip(trace, draws)]
 
 
 def constant_trace(rate_rps: float, duration_s: float,

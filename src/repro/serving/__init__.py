@@ -3,14 +3,21 @@ from repro.serving.disaggregation import (FleetPlan, PoolAssignment,
 from repro.serving.engine import (LaneCheckpoint, PagePool, Request,
                                   ServeEngine, dequantize_params,
                                   quantize_params)
+from repro.serving.modelpool import (ModelEntry, ModelPool,
+                                     MultiModelServeEngine, kv_page_bytes,
+                                     params_nbytes)
 from repro.serving.phase_model import (Workload, capex_usd_per_hour,
                                        effective_prefill_tps,
                                        energy_usd_per_hour,
-                                       kv_handoff_seconds, phase_tps)
+                                       kv_handoff_seconds,
+                                       link_transfer_seconds, phase_tps)
 
 __all__ = ["FleetPlan", "LaneCheckpoint", "PagePool", "PoolAssignment",
            "Workload",
+           "ModelEntry", "ModelPool", "MultiModelServeEngine",
+           "kv_page_bytes", "params_nbytes",
            "homogeneous_baseline", "plan_fleet", "Request", "ServeEngine",
            "dequantize_params", "quantize_params", "phase_tps",
-           "kv_handoff_seconds", "effective_prefill_tps",
+           "kv_handoff_seconds", "link_transfer_seconds",
+           "effective_prefill_tps",
            "capex_usd_per_hour", "energy_usd_per_hour"]

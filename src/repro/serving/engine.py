@@ -113,7 +113,12 @@ class PagePool:
       mid-generation growth cannot fail;
     * zero fragmentation by construction -- pages are an unordered pool
       (the block table supplies ordering), so any free page serves any
-      request: the free list can never be "too fragmented to admit".
+      request: the free list can never be "too fragmented to admit";
+    * capacity elasticity -- ``shrink(n)`` retires up to ``n`` FREE
+      (and unpromised) pages into a disabled set and ``grow(n)``
+      returns them: the multi-model pool trades KV pages for weight
+      residency without ever touching a page a lane holds or was
+      promised.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -121,6 +126,7 @@ class PagePool:
         self.page_size = int(page_size)
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
         self._in_use: set = set()
+        self._disabled: List[int] = []
         self._reserved = 0
         self.hwm = 0                 # high-water mark: in-use + reserved
         self.alloc_count = 0
@@ -133,6 +139,15 @@ class PagePool:
     @property
     def n_in_use(self) -> int:
         return len(self._in_use)
+
+    @property
+    def n_disabled(self) -> int:
+        return len(self._disabled)
+
+    @property
+    def n_active(self) -> int:
+        """Pages currently part of the pool (physical minus disabled)."""
+        return self.n_pages - len(self._disabled)
 
     def available(self) -> int:
         """Pages admissible to NEW requests (free minus promised)."""
@@ -167,11 +182,34 @@ class PagePool:
             self._free.append(p)
         self.free_count += len(pages)
 
+    def shrink(self, n: int) -> int:
+        """Retire up to ``n`` free, unpromised pages from the pool (the
+        weight-residency trade: HBM bytes leave the KV pool).  Returns
+        the number actually retired -- never a page a lane holds or a
+        reservation has promised."""
+        take = min(int(n), self.available())
+        for _ in range(max(take, 0)):
+            self._disabled.append(self._free.pop())
+        return max(take, 0)
+
+    def grow(self, n: int) -> int:
+        """Return up to ``n`` previously retired pages to the free list
+        (weights left the board; the KV pool gets its bytes back)."""
+        back = min(int(n), len(self._disabled))
+        for _ in range(max(back, 0)):
+            self._free.append(self._disabled.pop())
+        return max(back, 0)
+
     def check(self) -> None:
         """Assert the conservation invariant (test hook)."""
-        assert len(self._free) + len(self._in_use) == self.n_pages
+        assert (len(self._free) + len(self._in_use)
+                + len(self._disabled) == self.n_pages)
         assert len(set(self._free)) == len(self._free)
+        assert len(set(self._disabled)) == len(self._disabled)
         assert not self._in_use.intersection(self._free)
+        assert not self._in_use.intersection(self._disabled)
+        assert not set(self._free).intersection(self._disabled)
+        assert 0 <= self._reserved <= len(self._free)
 
 
 # ----------------------------------------------------------------------
@@ -185,6 +223,9 @@ class Request:
     max_new_tokens: int
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: which registered model serves this request (multi-model engines;
+    #: a single-model ServeEngine ignores it)
+    model_id: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -793,16 +834,32 @@ class ServeEngine:
         self._blocked_uids.discard(ckpt.uid)
         self._lane_reserved[lane] = need
         self._lane_pages[lane] = []
-        self._map_pages(lane, ckpt.n_pages)
-        for i, page in enumerate(self._lane_pages[lane]):
-            for key, val in ckpt.kv_pages.items():
-                seg = jnp.asarray(val[:, i:i + 1])
-                self.cache[key] = jax.lax.dynamic_update_slice(
-                    self.cache[key], seg.astype(self.cache[key].dtype),
-                    (0, page, 0, 0, 0))
-        for key, val in ckpt.ssm_state.items():
-            self.cache[key] = self.cache[key].at[:, lane].set(
-                jnp.asarray(val))
+        try:
+            self._map_pages(lane, ckpt.n_pages)
+            for i, page in enumerate(self._lane_pages[lane]):
+                for key, val in ckpt.kv_pages.items():
+                    seg = jnp.asarray(val[:, i:i + 1])
+                    self.cache[key] = jax.lax.dynamic_update_slice(
+                        self.cache[key], seg.astype(self.cache[key].dtype),
+                        (0, page, 0, 0, 0))
+            for key, val in ckpt.ssm_state.items():
+                self.cache[key] = self.cache[key].at[:, lane].set(
+                    jnp.asarray(val))
+        except Exception:
+            # scatter failure (e.g. a checkpoint whose payload does not
+            # match this engine's cache layout): the reservation and any
+            # already-mapped pages MUST return to the pool, or they leak
+            # -- the lane looks free but its pages stay in-use forever
+            self.pool.free(self._lane_pages[lane])
+            self.pool.unreserve(self._lane_reserved[lane])
+            self._lane_pages[lane] = []
+            self._lane_reserved[lane] = 0
+            self.cache["len"] = self.cache["len"].at[lane].set(0)
+            if "block_tables" in self.cache:
+                self.cache["block_tables"] = (
+                    self.cache["block_tables"].at[lane]
+                    .set(self._scratch_page))
+            raise
         self.cache["len"] = self.cache["len"].at[lane].set(ckpt.ctx_len)
         self._len_host[lane] = ckpt.ctx_len
         self._lane_seed = self._lane_seed.at[lane].set(ckpt.lane_seed)

@@ -1,0 +1,461 @@
+"""Multi-model serving on one HBM budget: weights page over the host link.
+
+The paper's board is defined by two scarcities -- 8 GB of HBM2e and a
+PCIe 1.1 x4 host link (~1 GB/s) -- so hosting *several* small models on
+one CMP 170HX means weight bytes and KV pages compete for the same HBM
+and every model swap crawls over the same bottleneck link the KV-page
+migrations already cross.  This module is that economy made explicit:
+
+* :class:`ModelPool` owns ONE byte budget per board.  Registered models
+  (``ModelConfig`` + params, quantized or dense) are *resident* or
+  *paged out*; ``load`` prices the weight transfer over the host link
+  (the same :func:`~repro.serving.phase_model.link_transfer_seconds`
+  model the fleet's KV migrations use) and ``unload`` is free (weights
+  are clean -- the master copy lives in host RAM, nothing writes back).
+* :class:`MultiModelServeEngine` hosts one paged
+  :class:`~repro.serving.engine.ServeEngine` per resident model.  Every
+  engine's KV :class:`~repro.serving.engine.PagePool` is carved from
+  the shared budget: loading another model's weights ``shrink``\\ s the
+  free pages of the least-recently-used residents, and unloading
+  ``grow``\\ s them back toward the dense target -- weight residency
+  and KV capacity visibly trade off, page by page.
+
+Exactness contract (pinned in ``tests/test_modelpool.py``): a model's
+token streams under multi-model serving are BIT-IDENTICAL to the same
+requests served alone by a single-model ``ServeEngine`` with the same
+config/seed/temperature.  This holds by construction: each inner engine
+is a real ServeEngine (streams depend only on per-model admission order
+and token index, never on pool size, lane neighbors, or dispatch
+timing), requests are admitted per-model FIFO, and an unload preserves
+the engine's admission counter so a reload continues the exact sampling
+lineage.
+
+Pinning: a model serving live lanes (or holding page reservations) is
+never unloaded -- eviction only considers idle residents, LRU first.
+Shrinking is always safe: it only retires pages that are free AND
+unpromised, so in-flight lanes keep their reservation guarantee.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+from repro.core.device_profile import DeviceProfile, get_profile
+from repro.models.common import ModelConfig
+from repro.quant.quantize import QTensor
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.phase_model import link_transfer_seconds
+
+
+def params_nbytes(params) -> int:
+    """HBM bytes a parameter tree occupies (QTensor-aware)."""
+    import jax
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes()
+        else:
+            total += int(leaf.size) * leaf.dtype.itemsize
+    return total
+
+
+def kv_page_bytes(cfg: ModelConfig, page_size: int) -> int:
+    """HBM bytes one KV page of ``cfg`` holds (k + v, every layer and
+    kv-head; int8 caches carry their f32 per-(token, head) scales) --
+    the same per-row accounting the decode-bench byte model uses."""
+    if cfg.attn_free:
+        return 0
+    if cfg.kv_quant == "int8":
+        per_row = cfg.hd * 1 + 4          # int8 values + f32 scale
+    else:
+        per_row = cfg.hd * cfg.compute_dtype.itemsize
+    return 2 * cfg.n_layers * cfg.n_kv_heads * per_row * page_size
+
+
+@dataclasses.dataclass
+class ModelEntry:
+    """One registered model: identity, bytes, and the host-side
+    continuation state that survives unload/reload round-trips."""
+
+    model_id: str
+    cfg: ModelConfig
+    params: Any
+    weight_bytes: int
+    page_bytes: int
+    spec: Any = None              # optional LLMSpec for fleet modeling
+    loads: int = 0
+    #: admission counter preserved across unload -> reload so the
+    #: sampling lineage (admission index seeds each lane's key) of a
+    #: reloaded model continues bit-identically
+    admit_count: int = 0
+    #: engine stats accumulated across residencies
+    stats: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+class ModelPool:
+    """Registry + HBM byte budget + host-link swap model for one board.
+
+    Pure accounting -- it never touches jax.  ``load``/``unload`` keep
+    the resident set and the LRU clock; the caller decides WHEN to swap
+    and carries the returned transfer seconds into its own time model.
+
+    Scope note: this registry prices REAL parameter trees
+    (``params_nbytes``), which is what the execution-backed engine
+    serves.  The fleet simulator's :class:`~repro.fleet.node.SimNode`
+    keeps a deliberately separate, ``LLMSpec``-analytic residency model
+    (sim nodes have no parameter trees and their eviction predicate is
+    sim-slot-based, not engine-lane-based); the two share ONE transfer
+    model, :func:`~repro.serving.phase_model.link_transfer_seconds`.
+    """
+
+    def __init__(self, hbm_bytes: float, page_size: int = 16,
+                 profile: Optional[DeviceProfile] = None):
+        self.hbm_bytes = int(hbm_bytes)
+        self.page_size = int(page_size)
+        self.profile = profile or get_profile("cmp-170hx-nofma")
+        self.entries: Dict[str, ModelEntry] = {}
+        self._resident: Dict[str, int] = {}      # model_id -> last-used tick
+        self._kv_charge: Dict[str, int] = {}     # model_id -> charged KV bytes
+        self._tick = 0
+        self.stats = {"model_swaps": 0, "swap_bytes": 0,
+                      "swap_seconds": 0.0, "unloads": 0}
+
+    # -- registry -------------------------------------------------------
+    def register(self, model_id: str, cfg: ModelConfig, params,
+                 spec=None) -> ModelEntry:
+        assert model_id not in self.entries, f"duplicate model {model_id}"
+        entry = ModelEntry(model_id=model_id, cfg=cfg, params=params,
+                           weight_bytes=params_nbytes(params),
+                           page_bytes=kv_page_bytes(cfg, self.page_size),
+                           spec=spec)
+        assert entry.weight_bytes <= self.hbm_bytes, (
+            f"{model_id} weights ({entry.weight_bytes}B) exceed the board "
+            f"budget ({self.hbm_bytes}B)")
+        self.entries[model_id] = entry
+        return entry
+
+    def __contains__(self, model_id: str) -> bool:
+        return model_id in self.entries
+
+    # -- residency ------------------------------------------------------
+    def is_resident(self, model_id: str) -> bool:
+        return model_id in self._resident
+
+    def resident_lru(self) -> List[str]:
+        """Resident model ids, least-recently-used first."""
+        return sorted(self._resident, key=lambda m: (self._resident[m], m))
+
+    def touch(self, model_id: str) -> None:
+        self._tick += 1
+        self._resident[model_id] = self._tick
+
+    # -- budget ---------------------------------------------------------
+    def weight_bytes_resident(self) -> int:
+        return sum(self.entries[m].weight_bytes for m in self._resident)
+
+    def kv_bytes_resident(self) -> int:
+        return sum(self._kv_charge.values())
+
+    def used_bytes(self) -> int:
+        return self.weight_bytes_resident() + self.kv_bytes_resident()
+
+    def free_bytes(self) -> int:
+        return self.hbm_bytes - self.used_bytes()
+
+    def charge_kv(self, model_id: str, nbytes: int) -> None:
+        """Record the KV bytes ``model_id``'s page pool currently pins
+        (active pages x page bytes; the engine calls this after every
+        shrink/grow/build)."""
+        assert self.is_resident(model_id), model_id
+        self._kv_charge[model_id] = int(nbytes)
+
+    # -- swaps ----------------------------------------------------------
+    def load(self, model_id: str) -> float:
+        """Mark ``model_id`` resident; returns the modeled seconds its
+        quantized weight shards spend crossing the host link."""
+        entry = self.entries[model_id]
+        if self.is_resident(model_id):
+            self.touch(model_id)
+            return 0.0
+        assert entry.weight_bytes <= self.free_bytes(), (
+            f"load({model_id}): {entry.weight_bytes}B of weights do not "
+            f"fit in {self.free_bytes()}B free -- evict or shrink first")
+        self.touch(model_id)
+        self._kv_charge[model_id] = 0
+        entry.loads += 1
+        seconds = link_transfer_seconds(self.profile, entry.weight_bytes)
+        self.stats["model_swaps"] += 1
+        self.stats["swap_bytes"] += entry.weight_bytes
+        self.stats["swap_seconds"] += seconds
+        return seconds
+
+    def unload(self, model_id: str) -> float:
+        """Drop ``model_id`` from residency.  Weights are read-only (the
+        master copy lives in host RAM), so nothing writes back: the cost
+        of an unload is paid later, by the reload."""
+        assert self.is_resident(model_id), model_id
+        assert self._kv_charge.get(model_id, 0) == 0, (
+            f"unload({model_id}) with live KV charge -- release pages "
+            "first")
+        del self._resident[model_id]
+        del self._kv_charge[model_id]
+        self.stats["unloads"] += 1
+        return 0.0
+
+
+class MultiModelServeEngine:
+    """Continuous batching over N models sharing one board's HBM.
+
+    One inner paged :class:`ServeEngine` per resident model, all built
+    with the same ``n_lanes``/``max_len``/``temperature``/``rng_seed``/
+    ``dispatch_n``/``page_size`` -- so each model's streams match the
+    single-model reference bit for bit.  Every inner engine's physical
+    page array is allocated at the dense target (``n_lanes`` full
+    contexts) and its PagePool is immediately ``shrink``-ed to what the
+    byte budget affords; later loads shrink it further (free pages
+    only), unloads ``grow`` it back.
+
+    Admission is head-of-line FIFO over the submitted request list
+    (which preserves per-model FIFO, the exactness requirement): the
+    head request's model is made resident -- shrinking, then LRU-
+    evicting idle models -- before its admission is attempted.
+    """
+
+    def __init__(self, pool: ModelPool, n_lanes: int = 2,
+                 max_len: int = 64, temperature: float = 0.0,
+                 rng_seed: int = 0, dispatch_n: int = 8,
+                 prefill_bucketing: bool = True):
+        self.pool = pool
+        self.n_lanes = n_lanes
+        self.max_len = max_len
+        self.temperature = temperature
+        self.rng_seed = rng_seed
+        self.dispatch_n = dispatch_n
+        self.prefill_bucketing = prefill_bucketing
+        self.engines: Dict[str, ServeEngine] = {}
+        self.stats = {"model_swaps": 0, "swap_bytes": 0,
+                      "swap_seconds": 0.0, "weight_evictions": 0,
+                      "kv_pages_shrunk": 0, "kv_pages_grown": 0}
+
+    # -- geometry -------------------------------------------------------
+    def _bt_width(self, cfg: ModelConfig) -> int:
+        from repro.models.transformer import paged_capacity
+        if cfg.attn_free:
+            return 0
+        return paged_capacity(self.max_len, cfg) // self.pool.page_size
+
+    def _dense_pages(self, cfg: ModelConfig) -> int:
+        return self.n_lanes * self._bt_width(cfg)
+
+    def _charge(self, model_id: str) -> None:
+        """Sync the pool's KV byte charge with the engine's ACTIVE pages
+        (+1 for the scratch page, which is real HBM)."""
+        eng = self.engines[model_id]
+        entry = self.pool.entries[model_id]
+        self.pool.charge_kv(model_id,
+                            (eng.pool.n_active + 1) * entry.page_bytes)
+
+    # -- residency ------------------------------------------------------
+    @property
+    def resident_models(self) -> List[str]:
+        return list(self.engines)
+
+    def live_models(self) -> List[str]:
+        return [m for m, e in self.engines.items() if e.live_lanes()]
+
+    def _pinned(self, model_id: str) -> bool:
+        """A model serving live lanes is never unloaded."""
+        eng = self.engines[model_id]
+        return bool(eng.live_lanes())
+
+    def _unload(self, model_id: str) -> None:
+        eng = self.engines.pop(model_id)
+        assert not eng.live_lanes(), f"unload of live model {model_id}"
+        entry = self.pool.entries[model_id]
+        # preserve the sampling lineage and accumulate stats so a
+        # reload continues exactly where this residency stopped
+        entry.admit_count = eng._admit_count
+        for k, v in eng.stats.items():
+            entry.stats[k] = entry.stats.get(k, 0) + v
+        self.pool.charge_kv(model_id, 0)
+        self.pool.unload(model_id)
+        self.stats["weight_evictions"] += 1
+
+    def _shrink_other(self, keep: str, need_bytes: int) -> None:
+        """Retire free KV pages of other residents, LRU first, until
+        ``need_bytes`` fit (or nothing shrinkable remains).  Every
+        resident keeps a FLOOR of one full context (its ``bt_width``):
+        below that a model could never admit another request, so the
+        shrink would trade a visible page for a livelock."""
+        for other in self.pool.resident_lru():
+            if self.pool.free_bytes() >= need_bytes:
+                return
+            if other == keep or other not in self.engines:
+                continue
+            entry = self.pool.entries[other]
+            if entry.page_bytes <= 0:
+                continue
+            lack = -(-(need_bytes - self.pool.free_bytes())
+                     // entry.page_bytes)
+            floor = self._bt_width(entry.cfg)
+            can = max(self.engines[other].pool.n_active - floor, 0)
+            shrunk = self.engines[other].pool.shrink(min(lack, can))
+            if shrunk:
+                self.stats["kv_pages_shrunk"] += shrunk
+                self._charge(other)
+
+    def _evict_idle(self, keep: str, need_bytes: int) -> None:
+        """LRU-unload idle residents until ``need_bytes`` fit."""
+        for other in self.pool.resident_lru():
+            if self.pool.free_bytes() >= need_bytes:
+                return
+            if other == keep or other not in self.engines:
+                continue
+            if self._pinned(other):
+                continue
+            self._unload(other)
+
+    def _rebalance(self) -> None:
+        """Grow residents' page pools back toward the dense target,
+        most-recently-used first, while the budget allows."""
+        for mid in reversed(self.pool.resident_lru()):
+            eng = self.engines.get(mid)
+            entry = self.pool.entries[mid]
+            if eng is None or entry.page_bytes <= 0:
+                continue
+            afford = self.pool.free_bytes() // entry.page_bytes
+            grown = eng.pool.grow(min(eng.pool.n_disabled, max(afford, 0)))
+            if grown:
+                self.stats["kv_pages_grown"] += grown
+                self._charge(mid)
+
+    def ensure_resident(self, model_id: str) -> Optional[ServeEngine]:
+        """Make ``model_id`` resident (shrinking, then LRU-evicting idle
+        models for budget) and return its engine; ``None`` when pinned
+        residents hold too much HBM right now -- the caller retries
+        after retirements, exactly like page-blocked admission."""
+        if model_id not in self.pool.entries:
+            raise KeyError(f"model {model_id!r} is not registered")
+        if model_id in self.engines:
+            self.pool.touch(model_id)
+            return self.engines[model_id]
+        entry = self.pool.entries[model_id]
+        bt = self._bt_width(entry.cfg)
+        # minimum viable residency: weights + one full context of pages
+        # + the scratch page (an engine below this could never admit)
+        need = entry.weight_bytes + (bt + 1) * entry.page_bytes
+        if self.pool.free_bytes() < need:
+            self._shrink_other(model_id, need)
+        if self.pool.free_bytes() < need:
+            self._evict_idle(model_id, need)
+        if self.pool.free_bytes() < need:
+            return None
+        self.pool.load(model_id)
+        # the pool's counters are the single source of truth for swap
+        # accounting; the engine's stats mirror them for reporting
+        for k in ("model_swaps", "swap_bytes", "swap_seconds"):
+            self.stats[k] = self.pool.stats[k]
+        dense = self._dense_pages(entry.cfg)
+        if entry.page_bytes > 0:
+            # load() already moved the weights into the resident charge:
+            # what is free now is all KV headroom (minus the scratch page)
+            afford = self.pool.free_bytes() // entry.page_bytes - 1
+            target = max(min(dense, afford), bt)
+        else:
+            target = dense
+        eng = ServeEngine(entry.cfg, entry.params, n_lanes=self.n_lanes,
+                          max_len=self.max_len,
+                          temperature=self.temperature,
+                          rng_seed=self.rng_seed,
+                          dispatch_n=self.dispatch_n,
+                          prefill_bucketing=self.prefill_bucketing,
+                          paged=True, page_size=self.pool.page_size,
+                          n_pages=dense if dense else None)
+        # physical array at the dense target, pool shrunk to the byte
+        # budget: later unloads can grow it back without reallocating
+        eng.pool.shrink(dense - target)
+        # restore the sampling lineage of a previous residency so the
+        # reloaded model's next admission continues the exact stream
+        eng._admit_count = entry.admit_count
+        self.engines[model_id] = eng
+        self._charge(model_id)
+        return eng
+
+    def load(self, model_id: str) -> bool:
+        """Explicit load (no admission); True when resident after."""
+        return self.ensure_resident(model_id) is not None
+
+    def unload(self, model_id: str) -> bool:
+        """Explicit unload; refused (False) while the model serves live
+        lanes.  Freed bytes grow the remaining residents' page pools."""
+        if model_id not in self.engines:
+            return False
+        if self._pinned(model_id):
+            return False
+        self._unload(model_id)
+        self._rebalance()
+        return True
+
+    # -- serving --------------------------------------------------------
+    def admit(self, req: Request) -> bool:
+        eng = self.ensure_resident(req.model_id)
+        if eng is None:
+            return False
+        return bool(eng.free_lanes()) and eng.admit(req)
+
+    def decode_n(self, n: Optional[int] = None) -> Dict[str, Dict[int, List[int]]]:
+        """Advance every resident model's live lanes one dispatch."""
+        out: Dict[str, Dict[int, List[int]]] = {}
+        for mid, eng in self.engines.items():
+            if eng.live_lanes():
+                out[mid] = eng.decode_n(n)
+        return out
+
+    def run(self, requests: Sequence[Request],
+            dispatch_n: Optional[int] = None) -> List[Request]:
+        """Serve a multi-model workload to completion.
+
+        Head-of-line FIFO admission (preserves per-model order, the
+        exactness contract); raises instead of livelocking when the
+        head request can never be admitted and nothing is in flight.
+        """
+        for r in requests:
+            assert r.model_id in self.pool.entries, (
+                f"request uid={r.uid} names unregistered model "
+                f"{r.model_id!r}")
+        pending: Deque[Request] = deque(requests)
+        while pending or self.live_models():
+            while pending and self.admit(pending[0]):
+                pending.popleft()
+            if not self.live_models():
+                head = pending[0]
+                raise RuntimeError(
+                    f"request uid={head.uid} (model {head.model_id!r}) "
+                    f"can never be admitted: hbm={self.pool.hbm_bytes}B, "
+                    f"resident={self.resident_models} and nothing is in "
+                    "flight to retire")
+            self.decode_n(dispatch_n)
+        return list(requests)
+
+    # -- reporting ------------------------------------------------------
+    def model_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-model engine stats, merged across residencies."""
+        out: Dict[str, Dict[str, int]] = {}
+        for mid, entry in self.pool.entries.items():
+            merged = dict(entry.stats)
+            eng = self.engines.get(mid)
+            if eng is not None:
+                for k, v in eng.stats.items():
+                    merged[k] = merged.get(k, 0) + v
+            out[mid] = merged
+        return out
+
+    def kv_pages_active(self) -> Dict[str, int]:
+        """Active (non-disabled) KV pages per resident model -- the
+        visible side of the weights-vs-pages trade-off."""
+        return {mid: eng.pool.n_active
+                for mid, eng in self.engines.items()}

@@ -20,8 +20,8 @@ from repro.core.energy import capex_usd_per_hour, energy_usd_per_hour
 from repro.core.perf_model import InferencePerfModel, LLMSpec, QWEN25_1P5B
 
 __all__ = ["Workload", "phase_tps", "kv_handoff_seconds",
-           "effective_prefill_tps", "capex_usd_per_hour",
-           "energy_usd_per_hour"]
+           "link_transfer_seconds", "effective_prefill_tps",
+           "capex_usd_per_hour", "energy_usd_per_hour"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +46,22 @@ def phase_tps(profile: DeviceProfile, wl: Workload, phase: str,
     return est.tokens_per_s, est.watts
 
 
+def link_transfer_seconds(profile: DeviceProfile, nbytes: float,
+                          peer: DeviceProfile | None = None) -> float:
+    """Seconds to move ``nbytes`` over the board's host link,
+    bottlenecked by the slower endpoint when ``peer`` is given.
+
+    This is the ONE transfer model every byte crossing a board boundary
+    goes through -- prefill KV handoffs, preemption page migrations,
+    and multi-model weight swaps all price against the same PCIe 1.1 x4
+    (~1 GB/s) constraint on the CMP 170HX.
+    """
+    gbps = profile.total_interconnect_gbps()
+    if peer is not None:
+        gbps = min(gbps, peer.total_interconnect_gbps())
+    return nbytes / (gbps * 1e9)
+
+
 def kv_handoff_seconds(profile: DeviceProfile, prompt_len: int,
                        spec: LLMSpec = QWEN25_1P5B,
                        peer: DeviceProfile | None = None) -> float:
@@ -55,11 +71,8 @@ def kv_handoff_seconds(profile: DeviceProfile, prompt_len: int,
     (the decode-side board) is given -- for the CMP 170HX the PCIe 1.1
     x4 link (~1 GB/s) dominates either way.
     """
-    kv_bytes = spec.kv_bytes_per_token() * prompt_len
-    gbps = profile.total_interconnect_gbps()
-    if peer is not None:
-        gbps = min(gbps, peer.total_interconnect_gbps())
-    return kv_bytes / (gbps * 1e9)
+    return link_transfer_seconds(
+        profile, spec.kv_bytes_per_token() * prompt_len, peer=peer)
 
 
 def effective_prefill_tps(profile: DeviceProfile, wl: Workload,

@@ -1,0 +1,506 @@
+"""Multi-model serving: shared HBM budget, weight paging, fleet routing.
+
+Five layers of invariants:
+
+* engine -- two models served concurrently by ``MultiModelServeEngine``
+  produce token streams BIT-IDENTICAL to each model running alone in a
+  single-model ``ServeEngine`` (greedy + temperature, dense + int8 KV),
+  and an unload/reload round-trips exactly (the admission counter --
+  the sampling lineage -- survives residency churn);
+* budget -- weights and KV pages share one byte budget: loading a
+  second model shrinks the first pool's FREE pages (never live ones),
+  unloading grows them back, and a model serving live lanes is never
+  unloaded (LRU eviction considers idle residents only);
+* allocator -- ``PagePool`` conservation under randomized
+  reserve/alloc/free/unreserve/shrink/grow churn (hypothesis), and
+  ``restore`` returns its reservation on the scatter failure path;
+* fleet -- multi-model routing weighs swap cost against resident-model
+  affinity (a hot node wins over forcing a weight swap over the PCIe
+  1.1 x4 link), reports carry ``model_swaps``/``swap_bytes``/per-model
+  tpot, and the execution replay's per-model token accounting is budget
+  invariant;
+* routing -- the preemption-aware SLO router's anticipated
+  eviction-cost term avoids migrations the reactive router incurs.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (ModelPool, MultiModelServeEngine, PagePool,
+                           Request, ServeEngine, kv_page_bytes,
+                           params_nbytes)
+
+pytestmark = pytest.mark.multimodel
+
+ENGINE_KW = dict(n_lanes=2, max_len=32, dispatch_n=4, rng_seed=7)
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def two_models():
+    cfg_a = get_config("qwen2.5-1.5b", smoke=True)
+    cfg_b = get_config("olmo-1b", smoke=True)
+    params_a = build_model(cfg_a).init(jax.random.PRNGKey(0))
+    params_b = build_model(cfg_b).init(jax.random.PRNGKey(1))
+    return {"a": (cfg_a, params_a), "b": (cfg_b, params_b)}
+
+
+def _mk_pool(models, hbm_bytes=None, slack_pages=0):
+    """ModelPool over ``models``; default budget = dense no-swap."""
+    if hbm_bytes is None:
+        hbm_bytes = sum(
+            params_nbytes(p) + (ENGINE_KW["n_lanes"]
+                                * (ENGINE_KW["max_len"] // PAGE)
+                                + 1 + slack_pages) * kv_page_bytes(c, PAGE)
+            for c, p in models.values())
+    pool = ModelPool(hbm_bytes, page_size=PAGE)
+    for mid in sorted(models):
+        pool.register(mid, models[mid][0], models[mid][1])
+    return pool
+
+
+def _reqs(models, spec, seed=3):
+    """Interleaved request list: spec = [(mid, plen, gen), ...]."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for uid, (mid, plen, gen) in enumerate(spec):
+        vocab = models[mid][0].vocab_size
+        out.append(Request(uid=uid,
+                           prompt=rng.integers(0, vocab, plen,
+                                               dtype=np.int32),
+                           max_new_tokens=gen, model_id=mid))
+    return out
+
+
+def _solo_streams(models, reqs, mid, **kw):
+    cfg, params = models[mid]
+    solo = [Request(uid=r.uid, prompt=r.prompt.copy(),
+                    max_new_tokens=r.max_new_tokens)
+            for r in reqs if r.model_id == mid]
+    eng = ServeEngine(cfg, params, paged=True, page_size=PAGE,
+                      **dict(ENGINE_KW, **kw))
+    eng.run(solo)
+    return [r.generated for r in solo]
+
+
+# ----------------------------------------------------------------------
+# engine: concurrent multi-model exactness
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.9])
+@pytest.mark.parametrize("kv_quant", [None, "int8"])
+def test_two_models_concurrent_token_exact(two_models, temperature,
+                                           kv_quant):
+    """Two models interleaved on one board reproduce each model's solo
+    single-engine streams bit for bit -- streams depend only on
+    per-model admission order and token index, never on the co-tenant,
+    the pool size, or the swap schedule."""
+    models = {
+        mid: (dataclasses.replace(cfg, kv_quant=kv_quant), params)
+        for mid, (cfg, params) in two_models.items()}
+    pool = _mk_pool(models)
+    mm = MultiModelServeEngine(pool, temperature=temperature, **ENGINE_KW)
+    reqs = _reqs(models, [("a", 5, 8), ("b", 7, 6), ("a", 9, 8),
+                          ("b", 4, 6), ("a", 6, 8)])
+    mm.run(reqs)
+    for mid in ("a", "b"):
+        got = [r.generated for r in reqs if r.model_id == mid]
+        assert got == _solo_streams(models, reqs, mid,
+                                    temperature=temperature), mid
+    assert mm.stats["model_swaps"] == 2           # one cold load each
+    for eng in mm.engines.values():
+        eng.pool.check()
+        assert eng.pool.n_in_use == 0
+
+
+def test_exactness_survives_tight_budget_churn(two_models):
+    """A budget too small for both models' dense pools forces shrink +
+    LRU weight eviction churn -- and must not move a single token."""
+    wa = params_nbytes(two_models["a"][1])
+    wb = params_nbytes(two_models["b"][1])
+    tight = (wa + wb + 6 * kv_page_bytes(two_models["a"][0], PAGE)
+             + 2 * kv_page_bytes(two_models["b"][0], PAGE))
+    pool = _mk_pool(two_models, hbm_bytes=tight)
+    mm = MultiModelServeEngine(pool, **ENGINE_KW)
+    reqs = _reqs(two_models,
+                 [("a" if i % 2 == 0 else "b", 5 + i % 3, 6)
+                  for i in range(8)])
+    mm.run(reqs)
+    assert mm.stats["weight_evictions"] > 0       # churn actually happened
+    assert mm.stats["model_swaps"] > 2            # reloads, not just colds
+    for mid in ("a", "b"):
+        got = [r.generated for r in reqs if r.model_id == mid]
+        assert got == _solo_streams(two_models, reqs, mid), mid
+
+
+def test_unload_reload_round_trips_exactly(two_models):
+    """Serve A, unload it, serve B, reload A, serve more A: the full A
+    stream equals one uninterrupted single-engine run -- the admission
+    counter (sampling lineage) survives the round trip."""
+    pool = _mk_pool(two_models)
+    mm = MultiModelServeEngine(pool, **ENGINE_KW)
+    first = _reqs(two_models, [("a", 5, 6), ("a", 7, 6)], seed=5)
+    mm.run(first)
+    assert mm.unload("a")
+    assert "a" not in mm.resident_models
+    mm.run(_reqs(two_models, [("b", 6, 6)], seed=6))
+    later = _reqs(two_models, [("a", 9, 6)], seed=8)
+    mm.run(later)                                  # transparent reload
+    all_a = first + later
+    assert ([r.generated for r in all_a]
+            == _solo_streams(two_models, all_a, "a"))
+    entry = pool.entries["a"]
+    assert entry.loads == 2
+    assert mm.stats["model_swaps"] == 3            # a, b, a-again
+
+
+def test_live_model_is_pinned_against_unload(two_models):
+    """A model serving live lanes is never unloaded: explicit unload is
+    refused, and ensure_resident of a competitor that needs its bytes
+    returns None instead of evicting it."""
+    wa = params_nbytes(two_models["a"][1])
+    wb = params_nbytes(two_models["b"][1])
+    bt = ENGINE_KW["max_len"] // PAGE
+    # room for A's dense pool, but B's minimum cannot coexist with A
+    tight = (wa + wb + (2 * bt + 1) * kv_page_bytes(two_models["a"][0],
+                                                    PAGE))
+    pool = _mk_pool(two_models, hbm_bytes=tight)
+    mm = MultiModelServeEngine(pool, **ENGINE_KW)
+    req = _reqs(two_models, [("a", 5, 8)])[0]
+    assert mm.admit(req)
+    assert mm.engines["a"].live_lanes()
+    assert not mm.unload("a")                      # pinned: live lanes
+    assert mm.ensure_resident("b") is None         # cannot evict A either
+    assert "a" in mm.resident_models
+    while mm.engines["a"].live_lanes():
+        mm.decode_n()
+    assert mm.unload("a")                          # idle now: allowed
+    assert mm.ensure_resident("b") is not None
+
+
+def test_weight_residency_trades_off_against_kv_pages(two_models):
+    """Loading a second model SHRINKS the first pool's free pages (the
+    byte budget is conserved); unloading it GROWS them back toward the
+    dense target."""
+    wa = params_nbytes(two_models["a"][1])
+    wb = params_nbytes(two_models["b"][1])
+    pb_a = kv_page_bytes(two_models["a"][0], PAGE)
+    pb_b = kv_page_bytes(two_models["b"][0], PAGE)
+    bt = ENGINE_KW["max_len"] // PAGE
+    dense_a = ENGINE_KW["n_lanes"] * bt
+    # A's dense pool fits alone; B's minimum residency is 2 A-pages
+    # short, so its arrival must carve exactly those out of A's pool
+    budget = (wa + (dense_a + 1) * pb_a + wb + (bt + 1) * pb_b
+              - 2 * pb_a)
+    pool = _mk_pool(two_models, hbm_bytes=budget)
+    mm = MultiModelServeEngine(pool, **ENGINE_KW)
+    assert mm.load("a")
+    before = mm.kv_pages_active()["a"]
+    assert before == dense_a
+    assert mm.load("b")
+    after = mm.kv_pages_active()["a"]
+    assert after < before                          # pages paid for weights
+    assert mm.stats["kv_pages_shrunk"] == before - after
+    assert pool.free_bytes() >= 0                  # budget conserved
+    assert mm.unload("b")
+    assert mm.kv_pages_active()["a"] == before     # grown back
+    assert mm.stats["kv_pages_grown"] == before - after
+    for eng in mm.engines.values():
+        eng.pool.check()
+
+
+def test_register_rejects_model_larger_than_board():
+    pool = ModelPool(1024, page_size=PAGE)
+    cfg = get_config("qwen2.5-1.5b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    with pytest.raises(AssertionError, match="exceed the board"):
+        pool.register("too-big", cfg, params)
+
+
+# ----------------------------------------------------------------------
+# allocator: restore failure hygiene + randomized shrink/grow churn
+# ----------------------------------------------------------------------
+
+def test_restore_unreserves_on_scatter_failure(two_models):
+    """A checkpoint whose payload cannot scatter (malformed shape) must
+    return BOTH its mapped pages and the rest of its reservation -- the
+    reserve/alloc pairing audit of restore()."""
+    cfg, params = two_models["a"]
+    eng = ServeEngine(cfg, params, paged=True, page_size=PAGE,
+                      **ENGINE_KW)
+    req = Request(uid=0, prompt=np.arange(9, dtype=np.int32) % 17,
+                  max_new_tokens=8)
+    assert eng.admit(req)
+    eng.decode_n()
+    ckpt = eng.evict(0)
+    free_before = eng.pool.n_free
+    avail_before = eng.pool.available()
+    # corrupt the payload: drop an axis so dynamic_update_slice rejects
+    ckpt.kv_pages = {k: v[..., 0] for k, v in ckpt.kv_pages.items()}
+    with pytest.raises(Exception):
+        eng.restore(ckpt)
+    eng.pool.check()
+    assert eng.pool.n_free == free_before          # nothing leaked
+    assert eng.pool.available() == avail_before    # reservation returned
+    assert eng.lane_req[0] is None
+    scratch = eng._scratch_page
+    assert bool(np.all(np.asarray(eng.cache["block_tables"][0]) == scratch))
+    # the engine still serves fresh work afterwards
+    req2 = Request(uid=1, prompt=np.arange(5, dtype=np.int32),
+                   max_new_tokens=4)
+    eng.run([req2])
+    assert len(req2.generated) == 4
+    eng.pool.check()
+
+
+def test_pagepool_shrink_grow_respects_reservations():
+    pool = PagePool(8, PAGE)
+    assert pool.reserve(3)
+    assert pool.shrink(100) == 5                   # never promised pages
+    assert pool.available() == 0
+    assert pool.n_disabled == 5 and pool.n_active == 3
+    pages = pool.alloc(2)
+    assert pool.grow(2) == 2
+    pool.free(pages)
+    pool.unreserve(1)
+    assert pool.grow(100) == 3
+    assert pool.n_free == 8 and pool.n_disabled == 0
+    pool.check()
+
+
+def test_pagepool_randomized_invariants():
+    """Randomized reserve/alloc/free/unreserve/shrink/grow sequences:
+    conservation, no double-issue, and reservation safety hold after
+    every operation (hypothesis)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    ops = st.lists(st.tuples(
+        st.sampled_from(["reserve", "alloc", "free", "unreserve",
+                         "shrink", "grow"]),
+        st.integers(0, 9)), max_size=80)
+
+    @given(ops, st.integers(1, 24))
+    @settings(max_examples=60, deadline=None)
+    def run(seq, n_pages):
+        pool = PagePool(n_pages, PAGE)
+        live = []
+        for op, n in seq:
+            if op == "reserve":
+                before = pool.available()
+                assert pool.reserve(n) == (n <= before)
+            elif op == "alloc":
+                k = min(n, pool._reserved, pool.n_free)
+                live.extend(pool.alloc(k))
+            elif op == "free":
+                k = min(n, len(live))
+                pool.free([live.pop() for _ in range(k)])
+            elif op == "unreserve":
+                pool.unreserve(min(n, pool._reserved))
+            elif op == "shrink":
+                got = pool.shrink(n)
+                assert got <= n
+            elif op == "grow":
+                got = pool.grow(n)
+                assert got <= n
+            pool.check()                           # conservation, always
+            assert pool.available() >= 0
+            assert pool.n_in_use == len(live)
+        pool.free(live)
+        pool.grow(pool.n_pages)
+        pool.unreserve(pool._reserved)
+        pool.check()
+        assert pool.n_free == pool.n_pages         # drains clean
+
+    run()
+
+
+# ----------------------------------------------------------------------
+# fleet: swap-cost vs resident-affinity routing
+# ----------------------------------------------------------------------
+
+def _mm_fleet(hbm_gb):
+    from repro.fleet import NodeSpec
+    return [NodeSpec("a100-40g", 1, "prefill",
+                     model_ids=("big", "small"), hbm_gb=40.0),
+            NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                     model_ids=("big", "small"), resident=("big",),
+                     hbm_gb=hbm_gb, page_size=16),
+            NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                     model_ids=("big", "small"), resident=("small",),
+                     hbm_gb=hbm_gb, page_size=16)]
+
+
+def _mm_specs():
+    from repro.core.perf_model import QWEN25_0P5B, QWEN25_1P5B
+    return {"big": QWEN25_1P5B, "small": QWEN25_0P5B}
+
+
+def _mm_sim_trace():
+    from repro.fleet import multimodel_trace, poisson_trace
+    from repro.fleet.workload import LengthDist
+    return multimodel_trace(
+        poisson_trace(2.0, 60.0, seed=3, prompt=LengthDist(256, cv=0.3),
+                      gen=LengthDist(128, cv=0.4)),
+        {"big": 1, "small": 1}, seed=1)
+
+
+def test_fleet_affinity_routing_beats_weight_thrash():
+    """On boards too small to co-host both models' weights, the
+    affinity-aware router serves each model on its hot board (zero
+    swaps); the affinity-blind baseline thrashes weights over the host
+    link and its page pools shrink under the swapped-in weights --
+    visible as swaps, swap bytes, and a far worse decode tail."""
+    from repro.fleet import FleetSim, LeastLoadedRouter
+
+    trace = _mm_sim_trace()
+    aware = FleetSim(_mm_fleet(2.0), trace, fmt="q8_0",
+                     model_specs=_mm_specs(),
+                     router=LeastLoadedRouter()).run()
+    blind = FleetSim(_mm_fleet(2.0), trace, fmt="q8_0",
+                     model_specs=_mm_specs(),
+                     router=LeastLoadedRouter(model_aware=False)).run()
+    assert aware.completed == aware.offered
+    assert blind.completed == blind.offered
+    assert aware.model_swaps == 0                  # both models stay hot
+    assert blind.model_swaps > 0 and blind.swap_bytes > 0
+    assert len(blind.swap_events) == blind.model_swaps
+    assert aware.tpot_p99_s < blind.tpot_p99_s
+    # per-model report rows: tpot + tokens/joule for both tenants
+    assert [m for m, *_ in aware.per_model] == ["big", "small"]
+    for _, tpot_p50, toks, tpj in aware.per_model:
+        assert tpot_p50 > 0 and toks > 0 and tpj > 0
+
+
+def test_fleet_multimodel_deterministic():
+    from repro.fleet import FleetSim, LeastLoadedRouter
+
+    trace = _mm_sim_trace()
+    runs = [FleetSim(_mm_fleet(2.5), trace, fmt="q8_0",
+                     model_specs=_mm_specs(),
+                     router=LeastLoadedRouter()).run() for _ in range(2)]
+    assert runs[0].metrics() == runs[1].metrics()
+    assert runs[0].swap_events == runs[1].swap_events
+    assert runs[0].per_model == runs[1].per_model
+
+
+def test_simnode_swap_evicts_lru_idle_only():
+    """Direct SimNode residency semantics: swap_in charges the weight
+    transfer once, evicts the LRU *idle* resident when the budget
+    over-commits, and kv_pool_pages tracks the resident weights."""
+    from repro.core.device_profile import get_profile
+    from repro.fleet import SimNode
+
+    specs = _mm_specs()
+    node = SimNode("n0", get_profile("cmp-170hx-nofma"), "decode",
+                   "q8_0", decode_lanes=4, page_size=16,
+                   models=specs, resident_models=("big",), hbm_gb=2.0)
+    pages_solo = node.kv_pool_pages
+    assert pages_solo > 0
+    t = node.swap_in("small", now=1.0)
+    assert t > 0                                   # paid the link
+    # 2 GB cannot hold both: the idle LRU resident (big) was evicted
+    assert set(node.resident_models) == {"small"}
+    assert node.model_evictions == 1
+    assert node.swap_in("small", now=2.0) == 0.0   # hot: free
+    # a live slot pins its model against eviction
+    slot = node.make_slot(0, 256, 64, model_id="small")
+    node.decode_admit(slot, 2.0)
+    node.swap_in("big", now=3.0)
+    assert "small" in node.resident_models         # in use: not evicted
+    assert node.kv_pages_free() < 0                # over-committed instead
+    assert node.model_swaps == 2
+
+
+def test_multimodel_trace_mix_deterministic():
+    from repro.fleet import multimodel_trace, poisson_trace
+
+    base = poisson_trace(5.0, 40.0, seed=0)
+    t1 = multimodel_trace(base, {"x": 3, "y": 1}, seed=2)
+    t2 = multimodel_trace(base, {"x": 3, "y": 1}, seed=2)
+    assert t1 == t2
+    counts = {m: sum(1 for r in t1 if r.model_id == m) for m in ("x", "y")}
+    assert counts["x"] > counts["y"] > 0           # mix roughly honored
+    assert [r.uid for r in t1] == [r.uid for r in base]  # arrivals kept
+
+
+# ----------------------------------------------------------------------
+# routing: anticipated eviction cost (preemption-aware SLO routing)
+# ----------------------------------------------------------------------
+
+def test_preemption_aware_router_avoids_reactive_migrations():
+    """The eviction-cost term steers load off the near-capacity board
+    BEFORE its pool exhausts: the reactive router incurs migrations the
+    anticipatory one never needs, at no completion or tail cost."""
+    from repro.fleet import (FleetSim, NodeSpec, PreemptionPolicy,
+                             PreemptionAwareSLORouter, SLOAwareRouter,
+                             poisson_trace)
+    from repro.fleet.workload import LengthDist
+
+    def fleet():
+        return [NodeSpec("a100-40g", 1, "prefill"),
+                NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                         kv_pool_pages=40, page_size=16),
+                NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                         kv_pool_pages=512, page_size=16)]
+
+    trace = poisson_trace(3.0, 40.0, seed=2,
+                          prompt=LengthDist(256, cv=0.3),
+                          gen=LengthDist(128, cv=0.5))
+    reactive = FleetSim(fleet(), trace, fmt="q8_0",
+                        router=SLOAwareRouter(tpot_slo_s=0.05),
+                        preemption=PreemptionPolicy()).run()
+    anticip = FleetSim(fleet(), trace, fmt="q8_0",
+                       router=PreemptionAwareSLORouter(tpot_slo_s=0.05),
+                       preemption=PreemptionPolicy()).run()
+    assert reactive.preemptions > 0                # pays migrations
+    assert anticip.preemptions == 0                # never needs one
+    assert anticip.pages_migrated == 0
+    assert anticip.completed == anticip.offered == reactive.completed
+    assert anticip.tpot_p99_s <= reactive.tpot_p99_s * 1.05
+
+
+# ----------------------------------------------------------------------
+# execution replay: budget-invariant per-model accounting
+# ----------------------------------------------------------------------
+
+def test_execution_multimodel_exactness_and_budget_invariance(two_models):
+    """The real-engine replay of a two-model trace is token-exact vs
+    per-model solo runs, and token counts are invariant to the HBM
+    budget -- only the swap counters change when weights must page."""
+    from repro.fleet import FleetRequest
+    from repro.fleet.execution import (dense_hbm_bytes,
+                                       run_multimodel_trace_on_engine,
+                                       validate_multimodel_exactness)
+
+    trace = [FleetRequest(uid=i, arrival_s=0.1 * i, prompt_len=5 + i % 4,
+                          gen_len=6, model_id="a" if i % 2 == 0 else "b")
+             for i in range(6)]
+    kw = dict(n_lanes=2, max_len=32, dispatch_n=4, page_size=PAGE)
+    roomy = run_multimodel_trace_on_engine(trace, two_models, **kw)
+    assert roomy.model_swaps == 2 and roomy.weight_evictions == 0
+    assert set(roomy.gen_by_model) == {"a", "b"}
+    assert roomy.gen_tokens == 6 * 6
+
+    wa = params_nbytes(two_models["a"][1])
+    wb = params_nbytes(two_models["b"][1])
+    tight = (wa + wb + 6 * kv_page_bytes(two_models["a"][0], PAGE)
+             + 2 * kv_page_bytes(two_models["b"][0], PAGE))
+    assert tight < dense_hbm_bytes(two_models, n_lanes=2, max_len=32,
+                                   page_size=PAGE)
+    squeezed = run_multimodel_trace_on_engine(trace, two_models,
+                                              hbm_bytes=tight, **kw)
+    assert squeezed.gen_by_uid == roomy.gen_by_uid  # tokens: invariant
+    assert squeezed.model_swaps > roomy.model_swaps  # swaps: not
+    assert squeezed.swap_bytes > roomy.swap_bytes
+
+    result = validate_multimodel_exactness(trace, two_models,
+                                           hbm_bytes=tight,
+                                           temperature=0.8, **kw)
+    assert result["exact"], result["mismatches"]
+    assert result["model_swaps"] > 2
