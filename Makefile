@@ -11,17 +11,20 @@
 # `make test-multimodel` runs the multi-model serving layer (ModelPool
 # weight paging, MultiModelServeEngine exactness, fleet residency
 # routing, PagePool shrink/grow invariants).
+# `make test-obs` runs the telemetry layer (metrics registry, span
+# tracer exactness-neutrality, event log, sim-to-real calibration gate).
 # `make bench-smoke` runs the measured decode-path bench on a tiny config
 # and emits BENCH_decode.json (tokens/s, dispatches/token, bytes/token,
 # and the paged section: admission capacity, paged-vs-dense token parity,
 # bytes/token parity) -- the decode perf trajectory is tracked from PR 2
-# onward; the bench FAILS if the paged section is missing or paged
-# bytes/token drifts >10% from dense at full occupancy.
+# onward; the bench FAILS if the paged section is missing, paged
+# bytes/token drifts >10% from dense at full occupancy, or the telemetry
+# section's sim-to-real calibration fit exceeds its declared tolerance.
 
 PYTEST := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest
 PYRUN  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast test-paged test-preempt test-multimodel bench bench-smoke
+.PHONY: test test-fast test-paged test-preempt test-multimodel test-obs bench bench-smoke
 
 test:
 	$(PYTEST) -x -q
@@ -37,6 +40,9 @@ test-preempt:
 
 test-multimodel:
 	$(PYTEST) -q -m multimodel
+
+test-obs:
+	$(PYTEST) -q -m obs
 
 bench:
 	$(PYRUN) -m benchmarks.run

@@ -42,6 +42,16 @@ The ``multimodel`` section serves TWO models through one
 streams must be bit-identical to single-model engines (greedy AND
 temperature), token counts budget invariant, and the tight budget must
 show real weight-swap churn (``make bench-smoke`` gates on all three).
+
+The ``telemetry`` section exercises the ``repro.obs`` layer on the same
+decode path: tracing must be exactness-neutral (identical token streams
+and compile counters traced vs untraced), the ``decode.dispatch`` span
+count must equal the dispatch counter, per-phase span durations are
+summarised (p50/p99), and the sim-to-real calibration gate
+(:func:`repro.obs.predict_replay` vs a measured
+``run_trace_on_engine`` replay) must fit within tolerance -- while a
+deliberately perturbed phase model must FAIL the same gate
+(``make bench-smoke`` gates on all of it).
 """
 
 from __future__ import annotations
@@ -370,6 +380,108 @@ def multimodel_metrics(cfg, params, *, n_lanes: int, max_len: int,
     }
 
 
+def telemetry_metrics(cfg, params, prompts, *, n_lanes: int,
+                      max_len: int, max_new: int, dispatch_n: int,
+                      page_size: int) -> dict:
+    """Telemetry section of BENCH_decode.json.
+
+    Three claims about the ``repro.obs`` layer, measured on the real
+    paged decode path:
+
+    * **overhead budget** -- the SAME workload served with tracing on
+      and off produces identical token streams and identical
+      prefill/ssm/decode compile counters (spans wrap host work only;
+      nothing enters a jitted computation);
+    * **span/counter agreement** -- one ``decode.dispatch`` span per
+      counted dispatch, per-phase host durations folded to p50/p99;
+    * **sim-to-real calibration** -- :func:`repro.obs.predict_replay`
+      (the pure-host scheduling mirror) must match a measured
+      ``run_trace_on_engine`` replay's dispatch counts, decode steps,
+      token totals, and page high-water mark within tolerance, and a
+      deliberately mis-modeled phase model (wrong ``dispatch_n``, wrong
+      page geometry) must FAIL the same gate -- the gate's self-test.
+    """
+    from repro.fleet.execution import run_trace_on_engine
+    from repro.fleet.workload import FleetRequest
+    from repro.obs import (MetricsRegistry, SpanTracer, calibrate_replay,
+                           fit_dispatch_time_model, predict_replay)
+    from repro.serving import Request, ServeEngine
+
+    # -- overhead budget: tracing changes nothing observable ----------
+    def serve(traced: bool):
+        registry = MetricsRegistry()
+        tracer = SpanTracer(enabled=traced, registry=registry)
+        reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        eng = ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
+                          dispatch_n=dispatch_n, paged=True,
+                          page_size=page_size, tracer=tracer,
+                          registry=registry)
+        eng.run(reqs)
+        return [tuple(r.generated) for r in reqs], dict(eng.stats), tracer
+
+    plain_out, plain_stats, _ = serve(False)
+    traced_out, traced_stats, tracer = serve(True)
+    compile_keys = ("prefill_compiles", "ssm_prefill_compiles",
+                    "decode_compiles")
+    neutral = (plain_out == traced_out
+               and all(plain_stats[k] == traced_stats[k]
+                       for k in compile_keys))
+    n_dispatch_spans = len(tracer.spans_named("decode.dispatch"))
+
+    # -- calibration replay (traced, separate registry) ---------------
+    trace = [FleetRequest(uid=i, arrival_s=0.05 * i,
+                          prompt_len=4 + i % 5, gen_len=3 + i % 6)
+             for i in range(3 * n_lanes)]
+    cal_registry = MetricsRegistry()
+    cal_tracer = SpanTracer(enabled=True, registry=cal_registry)
+    real = run_trace_on_engine(trace, cfg, params, n_lanes=n_lanes,
+                               max_len=max_len, dispatch_n=dispatch_n,
+                               paged=True, page_size=page_size,
+                               tracer=cal_tracer, registry=cal_registry)
+    model_kw = dict(n_lanes=n_lanes, max_len=max_len, paged=True)
+    sim = predict_replay(trace, dispatch_n=dispatch_n,
+                         page_size=page_size, **model_kw)
+    report = calibrate_replay(real, sim, spans=cal_tracer.spans)
+    # gate self-test: a mis-modeled phase model must fail loudly
+    pert_dispatch = calibrate_replay(
+        real, predict_replay(trace, dispatch_n=1, page_size=page_size,
+                             **model_kw))
+    pert_pages = calibrate_replay(
+        real, predict_replay(trace, dispatch_n=dispatch_n,
+                             page_size=max(1, page_size // 4),
+                             **model_kw))
+
+    phases = {
+        name: {k: (v if k == "count" else round(v, 6))
+               for k, v in cal_registry[name].summary().items()}
+        for name in cal_registry.names() if name.startswith("span.")}
+    return {
+        "overhead_budget": {
+            "token_stream_identical": plain_out == traced_out,
+            "compile_counters": {k: {"untraced": plain_stats[k],
+                                     "traced": traced_stats[k]}
+                                 for k in compile_keys},
+            "tracing_neutral": neutral,
+        },
+        "decode_dispatch_spans": n_dispatch_spans,
+        "dispatch_span_count_matches_stats":
+            n_dispatch_spans == traced_stats["decode_dispatches"],
+        "well_nested": tracer.check_well_nested(),
+        "phase_durations_s": phases,
+        "dispatch_time_fit": {
+            k: (v if k == "n_spans" else round(v, 9))
+            for k, v in fit_dispatch_time_model(cal_tracer.spans).items()},
+        "calibration": report.as_dict(),
+        "perturbation_check": {
+            "dispatch_n=1_fails": not pert_dispatch.ok,
+            "page_size_div4_fails": not pert_pages.ok,
+            "gate_self_test_pass": (not pert_dispatch.ok
+                                    and not pert_pages.ok),
+        },
+    }
+
+
 def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
                         max_len: int = 64, prompt_len: int = 8,
                         max_new: int = 16, n_requests: int = 8,
@@ -477,6 +589,11 @@ def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
                                          max_len=max_len, max_new=max_new,
                                          dispatch_n=dispatch_n,
                                          page_size=bk),
+        "telemetry": telemetry_metrics(cfg, params, prompts,
+                                       n_lanes=n_lanes, max_len=max_len,
+                                       max_new=max_new,
+                                       dispatch_n=dispatch_n,
+                                       page_size=bk),
     }
 
 
@@ -541,9 +658,21 @@ def main(argv=None) -> int:
         and mm["weight_evictions"]["tight"] > 0
         and mm["swap_bytes"]["tight"] > mm["swap_bytes"]["roomy"])
     ok = ok and mm_ok
+    tel = rec.get("telemetry", {})
+    tel_ok = (
+        bool(tel)
+        and tel["overhead_budget"]["tracing_neutral"]
+        and tel["dispatch_span_count_matches_stats"]
+        and tel["well_nested"]
+        # sim-to-real drift gate: the scheduling model must fit the
+        # measured replay, and a perturbed model must NOT fit
+        and tel["calibration"]["ok"]
+        and tel["perturbation_check"]["gate_self_test_pass"])
+    ok = ok and tel_ok
     print("BENCH_decode paged section:", "PASS" if paged_ok else "FAIL")
     print("BENCH_decode migration section:", "PASS" if mig_ok else "FAIL")
     print("BENCH_decode multimodel section:", "PASS" if mm_ok else "FAIL")
+    print("BENCH_decode telemetry section:", "PASS" if tel_ok else "FAIL")
     print("BENCH_decode:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -17,6 +17,7 @@ simulated served-token totals must equal the engine's exactly.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -25,6 +26,9 @@ import numpy as np
 from repro.fleet.sim import FleetReport, FleetSim
 from repro.fleet.workload import FleetRequest
 from repro.models.common import ModelConfig
+from repro.obs import events as obs_events
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import SpanTracer
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.modelpool import ModelPool, MultiModelServeEngine
 
@@ -33,15 +37,21 @@ from repro.serving.modelpool import ModelPool, MultiModelServeEngine
 class ExecutionResult:
     """Token accounting from a real engine replay of a trace.
 
-    ``kv_pages_hwm`` / ``kv_spill_events`` surface the paged engine's
+    ``kv_pages_hwm`` / ``kv_admit_blocked`` surface the paged engine's
     page-pool pressure: peak pages promised+mapped, and requests that
     found a free lane but had to WAIT for pages (counted once per
     blocked episode, so the number is dispatch-granularity invariant).
     Zero for a fixed-lane replay.  These feed the sim-to-real
     calibration loop: the simulator's ``SimNode.kv_pages_hwm`` models
-    the same peak; its ``kv_spill_events`` counts over-commit
-    transitions, the sim-side analogue of a blocked episode (the sim
-    over-commits where the engine defers).
+    the same peak.
+
+    Naming note: this field was published as ``kv_spill_events`` for a
+    while, ALIASING the simulator's counter of the same name -- which
+    counts over-commit TRANSITIONS in ``SimNode._note_occupancy``, a
+    different event (the sim over-commits where the engine defers
+    admission).  The telemetry schema keeps them distinct
+    (``serve.kv.admit_blocked`` vs ``fleet.node.*.kv_spill_events``);
+    the old attribute survives as a deprecated alias.
     """
 
     prompt_tokens: int
@@ -50,13 +60,24 @@ class ExecutionResult:
     decode_dispatches: int = 0
     decode_steps: int = 0
     kv_pages_hwm: int = 0
-    kv_spill_events: int = 0
+    kv_admit_blocked: int = 0
     #: mid-decode evictions / checkpoint re-admissions / KV pages that
     #: crossed an evict->restore cycle during the replay (all zero when
     #: the replay runs without preemption injection)
     preemptions: int = 0
     restores: int = 0
     pages_migrated: int = 0
+
+    @property
+    def kv_spill_events(self) -> int:
+        """Deprecated alias of ``kv_admit_blocked`` (the engine never
+        spills; the sim's spill counter is a different event)."""
+        warnings.warn(
+            "ExecutionResult.kv_spill_events is a deprecated alias of "
+            "kv_admit_blocked (the simulator's kv_spill_events counts "
+            "over-commit transitions, a distinct event)",
+            DeprecationWarning, stacklevel=2)
+        return self.kv_admit_blocked
 
 
 def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
@@ -67,7 +88,9 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
                         paged: bool = False, page_size: int = 16,
                         n_pages: Optional[int] = None,
                         temperature: float = 0.0,
-                        preempt_every: Optional[int] = None
+                        preempt_every: Optional[int] = None,
+                        tracer: Optional[SpanTracer] = None,
+                        registry: Optional[MetricsRegistry] = None
                         ) -> ExecutionResult:
     """Serve ``trace`` through the real continuous batcher.
 
@@ -96,7 +119,8 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
     engine = ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
                          dispatch_n=dispatch_n, paged=paged,
                          page_size=page_size, n_pages=n_pages,
-                         temperature=temperature)
+                         temperature=temperature, tracer=tracer,
+                         registry=registry)
     if preempt_every is None:
         engine.run(reqs)
     else:
@@ -113,7 +137,7 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
         decode_dispatches=engine.stats["decode_dispatches"],
         decode_steps=engine.stats["decode_steps"],
         kv_pages_hwm=engine.stats["kv_pages_hwm"],
-        kv_spill_events=engine.stats["kv_admit_blocked"],
+        kv_admit_blocked=engine.stats["kv_admit_blocked"],
         preemptions=engine.stats["preemptions"],
         restores=engine.stats["restores"],
         pages_migrated=engine.stats["pages_migrated"])
@@ -186,13 +210,22 @@ def validate_preemption_exactness(trace: Sequence[FleetRequest],
     moved, stats = streams(True)
     mismatches = {uid: (base[uid], moved[uid]) for uid in base
                   if base[uid] != moved[uid]}
-    return {
+    verdict = {
         "resume_exact": not mismatches,
         "mismatches": mismatches,
         "preemptions": stats["preemptions"],
         "restores": stats["restores"],
         "pages_migrated": stats["pages_migrated"],
     }
+    # auditable record: the replay session keeps evidence the check ran
+    obs_events.emit("validate.preemption_exactness",
+                    resume_exact=verdict["resume_exact"],
+                    n_requests=len(base),
+                    n_mismatches=len(mismatches),
+                    preemptions=verdict["preemptions"],
+                    restores=verdict["restores"],
+                    pages_migrated=verdict["pages_migrated"])
+    return verdict
 
 
 @dataclasses.dataclass(frozen=True)
@@ -334,7 +367,7 @@ def validate_multimodel_exactness(
         for r in solo:
             if tuple(r.generated) != moved[r.uid]:
                 mismatches[r.uid] = (tuple(r.generated), moved[r.uid])
-    return {
+    verdict = {
         "exact": not mismatches,
         "mismatches": mismatches,
         "model_swaps": mm.stats["model_swaps"],
@@ -344,6 +377,14 @@ def validate_multimodel_exactness(
                                   if r.model_id == mid)
                          for mid in sorted(models)},
     }
+    # auditable record: the replay session keeps evidence the check ran
+    obs_events.emit("validate.multimodel_exactness",
+                    exact=verdict["exact"],
+                    n_requests=len(reqs),
+                    n_mismatches=len(mismatches),
+                    model_swaps=verdict["model_swaps"],
+                    weight_evictions=verdict["weight_evictions"])
+    return verdict
 
 
 def simulated_token_accounting(sim: FleetSim,

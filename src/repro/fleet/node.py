@@ -189,6 +189,32 @@ class SimNode:
         self.pages_migrated_in = 0   # KV pages landed from elsewhere
 
     # ------------------------------------------------------------------
+    # telemetry
+    # ------------------------------------------------------------------
+    def bind_registry(self, registry) -> None:
+        """Publish this board's counters as live callback gauges under
+        ``fleet.node.<id>.*`` (read-through: the sim hot path pays
+        nothing for being observable).  Note ``kv_spill_events`` here is
+        the SIM's over-commit transition counter -- a distinct event
+        from the engine's ``serve.kv.admit_blocked``."""
+        prefix = f"fleet.node.{self.node_id}"
+        for attr, help_text in (
+                ("tokens_prefilled", "prompt tokens prefilled here"),
+                ("tokens_decoded", "tokens decoded here"),
+                ("kv_pages_hwm", "peak page occupancy observed"),
+                ("kv_spill_events", "page-pool over-commit transitions"),
+                ("preemptions", "slots evicted mid-decode here"),
+                ("pages_migrated_out", "KV pages shipped off this board"),
+                ("pages_migrated_in", "KV pages landed from elsewhere"),
+                ("model_swaps", "weight loads over the host link"),
+                ("swap_bytes", "weight bytes those swaps moved"),
+                ("model_evictions", "weight sets LRU-evicted"),
+                ("energy_active_j", "above-idle joules integrated")):
+            registry.gauge(f"{prefix}.{attr}",
+                           fn=(lambda a=attr: getattr(self, a)),
+                           help=help_text)
+
+    # ------------------------------------------------------------------
     # multi-model residency: weights vs KV pages in one HBM budget
     # ------------------------------------------------------------------
     def _hbm_after_weights(self) -> float:

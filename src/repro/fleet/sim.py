@@ -36,6 +36,8 @@ from repro.core.perf_model import LLMSpec, QWEN25_1P5B
 from repro.fleet.node import SimNode
 from repro.fleet.router import LeastLoadedRouter, Router
 from repro.fleet.workload import FleetRequest
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import SpanTracer
 from repro.serving.disaggregation import FleetPlan
 from repro.serving.phase_model import capex_usd_per_hour, energy_usd_per_hour
 
@@ -172,9 +174,17 @@ class FleetSim:
                  amortization_years: float = 3.0,
                  autoscaler=None,
                  preemption: Optional[PreemptionPolicy] = None,
-                 model_specs: Optional[Dict[str, LLMSpec]] = None):
+                 model_specs: Optional[Dict[str, LLMSpec]] = None,
+                 tracer: Optional[SpanTracer] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.fmt = fmt
         self.spec = spec
+        # deterministic SIM-CLOCK telemetry: spans carry simulated
+        # seconds (add_span, never the host clock), so the same seed
+        # yields a bit-identical trace file
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else SpanTracer(
+            enabled=False, registry=self.registry)
         self.model_specs = model_specs
         self.router = router or LeastLoadedRouter()
         self.ttft_slo_s = ttft_slo_s
@@ -219,6 +229,7 @@ class FleetSim:
         node.available_at = now
         self.nodes.append(node)
         self._added_at[node.node_id] = now
+        node.bind_registry(self.registry)
         return node
 
     def retire_node(self, node: SimNode, now: float) -> None:
@@ -262,6 +273,9 @@ class FleetSim:
                        now: float) -> None:
         rec.t_prefill_start = now
         done_t = node.start_prefill(rec, now)
+        self.tracer.add_span("sim.prefill", now, done_t,
+                             track=node.node_id, uid=rec.req.uid,
+                             prompt_len=rec.req.prompt_len)
         self._push(done_t, "prefill_done", (node, rec))
 
     def _on_prefill_done(self, node: SimNode, rec: RequestRecord,
@@ -313,6 +327,9 @@ class FleetSim:
                 self.swap_events.append(
                     f"t={now:.2f}s {node.node_id} <- weights[{mid}] "
                     f"({swap_s * 1e3:.0f}ms)")
+                self.tracer.add_span("sim.swap", now, now + swap_s,
+                                     track=f"{node.node_id}/link",
+                                     model_id=mid, uid=rec.req.uid)
                 self._push(now + swap_s, "decode_enter", (node, rec, True))
                 return
         rec.t_decode_enter = now
@@ -413,6 +430,9 @@ class FleetSim:
         self._migrations[slot.uid] = self._migrations.get(slot.uid, 0) + 1
         dst.inbound_inflight += 1      # blocks reaping until KV lands
         dst.inbound_pages += n_pg      # reserves capacity while in flight
+        self.tracer.add_span("sim.migrate", now, now + transfer_s,
+                             track=f"{src.node_id}/link", uid=slot.uid,
+                             pages=n_pg, dst=dst.node_id)
         self._push(now + transfer_s, "migrate_enter",
                    (dst, slot, rec, n_pg))
         self.preempt_events.append(
@@ -442,6 +462,14 @@ class FleetSim:
             rec = self._slot_rec.pop((node.node_id, slot.uid))
             rec.t_first_token = slot.t_first_token
             rec.t_done = now
+            if rec.t_decode_enter is not None:
+                # per-request track: concurrent slots on one board
+                # would partially overlap on a shared track
+                self.tracer.add_span("sim.decode", rec.t_decode_enter,
+                                     now,
+                                     track=f"{node.node_id}/u{slot.uid}",
+                                     uid=slot.uid,
+                                     gen_len=rec.req.gen_len)
 
     def _on_autoscale(self, now: float) -> None:
         if self.autoscaler is None:
@@ -529,7 +557,7 @@ class FleetSim:
             per_model.append((mid, pct(np.asarray(sorted(by_model[mid])), 50),
                               int(round(toks)),
                               toks / joules if joules > 0 else float("nan")))
-        return FleetReport(
+        report = FleetReport(
             offered=len(self.records), completed=len(done),
             makespan_s=makespan,
             ttft_p50_s=pct(ttft, 50), ttft_p99_s=pct(ttft, 99),
@@ -553,3 +581,8 @@ class FleetSim:
             scale_events=tuple(self.scale_events),
             preempt_events=tuple(self.preempt_events),
             swap_events=tuple(self.swap_events))
+        # publish the aggregate report under the fleet.* namespace so
+        # the sim's numbers sit next to the engines' in one exposition
+        for key, val in report.metrics().items():
+            self.registry.gauge(f"fleet.{key}").set(float(val))
+        return report

@@ -1,0 +1,54 @@
+"""repro.obs: unified serving telemetry.
+
+Zero-dependency observability for the serving stack: a typed
+:class:`MetricsRegistry` every layer publishes into under one
+dot-namespaced schema, a :class:`SpanTracer` wrapping the real hot-path
+boundaries (host clock outside jit; sim clock inside ``FleetSim``) with
+Chrome-trace/Perfetto and Prometheus-style exports, an append-only
+:class:`EventLog` for validator verdicts, and a sim-to-real calibration
+gate (:func:`predict_replay` / :func:`calibrate_replay`) that fits the
+scheduling model against ``fleet.execution`` replay telemetry.
+"""
+
+from repro.obs.calibration import (
+    GATED_METRICS,
+    CalibrationReport,
+    PredictedReplay,
+    calibrate_replay,
+    fit_dispatch_time_model,
+    fit_linear,
+    predict_replay,
+    rel_err,
+)
+from repro.obs.events import DEFAULT_LOG, Event, EventLog, emit
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    StatsView,
+)
+from repro.obs.trace import Instant, Span, SpanTracer
+
+__all__ = [
+    "CalibrationReport",
+    "Counter",
+    "DEFAULT_LOG",
+    "Event",
+    "EventLog",
+    "GATED_METRICS",
+    "Gauge",
+    "Histogram",
+    "Instant",
+    "MetricsRegistry",
+    "PredictedReplay",
+    "Span",
+    "SpanTracer",
+    "StatsView",
+    "calibrate_replay",
+    "emit",
+    "fit_dispatch_time_model",
+    "fit_linear",
+    "predict_replay",
+    "rel_err",
+]

@@ -1,0 +1,70 @@
+"""Append-only event log: an auditable record of serving verdicts.
+
+Exactness validators (``validate_preemption_exactness``,
+``validate_multimodel_exactness``) used to return their verdict to the
+caller and otherwise pass silently; an execution replay left no record
+that the check ran at all.  The event log fixes that: every validator
+emits a structured event (name + verdict + counters) into the default
+log, so a replay session can be audited after the fact --
+``repro.obs.events().records("validate.preemption_exactness")`` -- and
+exported alongside the trace.
+
+The log is deliberately dumb: timestamped dicts, no levels, no
+handlers.  ``clear()`` between test cases; the default instance is
+process-global so validators need no plumbing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One audit record: wall-clock time, name, free-form fields."""
+
+    t: float
+    name: str
+    fields: Dict[str, object]
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"t": self.t, "name": self.name, **self.fields}
+
+
+class EventLog:
+    """Append-only list of :class:`Event` with name filtering."""
+
+    def __init__(self, clock=time.time):
+        self._clock = clock
+        self._events: List[Event] = []
+
+    def emit(self, name: str, **fields) -> Event:
+        ev = Event(t=self._clock(), name=name, fields=fields)
+        self._events.append(ev)
+        return ev
+
+    def records(self, name: Optional[str] = None) -> List[Event]:
+        if name is None:
+            return list(self._events)
+        return [e for e in self._events if e.name == name]
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def clear(self) -> None:
+        self._events.clear()
+
+    def to_json(self) -> str:
+        return json.dumps([e.as_dict() for e in self._events])
+
+
+#: process-global default log -- what the validators emit into
+DEFAULT_LOG = EventLog()
+
+
+def emit(name: str, **fields) -> Event:
+    """Emit into the default log (the validators' entry point)."""
+    return DEFAULT_LOG.emit(name, **fields)

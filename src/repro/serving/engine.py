@@ -53,6 +53,8 @@ from repro.models.registry import Model, build_model
 from repro.models.transformer import (init_cache, init_paged_cache,
                                       lm_prefill_batched, paged_capacity,
                                       sample_tokens)
+from repro.obs.metrics import MetricsRegistry, StatsView
+from repro.obs.trace import SpanTracer
 from repro.quant.quantize import QTensor, dequantize, quantize
 
 
@@ -200,6 +202,31 @@ class PagePool:
             self._free.append(self._disabled.pop())
         return max(back, 0)
 
+    def bind_registry(self, registry: MetricsRegistry,
+                      prefix: str = "pool") -> None:
+        """Publish the pool's occupancy as live callback gauges.
+
+        Callback gauges read through to the allocator's own state, so
+        the alloc/free hot path pays nothing for being observable."""
+        registry.gauge(f"{prefix}.pages.free", fn=lambda: self.n_free,
+                       help="free pages (incl. reserved)")
+        registry.gauge(f"{prefix}.pages.in_use", fn=lambda: self.n_in_use,
+                       help="pages allocated to live lanes")
+        registry.gauge(f"{prefix}.pages.reserved",
+                       fn=lambda: self._reserved,
+                       help="pages promised to admitted requests")
+        registry.gauge(f"{prefix}.pages.disabled",
+                       fn=lambda: self.n_disabled,
+                       help="pages retired for weight residency")
+        registry.gauge(f"{prefix}.pages.hwm", fn=lambda: self.hwm,
+                       help="high-water mark of in-use + reserved pages")
+        registry.gauge(f"{prefix}.pages.allocs",
+                       fn=lambda: self.alloc_count,
+                       help="cumulative page allocations")
+        registry.gauge(f"{prefix}.pages.frees",
+                       fn=lambda: self.free_count,
+                       help="cumulative page frees")
+
     def check(self) -> None:
         """Assert the conservation invariant (test hook)."""
         assert (len(self._free) + len(self._in_use)
@@ -311,11 +338,30 @@ class ServeEngine:
     count -- the BENCH_decode paged section measures exactly this.
     """
 
+    #: legacy stats key -> namespaced metric suffix (the authoritative
+    #: telemetry schema; full names prepend the engine's ``name``)
+    STATS_SCHEMA = {
+        "decode_dispatches": "decode.dispatches",
+        "decode_steps": "decode.steps",
+        "decode_compiles": "decode.compiles",
+        "generated_tokens": "tokens.generated",
+        "prefill_compiles": "prefill.compiles",
+        "ssm_prefill_compiles": "prefill.ssm_compiles",
+        "kv_pages_hwm": "kv.pages_hwm",
+        "kv_admit_blocked": "kv.admit_blocked",
+        "preemptions": "preempt.evictions",
+        "restores": "preempt.restores",
+        "pages_migrated": "preempt.pages_migrated",
+    }
+
     def __init__(self, cfg: ModelConfig, params, n_lanes: int = 4,
                  max_len: int = 512, temperature: float = 0.0,
                  rng_seed: int = 0, dispatch_n: int = 8,
                  prefill_bucketing: bool = True, paged: bool = False,
-                 page_size: int = 16, n_pages: Optional[int] = None):
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 tracer: Optional[SpanTracer] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 name: str = "serve"):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -374,11 +420,24 @@ class ServeEngine:
         self._lane_seed = jnp.zeros((n_lanes,), jnp.int32)
         self._tok_idx = jnp.zeros((n_lanes,), jnp.int32)
         self._admit_count = 0        # admission counter (key lineages)
-        self.stats = {"decode_dispatches": 0, "decode_steps": 0,
-                      "generated_tokens": 0, "prefill_compiles": 0,
-                      "ssm_prefill_compiles": 0, "kv_pages_hwm": 0,
-                      "kv_admit_blocked": 0, "preemptions": 0,
-                      "restores": 0, "pages_migrated": 0}
+        # telemetry: every counter lives in the registry under
+        # "<name>.<suffix>"; self.stats is a MutableMapping view keyed
+        # by the legacy flat names, so existing call sites (and the
+        # bench's reset idiom) keep working against the shared registry
+        self.name = name
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else SpanTracer(
+            enabled=False, registry=self.registry)
+        keymap = {k: f"{name}.{suffix}"
+                  for k, suffix in self.STATS_SCHEMA.items()}
+        for metric_name in keymap.values():
+            # a fresh engine starts its counters at zero even on a
+            # shared registry (modelpool reloads accumulate history in
+            # the entry, not in the live counters)
+            self.registry.counter(metric_name).set(0)
+        self._stats = StatsView(self.registry, keymap)
+        if self.paged:
+            self.pool.bind_registry(self.registry, prefix=f"{name}.pool")
         self._decode = jax.jit(
             lambda p, c, t: self.model.decode_step(p, c, t))
         self._temperature = self.temperature      # captured, see above
@@ -405,9 +464,30 @@ class ServeEngine:
 
     def _decode_n_fn(self, params, cache, tokens, rng, remaining,
                      lane_seed, tok_idx, *, n_steps, temperature, len_cap):
+        # Python side effect fires once per XLA trace == once per
+        # distinct n_steps; the telemetry overhead-budget test pins this
+        # counter traced-vs-untraced.
+        self.stats["decode_compiles"] += 1
         return self.model.decode_n_steps(
             params, cache, tokens, rng, remaining, lane_seed, tok_idx,
             n_steps=n_steps, temperature=temperature, len_cap=len_cap)
+
+    # -- telemetry --------------------------------------------------------
+    @property
+    def stats(self) -> StatsView:
+        """Legacy stats mapping, backed by the metrics registry."""
+        return self._stats
+
+    @stats.setter
+    def stats(self, values: Dict[str, Any]) -> None:
+        # the bench reset idiom (`eng.stats = {k: 0 for k in eng.stats}`)
+        # writes values through the view; the schema itself is fixed
+        for k, v in values.items():
+            self._stats[k] = v
+
+    def lane_track(self, lane: int) -> str:
+        """Trace track name for one lane of this engine."""
+        return f"{self.name}/lane{lane}"
 
     # -- admission --------------------------------------------------------
     def free_lanes(self) -> List[int]:
@@ -458,20 +538,29 @@ class ServeEngine:
                 if req.uid not in self._blocked_uids:
                     self._blocked_uids.add(req.uid)
                     self.stats["kv_admit_blocked"] += 1
+                    self.tracer.instant("admit.blocked",
+                                        track=self.lane_track(lane),
+                                        uid=req.uid, need_pages=need)
                 return False
             self._blocked_uids.discard(req.uid)
-            self._lane_reserved[lane] = need
-            self._lane_pages[lane] = []
-            # map the prompt's pages (plus the first decode write slot);
-            # generation growth maps the rest at dispatch boundaries
-            self._map_pages(lane, self._pages_needed(
-                self._trunc_plen(req) + 1))
-        self._lane_seed = self._lane_seed.at[lane].set(self._admit_count)
-        self._tok_idx = self._tok_idx.at[lane].set(0)
-        self._prefill_into_lane(req, lane)
-        self.lane_req[lane] = req
-        self._remaining = self._remaining.at[lane].set(req.max_new_tokens)
-        self._remaining_host[lane] = req.max_new_tokens
+        with self.tracer.span("admit", track=self.lane_track(lane),
+                              uid=req.uid):
+            if self.paged:
+                self._lane_reserved[lane] = need
+                self._lane_pages[lane] = []
+                # map the prompt's pages (plus the first decode write
+                # slot); generation growth maps the rest at dispatch
+                # boundaries
+                self._map_pages(lane, self._pages_needed(
+                    self._trunc_plen(req) + 1))
+            self._lane_seed = self._lane_seed.at[lane].set(
+                self._admit_count)
+            self._tok_idx = self._tok_idx.at[lane].set(0)
+            self._prefill_into_lane(req, lane)
+            self.lane_req[lane] = req
+            self._remaining = self._remaining.at[lane].set(
+                req.max_new_tokens)
+            self._remaining_host[lane] = req.max_new_tokens
         return True
 
     def _map_pages(self, lane: int, target: int) -> None:
@@ -506,13 +595,16 @@ class ServeEngine:
         bucket = _bucket_len(plen) if self.prefill_bucketing else plen
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :plen] = prompt
-        logits, kv = self._prefill(self.params, jnp.asarray(padded),
-                                   jnp.asarray([plen - 1], jnp.int32))
-        if kv is not None:
-            if self.paged:
-                self._scatter_prompt_paged(kv, lane, plen)
-            else:
-                self._scatter_prompt_dense(kv, lane, plen)
+        with self.tracer.span("prefill.bucket",
+                              track=self.lane_track(lane),
+                              bucket=bucket, plen=plen):
+            logits, kv = self._prefill(self.params, jnp.asarray(padded),
+                                       jnp.asarray([plen - 1], jnp.int32))
+            if kv is not None:
+                if self.paged:
+                    self._scatter_prompt_paged(kv, lane, plen)
+                else:
+                    self._scatter_prompt_dense(kv, lane, plen)
         if "ssm_h" in self.cache:
             # SSM state is rebuilt by streaming the prompt through the
             # decode path (exactly once, O(len) state updates).
@@ -687,23 +779,27 @@ class ServeEngine:
         if not live:
             return {}
         n = self._dispatch_size(n)
-        if self.paged:
-            # map the pages this block can write into BEFORE the jitted
-            # dispatch (the scan itself never touches the allocator);
-            # the admission-time reservation makes this infallible
-            for lane in live:
-                steps = min(n, int(self._remaining_host[lane]))
-                self._map_pages(lane, self._pages_needed(
-                    int(self._len_host[lane]) + steps + 1))
-        (toks, valid, self._next_token, self.cache, self._remaining,
-         self._tok_idx) = self._decode_n(
-            self.params, self.cache, self._next_token, self._rng_decode,
-            self._remaining, self._lane_seed, self._tok_idx, n_steps=n)
-        self.stats["decode_dispatches"] += 1
-        self.stats["decode_steps"] += n
-        # one host transfer drains the whole block
-        toks_h, valid_h, rem_h = jax.device_get(
-            (toks, valid, self._remaining))
+        with self.tracer.span("decode.dispatch", track=self.name,
+                              n_steps=n, n_live=len(live)):
+            if self.paged:
+                # map the pages this block can write into BEFORE the
+                # jitted dispatch (the scan itself never touches the
+                # allocator); the admission-time reservation makes this
+                # infallible
+                for lane in live:
+                    steps = min(n, int(self._remaining_host[lane]))
+                    self._map_pages(lane, self._pages_needed(
+                        int(self._len_host[lane]) + steps + 1))
+            (toks, valid, self._next_token, self.cache, self._remaining,
+             self._tok_idx) = self._decode_n(
+                self.params, self.cache, self._next_token,
+                self._rng_decode, self._remaining, self._lane_seed,
+                self._tok_idx, n_steps=n)
+            self.stats["decode_dispatches"] += 1
+            self.stats["decode_steps"] += n
+            # one host transfer drains the whole block
+            toks_h, valid_h, rem_h = jax.device_get(
+                (toks, valid, self._remaining))
         self._remaining_host = np.asarray(rem_h, np.int64)
         out: Dict[int, List[int]] = {}
         for lane in live:
@@ -718,6 +814,9 @@ class ServeEngine:
             self._len_host[lane] += len(seq)
             if self._remaining_host[lane] <= 0:
                 req.done = True
+                self.tracer.instant("retire",
+                                    track=self.lane_track(lane),
+                                    uid=req.uid)
                 self._release_lane(lane)
         return out
 
@@ -768,30 +867,34 @@ class ServeEngine:
         assert self.paged, "evict/restore: paged engines only"
         req = self.lane_req[lane]
         assert req is not None, f"evict of idle lane {lane}"
-        pages = list(self._lane_pages[lane])
-        assert self._scratch_page not in pages, \
-            "scratch page leaked into a live block table"
-        idx = jnp.asarray(pages, jnp.int32)
-        kv = {key: jnp.take(self.cache[key], idx, axis=1)
-              for key in _POOL_KEYS if key in self.cache}
-        ssm = {key: self.cache[key][:, lane]
-               for key in ("ssm_h", "ssm_conv") if key in self.cache}
-        kv, ssm, nxt, seed, idx_t = jax.device_get(
-            (kv, ssm, self._next_token[lane], self._lane_seed[lane],
-             self._tok_idx[lane]))
-        ckpt = LaneCheckpoint(
-            req=req, lane_seed=int(seed), tok_idx=int(idx_t),
-            remaining=int(self._remaining_host[lane]),
-            ctx_len=int(self._len_host[lane]), next_token=int(nxt),
-            page_size=self.page_size,
-            kv_pages={k: np.asarray(v) for k, v in kv.items()},
-            ssm_state={k: np.asarray(v) for k, v in ssm.items()})
-        # the evicted lane is DEAD: freeze its budget so a dispatch that
-        # runs before re-admission samples only invalid tokens for it
-        self._remaining = self._remaining.at[lane].set(0)
-        self._remaining_host[lane] = 0
-        self._release_lane(lane)
-        self.stats["preemptions"] += 1
+        with self.tracer.span("preempt.evict",
+                              track=self.lane_track(lane), uid=req.uid,
+                              n_pages=len(self._lane_pages[lane])):
+            pages = list(self._lane_pages[lane])
+            assert self._scratch_page not in pages, \
+                "scratch page leaked into a live block table"
+            idx = jnp.asarray(pages, jnp.int32)
+            kv = {key: jnp.take(self.cache[key], idx, axis=1)
+                  for key in _POOL_KEYS if key in self.cache}
+            ssm = {key: self.cache[key][:, lane]
+                   for key in ("ssm_h", "ssm_conv") if key in self.cache}
+            kv, ssm, nxt, seed, idx_t = jax.device_get(
+                (kv, ssm, self._next_token[lane], self._lane_seed[lane],
+                 self._tok_idx[lane]))
+            ckpt = LaneCheckpoint(
+                req=req, lane_seed=int(seed), tok_idx=int(idx_t),
+                remaining=int(self._remaining_host[lane]),
+                ctx_len=int(self._len_host[lane]), next_token=int(nxt),
+                page_size=self.page_size,
+                kv_pages={k: np.asarray(v) for k, v in kv.items()},
+                ssm_state={k: np.asarray(v) for k, v in ssm.items()})
+            # the evicted lane is DEAD: freeze its budget so a dispatch
+            # that runs before re-admission samples only invalid tokens
+            # for it
+            self._remaining = self._remaining.at[lane].set(0)
+            self._remaining_host[lane] = 0
+            self._release_lane(lane)
+            self.stats["preemptions"] += 1
         return ckpt
 
     def restore_pages(self, ckpt: LaneCheckpoint) -> int:
@@ -834,17 +937,22 @@ class ServeEngine:
         self._blocked_uids.discard(ckpt.uid)
         self._lane_reserved[lane] = need
         self._lane_pages[lane] = []
+        restore_span = self.tracer.span(
+            "preempt.restore", track=self.lane_track(lane),
+            uid=ckpt.uid, n_pages=ckpt.n_pages)
         try:
-            self._map_pages(lane, ckpt.n_pages)
-            for i, page in enumerate(self._lane_pages[lane]):
-                for key, val in ckpt.kv_pages.items():
-                    seg = jnp.asarray(val[:, i:i + 1])
-                    self.cache[key] = jax.lax.dynamic_update_slice(
-                        self.cache[key], seg.astype(self.cache[key].dtype),
-                        (0, page, 0, 0, 0))
-            for key, val in ckpt.ssm_state.items():
-                self.cache[key] = self.cache[key].at[:, lane].set(
-                    jnp.asarray(val))
+            with restore_span:
+                self._map_pages(lane, ckpt.n_pages)
+                for i, page in enumerate(self._lane_pages[lane]):
+                    for key, val in ckpt.kv_pages.items():
+                        seg = jnp.asarray(val[:, i:i + 1])
+                        self.cache[key] = jax.lax.dynamic_update_slice(
+                            self.cache[key],
+                            seg.astype(self.cache[key].dtype),
+                            (0, page, 0, 0, 0))
+                for key, val in ckpt.ssm_state.items():
+                    self.cache[key] = self.cache[key].at[:, lane].set(
+                        jnp.asarray(val))
         except Exception:
             # scatter failure (e.g. a checkpoint whose payload does not
             # match this engine's cache layout): the reservation and any

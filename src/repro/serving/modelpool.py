@@ -44,6 +44,8 @@ from typing import Any, Deque, Dict, List, Optional, Sequence
 
 from repro.core.device_profile import DeviceProfile, get_profile
 from repro.models.common import ModelConfig
+from repro.obs.metrics import MetricsRegistry, StatsView
+from repro.obs.trace import SpanTracer
 from repro.quant.quantize import QTensor
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.phase_model import link_transfer_seconds
@@ -112,8 +114,17 @@ class ModelPool:
     model, :func:`~repro.serving.phase_model.link_transfer_seconds`.
     """
 
+    #: legacy stats key -> metric name (the modelpool telemetry schema)
+    STATS_SCHEMA = {
+        "model_swaps": "modelpool.swaps",
+        "swap_bytes": "modelpool.swap_bytes",
+        "swap_seconds": "modelpool.swap_seconds",
+        "unloads": "modelpool.unloads",
+    }
+
     def __init__(self, hbm_bytes: float, page_size: int = 16,
-                 profile: Optional[DeviceProfile] = None):
+                 profile: Optional[DeviceProfile] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.hbm_bytes = int(hbm_bytes)
         self.page_size = int(page_size)
         self.profile = profile or get_profile("cmp-170hx-nofma")
@@ -121,8 +132,27 @@ class ModelPool:
         self._resident: Dict[str, int] = {}      # model_id -> last-used tick
         self._kv_charge: Dict[str, int] = {}     # model_id -> charged KV bytes
         self._tick = 0
-        self.stats = {"model_swaps": 0, "swap_bytes": 0,
-                      "swap_seconds": 0.0, "unloads": 0}
+        self.registry = registry if registry is not None else MetricsRegistry()
+        for metric_name in self.STATS_SCHEMA.values():
+            self.registry.counter(metric_name)
+        self._stats = StatsView(self.registry, dict(self.STATS_SCHEMA))
+        self.registry.gauge("modelpool.bytes.used", fn=self.used_bytes,
+                            help="HBM bytes held by weights + KV charges")
+        self.registry.gauge("modelpool.bytes.free", fn=self.free_bytes,
+                            help="HBM bytes left in the board budget")
+        self.registry.gauge("modelpool.residents",
+                            fn=lambda: len(self._resident),
+                            help="models currently resident")
+
+    @property
+    def stats(self) -> StatsView:
+        """Legacy stats mapping, backed by the metrics registry."""
+        return self._stats
+
+    @stats.setter
+    def stats(self, values: Dict[str, Any]) -> None:
+        for k, v in values.items():
+            self._stats[k] = v
 
     # -- registry -------------------------------------------------------
     def register(self, model_id: str, cfg: ModelConfig, params,
@@ -225,10 +255,23 @@ class MultiModelServeEngine:
     evicting idle models -- before its admission is attempted.
     """
 
+    #: legacy stats key -> metric name (the multi-model telemetry schema)
+    STATS_SCHEMA = {
+        "model_swaps": "mm.weights.swaps",
+        "swap_bytes": "mm.weights.swap_bytes",
+        "swap_seconds": "mm.weights.swap_seconds",
+        "weight_evictions": "mm.weights.evictions",
+        "kv_pages_shrunk": "mm.kv.pages_shrunk",
+        "kv_pages_grown": "mm.kv.pages_grown",
+    }
+
     def __init__(self, pool: ModelPool, n_lanes: int = 2,
                  max_len: int = 64, temperature: float = 0.0,
                  rng_seed: int = 0, dispatch_n: int = 8,
-                 prefill_bucketing: bool = True):
+                 prefill_bucketing: bool = True,
+                 tracer: Optional[SpanTracer] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 name: str = "mm"):
         self.pool = pool
         self.n_lanes = n_lanes
         self.max_len = max_len
@@ -237,9 +280,26 @@ class MultiModelServeEngine:
         self.dispatch_n = dispatch_n
         self.prefill_bucketing = prefill_bucketing
         self.engines: Dict[str, ServeEngine] = {}
-        self.stats = {"model_swaps": 0, "swap_bytes": 0,
-                      "swap_seconds": 0.0, "weight_evictions": 0,
-                      "kv_pages_shrunk": 0, "kv_pages_grown": 0}
+        # one registry for the whole board: the byte pool, this engine,
+        # and every inner per-model ServeEngine (namespaced by model id)
+        # publish into it
+        self.name = name
+        self.registry = registry if registry is not None else pool.registry
+        self.tracer = tracer if tracer is not None else SpanTracer(
+            enabled=False, registry=self.registry)
+        for metric_name in self.STATS_SCHEMA.values():
+            self.registry.counter(metric_name)
+        self._stats = StatsView(self.registry, dict(self.STATS_SCHEMA))
+
+    @property
+    def stats(self) -> StatsView:
+        """Legacy stats mapping, backed by the metrics registry."""
+        return self._stats
+
+    @stats.setter
+    def stats(self, values: Dict[str, Any]) -> None:
+        for k, v in values.items():
+            self._stats[k] = v
 
     # -- geometry -------------------------------------------------------
     def _bt_width(self, cfg: ModelConfig) -> int:
@@ -354,35 +414,46 @@ class MultiModelServeEngine:
             self._evict_idle(model_id, need)
         if self.pool.free_bytes() < need:
             return None
-        self.pool.load(model_id)
-        # the pool's counters are the single source of truth for swap
-        # accounting; the engine's stats mirror them for reporting
-        for k in ("model_swaps", "swap_bytes", "swap_seconds"):
-            self.stats[k] = self.pool.stats[k]
-        dense = self._dense_pages(entry.cfg)
-        if entry.page_bytes > 0:
-            # load() already moved the weights into the resident charge:
-            # what is free now is all KV headroom (minus the scratch page)
-            afford = self.pool.free_bytes() // entry.page_bytes - 1
-            target = max(min(dense, afford), bt)
-        else:
-            target = dense
-        eng = ServeEngine(entry.cfg, entry.params, n_lanes=self.n_lanes,
-                          max_len=self.max_len,
-                          temperature=self.temperature,
-                          rng_seed=self.rng_seed,
-                          dispatch_n=self.dispatch_n,
-                          prefill_bucketing=self.prefill_bucketing,
-                          paged=True, page_size=self.pool.page_size,
-                          n_pages=dense if dense else None)
-        # physical array at the dense target, pool shrunk to the byte
-        # budget: later unloads can grow it back without reallocating
-        eng.pool.shrink(dense - target)
-        # restore the sampling lineage of a previous residency so the
-        # reloaded model's next admission continues the exact stream
-        eng._admit_count = entry.admit_count
-        self.engines[model_id] = eng
-        self._charge(model_id)
+        with self.tracer.span("weights.swap", track=self.name,
+                              model_id=model_id,
+                              weight_bytes=entry.weight_bytes):
+            seconds = self.pool.load(model_id)
+            # the pool's counters are the single source of truth for
+            # swap accounting; the engine's stats mirror them for
+            # reporting
+            for k in ("model_swaps", "swap_bytes", "swap_seconds"):
+                self.stats[k] = self.pool.stats[k]
+            dense = self._dense_pages(entry.cfg)
+            if entry.page_bytes > 0:
+                # load() already moved the weights into the resident
+                # charge: what is free now is all KV headroom (minus the
+                # scratch page)
+                afford = self.pool.free_bytes() // entry.page_bytes - 1
+                target = max(min(dense, afford), bt)
+            else:
+                target = dense
+            eng = ServeEngine(entry.cfg, entry.params,
+                              n_lanes=self.n_lanes, max_len=self.max_len,
+                              temperature=self.temperature,
+                              rng_seed=self.rng_seed,
+                              dispatch_n=self.dispatch_n,
+                              prefill_bucketing=self.prefill_bucketing,
+                              paged=True, page_size=self.pool.page_size,
+                              n_pages=dense if dense else None,
+                              tracer=self.tracer, registry=self.registry,
+                              name=model_id)
+            # physical array at the dense target, pool shrunk to the
+            # byte budget: later unloads can grow it back without
+            # reallocating
+            eng.pool.shrink(dense - target)
+            # restore the sampling lineage of a previous residency so
+            # the reloaded model's next admission continues the exact
+            # stream
+            eng._admit_count = entry.admit_count
+            self.engines[model_id] = eng
+            self._charge(model_id)
+        self.tracer.instant("weights.swap.done", track=self.name,
+                            model_id=model_id, link_seconds=seconds)
         return eng
 
     def load(self, model_id: str) -> bool:

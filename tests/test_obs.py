@@ -1,0 +1,486 @@
+"""Telemetry layer: metrics registry, span tracer, event log, and the
+sim-to-real calibration gate.
+
+Four layers of invariants:
+
+* instruments -- counter/gauge/histogram semantics, get-or-create with
+  kind checking, exact percentiles, JSON snapshot, Prometheus text
+  exposition, and the :class:`~repro.obs.StatsView` legacy-dict facade
+  every engine's ``stats`` now is;
+* tracer -- per-track nesting is enforced and well-nested, disabled
+  tracers record nothing, Chrome-trace export round-trips
+  ``json.loads`` with the Perfetto-loadable schema, and span durations
+  feed the registry's ``span.*.seconds`` histograms;
+* engine -- tracing is exactness-neutral (identical token streams AND
+  identical compile counters traced vs untraced: spans wrap host work
+  only, nothing enters a jitted computation), one ``decode.dispatch``
+  span per counted dispatch, page-pool occupancy readable through
+  callback gauges, validators emit verdict events;
+* calibration -- :func:`~repro.obs.predict_replay` mirrors the real
+  engine's scheduling exactly on a measured replay, and a deliberately
+  perturbed phase model FAILS the drift gate (the gate's self-test).
+"""
+
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.obs import (DEFAULT_LOG, EventLog, MetricsRegistry, SpanTracer,
+                       StatsView, calibrate_replay, fit_dispatch_time_model,
+                       fit_linear, predict_replay, rel_err)
+from repro.obs.trace import Span
+from repro.serving import Request, ServeEngine
+
+pytestmark = pytest.mark.obs
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen2.5-1.5b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+            for n in lens]
+
+
+def _reqs(prompts, max_new):
+    return [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+
+
+ENGINE_KW = dict(n_lanes=2, max_len=64, dispatch_n=4, paged=True,
+                 page_size=8, n_pages=10)
+
+
+# ----------------------------------------------------------------------
+# instruments
+# ----------------------------------------------------------------------
+
+def test_counter_gauge_histogram_semantics():
+    reg = MetricsRegistry()
+    c = reg.counter("x.events", help="events")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    c.set(0)                                    # bench-reset path
+    assert c.value == 0
+
+    g = reg.gauge("x.level")
+    g.set(3)
+    g.set_max(2)
+    assert g.value == 3
+    g.set_max(7)
+    assert g.value == 7
+
+    backing = {"v": 11}
+    live = reg.gauge("x.live", fn=lambda: backing["v"])
+    assert live.value == 11
+    backing["v"] = 13
+    assert live.value == 13                     # read-through, no publish
+    with pytest.raises(AssertionError):
+        live.set(1)                             # callback gauges are RO
+
+    h = reg.histogram("x.lat")
+    assert math.isnan(h.percentile(50))
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert h.percentile(50) == pytest.approx(2.5)   # exact, interpolated
+    assert h.percentile(0) == 1.0 and h.percentile(100) == 4.0
+    assert h.summary() == {"count": 4, "sum": 10.0,
+                           "p50": h.percentile(50), "p99": h.percentile(99)}
+
+
+def test_registry_get_or_create_and_kind_mismatch():
+    reg = MetricsRegistry()
+    a = reg.counter("serve.decode.dispatches")
+    assert reg.counter("serve.decode.dispatches") is a
+    with pytest.raises(AssertionError):
+        reg.gauge("serve.decode.dispatches")    # kind is part of the schema
+    a.inc(2)
+    reg.histogram("span.x.seconds").observe(0.5)
+    snap = reg.collect()
+    assert snap["serve.decode.dispatches"] == 2
+    assert snap["span.x.seconds"]["count"] == 1
+    assert "serve.decode.dispatches" in reg
+    json.dumps(snap)                            # JSON-friendly by contract
+
+
+def test_prometheus_exposition():
+    reg = MetricsRegistry()
+    reg.counter("serve.decode.dispatches", help="jitted decode blocks").inc(3)
+    reg.gauge("pool.pages.in_use").set(5)
+    h = reg.histogram("span.decode.dispatch.seconds")
+    h.observe(0.25)
+    text = reg.to_prometheus()
+    assert "# TYPE serve_decode_dispatches counter" in text
+    assert "serve_decode_dispatches 3" in text
+    assert "# HELP serve_decode_dispatches jitted decode blocks" in text
+    assert "pool_pages_in_use 5" in text
+    assert 'span_decode_dispatch_seconds{quantile="0.5"} 0.25' in text
+    assert "span_decode_dispatch_seconds_count 1" in text
+    assert text.endswith("\n")
+
+
+def test_statsview_legacy_dict_compat():
+    reg = MetricsRegistry()
+    keymap = {"decode_dispatches": "serve.decode.dispatches",
+              "generated_tokens": "serve.tokens.generated"}
+    for name in keymap.values():
+        reg.counter(name)
+    stats = StatsView(reg, keymap)
+    stats["decode_dispatches"] += 1             # the hot-path idiom
+    stats["generated_tokens"] += 8
+    assert dict(stats) == {"decode_dispatches": 1, "generated_tokens": 8}
+    assert stats == {"decode_dispatches": 1, "generated_tokens": 8}
+    assert stats != {"decode_dispatches": 2, "generated_tokens": 8}
+    assert sorted(k for k, _ in stats.items()) == sorted(keymap)
+    # writes land in the registry, not a shadow dict
+    assert reg["serve.tokens.generated"].value == 8
+    # bench reset idiom
+    for k in stats:
+        stats[k] = 0
+    assert all(v == 0 for v in stats.values())
+    with pytest.raises(KeyError):
+        stats["invented_key"] = 1               # schema is authoritative
+    with pytest.raises(TypeError):
+        del stats["decode_dispatches"]
+
+
+# ----------------------------------------------------------------------
+# tracer
+# ----------------------------------------------------------------------
+
+def test_tracer_nesting_and_queries():
+    t = [0.0]
+    tr = SpanTracer(clock=lambda: t[0])
+    with tr.span("outer", track="lane0", uid=1):
+        t[0] = 1.0
+        with tr.span("inner", track="lane0"):
+            t[0] = 2.0
+        t[0] = 3.0
+    tr.add_span("sim.decode", 0.5, 4.5, track="node0", uid=2)
+    tr.instant("retire", track="lane0", uid=1)
+    assert [s.name for s in tr.spans] == ["inner", "outer", "sim.decode"]
+    assert tr.spans_named("outer")[0].duration_s == 3.0
+    assert tr.spans_named("outer")[0].args == {"uid": 1}
+    assert sorted(tr.tracks()) == ["lane0", "node0"]
+    assert tr.check_well_nested()
+    # partial overlap on one track is NOT well-nested
+    bad = SpanTracer()
+    bad.add_span("a", 0.0, 2.0, track="x")
+    bad.add_span("b", 1.0, 3.0, track="x")
+    assert not bad.check_well_nested()
+
+
+def test_disabled_tracer_records_nothing():
+    reg = MetricsRegistry()
+    tr = SpanTracer(enabled=False, registry=reg)
+    with tr.span("decode.dispatch", track="serve"):
+        pass
+    assert tr.instant("retire") is None
+    assert tr.add_span("x", 0.0, 1.0) is None
+    assert tr.spans == [] and tr.instants == []
+    assert reg.names() == []                    # no histogram feed either
+
+
+def test_chrome_trace_round_trips_json():
+    t = [0.0]
+    tr = SpanTracer(clock=lambda: t[0])
+    with tr.span("admit", track="serve/lane0", uid=3):
+        t[0] = 0.001
+        with tr.span("prefill.bucket", track="serve/lane0", bucket=8):
+            t[0] = 0.002
+    tr.instant("retire", track="serve/lane0", uid=3)
+    obj = json.loads(tr.to_json())              # round-trip by contract
+    assert obj["displayTimeUnit"] == "ms"
+    evs = obj["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    spans = [e for e in evs if e["ph"] == "X"]
+    instants = [e for e in evs if e["ph"] == "i"]
+    assert {e["args"]["name"] for e in meta} == {"serve/lane0"}
+    assert len(spans) == 2 and len(instants) == 1
+    admit = next(e for e in spans if e["name"] == "admit")
+    assert admit["ts"] == 0.0                   # relative microseconds
+    assert admit["dur"] == pytest.approx(2000.0)
+    assert admit["args"] == {"uid": 3}
+    assert all(e["tid"] == meta[0]["tid"] for e in spans + instants)
+
+
+def test_span_durations_feed_registry_histograms():
+    reg = MetricsRegistry()
+    tr = SpanTracer(registry=reg)
+    tr.add_span("decode.dispatch", 0.0, 0.5, track="serve")
+    tr.add_span("decode.dispatch", 0.0, 1.5, track="serve")
+    h = reg["span.decode.dispatch.seconds"]
+    assert h.count == 2 and h.sum == pytest.approx(2.0)
+
+
+# ----------------------------------------------------------------------
+# event log
+# ----------------------------------------------------------------------
+
+def test_event_log_and_module_emit():
+    from repro.obs import events
+    log = EventLog(clock=lambda: 42.0)
+    log.emit("validate.x", ok=True, n=3)
+    log.emit("other", ok=False)
+    assert len(log) == 2
+    (ev,) = log.records("validate.x")
+    assert ev.fields == {"ok": True, "n": 3} and ev.t == 42.0
+    d = json.loads(log.to_json())
+    assert [e["name"] for e in d] == ["validate.x", "other"]
+    log.clear()
+    assert len(log) == 0
+
+    n0 = len(DEFAULT_LOG)
+    events.emit("test.ping", tag="obs")
+    assert len(DEFAULT_LOG) == n0 + 1
+    assert DEFAULT_LOG.records("test.ping")[-1].fields == {"tag": "obs"}
+
+
+# ----------------------------------------------------------------------
+# calibration (host-side)
+# ----------------------------------------------------------------------
+
+def test_fit_linear_recovers_constants():
+    a, b = fit_linear([1, 2, 4, 8], [0.3 + 0.05 * x for x in (1, 2, 4, 8)])
+    assert a == pytest.approx(0.3) and b == pytest.approx(0.05)
+    a, b = fit_linear([4, 4, 4], [1.0, 2.0, 3.0])   # degenerate x
+    assert a == pytest.approx(2.0) and b == 0.0
+
+
+def test_fit_dispatch_time_model_from_spans():
+    spans = [Span("decode.dispatch", "serve", 0.0, 0.1 + 0.02 * n,
+                  args={"n_steps": n, "n_live": 1})
+             for n in (1, 2, 4, 8)]
+    spans.append(Span("admit", "serve/lane0", 0.0, 9.0))  # ignored
+    fit = fit_dispatch_time_model(spans)
+    assert fit["n_spans"] == 4
+    assert fit["t_dispatch_overhead_s"] == pytest.approx(0.1)
+    assert fit["t_per_step_s"] == pytest.approx(0.02)
+    assert fit_dispatch_time_model([]) == {}
+
+
+def test_predict_replay_hand_checkable():
+    class R:
+        def __init__(self, uid, plen, gen):
+            self.uid, self.arrival_s = uid, 0.0
+            self.prompt_len, self.gen_len = plen, gen
+
+    # one request, gen=5, dispatch_n=8: one dispatch of a pow2-shrunk
+    # 8-step block, 5 tokens out
+    p = predict_replay([R(0, 4, 5)], n_lanes=2, max_len=64)
+    assert (p.decode_dispatches, p.decode_steps, p.generated_tokens) \
+        == (1, 8, 5)
+    # paged: worst case ceil((4+5+1)/8)=2 pages reserved at admit
+    p = predict_replay([R(0, 4, 5)], n_lanes=2, max_len=64, paged=True,
+                       page_size=8)
+    assert p.kv_pages_hwm == 2 and p.kv_admit_blocked == 0
+
+
+def test_calibration_report_gate():
+    class Real:
+        decode_dispatches, decode_steps = 10, 40
+        gen_tokens, kv_pages_hwm = 35, 6
+
+    class Sim:
+        def as_dict(self):
+            return {"decode_dispatches": 10, "decode_steps": 40,
+                    "generated_tokens": 35, "kv_pages_hwm": 6,
+                    "kv_admit_blocked": 0}
+
+    rep = calibrate_replay(Real(), Sim())
+    assert rep.ok and rep.max_rel_err == 0.0
+    assert set(rep.metrics) == {"decode_dispatches", "decode_steps",
+                                "generated_tokens", "kv_pages_hwm"}
+    json.dumps(rep.as_dict())
+
+    class Drifted(Sim):
+        def as_dict(self):
+            return dict(Sim.as_dict(self), kv_pages_hwm=9)
+
+    bad = calibrate_replay(Real(), Drifted())
+    assert not bad.ok
+    assert bad.metrics["kv_pages_hwm"]["rel_err"] == pytest.approx(0.5)
+    assert rel_err(0.0, 0.0) == 0.0             # counter-friendly at zero
+
+
+# ----------------------------------------------------------------------
+# engine integration
+# ----------------------------------------------------------------------
+
+def test_tracing_is_exactness_neutral(small_model):
+    """Overhead budget: tracing on vs off -- identical token streams and
+    identical compile counters (spans never enter jitted code)."""
+    cfg, params = small_model
+    prompts = _prompts(cfg, [5, 9, 6, 12])
+
+    def serve(traced):
+        reg = MetricsRegistry()
+        eng = ServeEngine(cfg, params, tracer=SpanTracer(enabled=traced,
+                                                         registry=reg),
+                          registry=reg, **ENGINE_KW)
+        reqs = _reqs(prompts, max_new=10)
+        eng.run(reqs)
+        return [tuple(r.generated) for r in reqs], dict(eng.stats)
+
+    out_off, stats_off = serve(False)
+    out_on, stats_on = serve(True)
+    assert out_on == out_off
+    for k in ("prefill_compiles", "ssm_prefill_compiles",
+              "decode_compiles"):
+        assert stats_on[k] == stats_off[k], k
+
+
+def test_dispatch_spans_match_counters(small_model):
+    cfg, params = small_model
+    prompts = _prompts(cfg, [5, 9, 6, 12])
+    reg = MetricsRegistry()
+    tr = SpanTracer(registry=reg)
+    eng = ServeEngine(cfg, params, tracer=tr, registry=reg, **ENGINE_KW)
+    reqs = _reqs(prompts, max_new=10)
+    eng.run(reqs)
+
+    assert tr.check_well_nested()
+    assert len(tr.spans_named("decode.dispatch")) \
+        == eng.stats["decode_dispatches"]
+    assert len(tr.spans_named("admit")) == len(reqs)
+    assert len([e for e in tr.instants if e.name == "retire"]) == len(reqs)
+    # engine dispatches on its own track; lanes each get one
+    assert eng.name in tr.tracks()
+    assert any(t.startswith(f"{eng.name}/lane") for t in tr.tracks())
+    # durations landed in the registry histograms behind the bench p50/p99
+    assert reg["span.decode.dispatch.seconds"].count \
+        == eng.stats["decode_dispatches"]
+    # spans are monotone and closed
+    assert all(s.t1 >= s.t0 for s in tr.spans)
+    # export is Perfetto-loadable JSON
+    obj = json.loads(tr.to_json())
+    assert {e["name"] for e in obj["traceEvents"] if e["ph"] == "X"} \
+        >= {"admit", "prefill.bucket", "decode.dispatch"}
+
+
+def test_pagepool_registry_gauges(small_model):
+    cfg, params = small_model
+    reg = MetricsRegistry()
+    eng = ServeEngine(cfg, params, registry=reg, name="serve", **ENGINE_KW)
+    assert reg["serve.pool.pages.free"].value == eng.pool.n_free
+    eng.run(_reqs(_prompts(cfg, [5, 9]), max_new=6))
+    assert reg["serve.pool.pages.in_use"].value == 0     # all retired
+    assert reg["serve.pool.pages.hwm"].value == eng.pool.hwm > 0
+    assert reg["serve.pool.pages.allocs"].value \
+        == reg["serve.pool.pages.frees"].value > 0
+    # legacy flat keys still answer through the same registry
+    assert eng.stats["kv_pages_hwm"] == eng.pool.hwm
+
+
+def test_calibration_gate_on_real_replay(small_model):
+    """predict_replay matches the measured replay exactly; perturbed
+    phase models fail the same gate (self-test)."""
+    from repro.fleet.execution import run_trace_on_engine
+    from repro.fleet.workload import FleetRequest
+
+    cfg, params = small_model
+    trace = [FleetRequest(uid=i, arrival_s=0.05 * i,
+                          prompt_len=3 + i % 4, gen_len=2 + i % 5)
+             for i in range(6)]
+    reg = MetricsRegistry()
+    tr = SpanTracer(registry=reg)
+    kw = dict(n_lanes=2, max_len=64, dispatch_n=4, paged=True, page_size=8)
+    real = run_trace_on_engine(trace, cfg, params, tracer=tr,
+                               registry=reg, **kw)
+    sim = predict_replay(trace, **kw)
+    rep = calibrate_replay(real, sim, spans=tr.spans)
+    assert rep.ok and rep.max_rel_err == 0.0
+    assert rep.fitted["n_spans"] == real.decode_dispatches
+
+    pert = predict_replay(trace, **dict(kw, dispatch_n=1))
+    assert not calibrate_replay(real, pert).ok
+    pert = predict_replay(trace, **dict(kw, page_size=2))
+    assert not calibrate_replay(real, pert).ok
+
+
+def test_execution_result_spill_alias_deprecated(small_model):
+    """kv_spill_events aliased the engine's blocked-admission counter;
+    the field is now kv_admit_blocked with a deprecation shim."""
+    from repro.fleet.execution import run_trace_on_engine
+    from repro.fleet.workload import FleetRequest
+
+    cfg, params = small_model
+    trace = [FleetRequest(uid=i, arrival_s=0.0, prompt_len=4, gen_len=3)
+             for i in range(3)]
+    res = run_trace_on_engine(trace, cfg, params, n_lanes=2, max_len=64,
+                              dispatch_n=4, paged=True, page_size=8)
+    with pytest.warns(DeprecationWarning, match="kv_admit_blocked"):
+        assert res.kv_spill_events == res.kv_admit_blocked
+
+
+def test_validators_emit_verdict_events(small_model):
+    from repro.fleet.execution import validate_preemption_exactness
+    from repro.fleet.workload import FleetRequest
+
+    cfg, params = small_model
+    trace = [FleetRequest(uid=i, arrival_s=0.1 * i, prompt_len=4 + i,
+                          gen_len=5) for i in range(3)]
+    DEFAULT_LOG.clear()
+    out = validate_preemption_exactness(trace, cfg, params,
+                                        preempt_every=1, n_lanes=2,
+                                        max_len=64, dispatch_n=4,
+                                        page_size=8)
+    (ev,) = DEFAULT_LOG.records("validate.preemption_exactness")
+    assert ev.fields["resume_exact"] is True is out["resume_exact"]
+    assert ev.fields["preemptions"] == out["preemptions"] > 0
+    assert ev.fields["n_mismatches"] == 0
+
+
+def test_multimodel_validator_emits_event(small_model):
+    from repro.fleet.execution import validate_multimodel_exactness
+    from repro.fleet.workload import FleetRequest
+
+    cfg, params = small_model
+    cfg_b = get_config("olmo-1b", smoke=True)
+    params_b = build_model(cfg_b).init(jax.random.PRNGKey(1))
+    models = {"a": (cfg, params), "b": (cfg_b, params_b)}
+    trace = [FleetRequest(uid=i, arrival_s=0.1 * i, prompt_len=4,
+                          gen_len=4, model_id="a" if i % 2 == 0 else "b")
+             for i in range(4)]
+    DEFAULT_LOG.clear()
+    out = validate_multimodel_exactness(trace, models, n_lanes=2,
+                                        max_len=64, dispatch_n=4,
+                                        page_size=8)
+    (ev,) = DEFAULT_LOG.records("validate.multimodel_exactness")
+    assert ev.fields["exact"] is True is out["exact"]
+    assert ev.fields["model_swaps"] == out["model_swaps"]
+
+
+def test_fleet_sim_spans_and_gauges():
+    from repro.fleet import FleetSim, NodeSpec
+    from repro.fleet.workload import LengthDist, poisson_trace
+
+    trace = poisson_trace(10.0, 2.0, seed=3,
+                          prompt=LengthDist(256, cv=0.3),
+                          gen=LengthDist(64, cv=0.3))
+    reg = MetricsRegistry()
+    tr = SpanTracer(registry=reg)
+    sim = FleetSim([NodeSpec("cmp-170hx-nofma", 2, "both", 4)], trace,
+                   fmt="q8_0", tracer=tr, registry=reg)
+    rep = sim.run()
+    assert len(tr.spans_named("sim.prefill")) == rep.completed > 0
+    assert len(tr.spans_named("sim.decode")) == rep.completed
+    assert tr.check_well_nested()
+    # sim-clock timestamps are simulated seconds, not host time
+    assert max(s.t1 for s in tr.spans) <= rep.makespan_s + 1e-9
+    # report gauges mirror FleetReport.metrics()
+    assert reg["fleet.completed"].value == rep.completed
+    # per-node callback gauges read through live node state
+    node_gauges = [n for n in reg.names() if n.startswith("fleet.node.")]
+    assert any(n.endswith("tokens_decoded") for n in node_gauges)
