@@ -13,18 +13,23 @@
 # routing, PagePool shrink/grow invariants).
 # `make test-obs` runs the telemetry layer (metrics registry, span
 # tracer exactness-neutrality, event log, sim-to-real calibration gate).
+# `make test-faults` runs the fault-tolerance layer (fault injection,
+# checkpointed crash recovery, retry/hedging, degradation ladder,
+# recovery-exactness oracle + hypothesis churn).
 # `make bench-smoke` runs the measured decode-path bench on a tiny config
 # and emits BENCH_decode.json (tokens/s, dispatches/token, bytes/token,
 # and the paged section: admission capacity, paged-vs-dense token parity,
 # bytes/token parity) -- the decode perf trajectory is tracked from PR 2
 # onward; the bench FAILS if the paged section is missing, paged
-# bytes/token drifts >10% from dense at full occupancy, or the telemetry
-# section's sim-to-real calibration fit exceeds its declared tolerance.
+# bytes/token drifts >10% from dense at full occupancy, the telemetry
+# section's sim-to-real calibration fit exceeds its declared tolerance,
+# or the faults section's recovery oracle / goodput-under-faults gate
+# fails (crash recovery must be bit-exact and keep >= 90% goodput).
 
 PYTEST := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest
 PYRUN  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast test-paged test-preempt test-multimodel test-obs bench bench-smoke
+.PHONY: test test-fast test-paged test-preempt test-multimodel test-obs test-faults bench bench-smoke
 
 test:
 	$(PYTEST) -x -q
@@ -43,6 +48,9 @@ test-multimodel:
 
 test-obs:
 	$(PYTEST) -q -m obs
+
+test-faults:
+	$(PYTEST) -q -m faults
 
 bench:
 	$(PYRUN) -m benchmarks.run

@@ -65,6 +65,7 @@ def rows() -> List[Row]:
                    f"ratio={steady.requests_per_s / plan.requests_per_s:.3f}"))
     out.extend(preemption_rows())
     out.extend(multimodel_rows())
+    out.extend(fault_rows())
     return out
 
 
@@ -156,6 +157,78 @@ def multimodel_rows() -> List[Row]:
                         f"tpot_p50={tpot_p50 * 1e3:.2f}ms "
                         f"gen_tokens={toks} tokens_per_joule={tpj:.1f}"))
     return rows
+
+
+def fault_reports():
+    """One deterministic fault scenario, simulated three ways.
+
+    A mixed fleet (1 prefill board + 3 CMP decode boards) serves a
+    40 s trace while the fault plan kills one decode board mid-trace,
+    thermally derates another for a window, stalls the third briefly,
+    and flaps the prefill board's host link.  Three decode boards
+    matter for the straggler monitor: with two, the fleet median is
+    the mean of the pair and a derated board converges to exactly
+    ``threshold`` x median without ever crossing it.  Returns
+    ``(fault_free, with_recovery, without_recovery)`` reports: with a
+    :class:`RecoveryPolicy` the crashed board's live lanes resume from
+    checkpoints (or replay from the prompt) and orphaned requests
+    retry with backoff; without one, whatever the crash touched is
+    LOST.  Shared by ``fault_rows`` and the BENCH_decode.json
+    ``faults`` gate.
+    """
+    from repro.fleet import (FaultEvent, FaultPlan, RecoveryPolicy,
+                             RetryPolicy)
+
+    specs = [NodeSpec("a100-40g", 1, "prefill"),
+             NodeSpec("cmp-170hx-nofma", 3, "decode", decode_lanes=8,
+                      kv_pool_pages=512, page_size=16)]
+    trace = poisson_trace(6.0, 40.0, seed=2,
+                          prompt=LengthDist(256, cv=0.3),
+                          gen=LengthDist(512, cv=0.5))
+    plan = FaultPlan(events=(
+        FaultEvent("derate", node="cmp-170hx-nofma/decode#1", at_s=5.0,
+                   factor=3.0, duration_s=12.0),
+        FaultEvent("crash", node="cmp-170hx-nofma/decode#2", at_s=20.1),
+        FaultEvent("transient", node="cmp-170hx-nofma/decode#3",
+                   at_s=30.0, duration_s=0.25),
+    )) + FaultPlan.flap("a100-40g/prefill#0", t0=8.0, period_s=2.0,
+                        n_flaps=3, factor=4.0)
+    slo = dict(ttft_slo_s=2.0, tpot_slo_s=0.08)
+    recovery = RecoveryPolicy(checkpoint_interval_s=0.5,
+                              retry=RetryPolicy(max_attempts=4))
+    base = FleetSim(specs, trace, fmt=WL.fmt, **slo).run()
+    rec = FleetSim(specs, trace, fmt=WL.fmt, faults=plan,
+                   recovery=recovery, **slo).run()
+    norec = FleetSim(specs, trace, fmt=WL.fmt, faults=plan, **slo).run()
+    return base, rec, norec
+
+
+def fault_rows() -> List[Row]:
+    """Crash/derate/flap scenario: goodput and decode tail with and
+    without checkpointed recovery, against the fault-free baseline."""
+    base, rec, norec = fault_reports()
+
+    def fmt(r):
+        return (f"completed={r.completed}/{r.offered} "
+                f"goodput={r.goodput_rps:.2f}req/s "
+                f"tpot_p99={r.tpot_p99_s * 1e3:.2f}ms")
+
+    return [
+        Row("fleet_faults[fault_free]", 0.0, fmt(base)),
+        Row("fleet_faults[crash+flap_with_recovery]", 0.0,
+            fmt(rec) + f" crashes={rec.crashes} "
+            f"recovered={rec.recovered_lanes} "
+            f"replayed={rec.replayed_from_prompt} retries={rec.retries} "
+            f"lost={rec.requests_lost} "
+            f"goodput_vs_base={rec.goodput_rps / base.goodput_rps:.2f}"),
+        Row("fleet_faults[crash+flap_no_recovery]", 0.0,
+            fmt(norec) + f" lost={norec.requests_lost} "
+            f"goodput_vs_base={norec.goodput_rps / base.goodput_rps:.2f}"),
+        Row("fleet_faults[derate_detection]", 0.0,
+            f"straggler_flags={len(rec.derate_detected)} "
+            + (rec.derate_detected[0].replace(",", ";")
+               if rec.derate_detected else "none")),
+    ]
 
 
 def execution_replay_rows(dispatch_n: int = 8) -> List[Row]:

@@ -52,6 +52,18 @@ summarised (p50/p99), and the sim-to-real calibration gate
 ``run_trace_on_engine`` replay) must fit within tolerance -- while a
 deliberately perturbed phase model must FAIL the same gate
 (``make bench-smoke`` gates on all of it).
+
+The ``faults`` section checks the fault-tolerance contract ("a crash
+costs time, never tokens") on both layers: the engine oracle
+(:func:`repro.fleet.execution.validate_recovery_exactness`) crashes a
+node mid-replay and requires checkpointed lanes AND
+replayed-from-prompt lanes to reproduce the undisturbed greedy streams
+bit for bit; the fleet simulator runs the shared
+``benchmarks.fleet_sim.fault_reports`` scenario (derate + link flap +
+crash + transient) and requires zero lost requests, >= 90% of the
+fault-free goodput, and at least one straggler-monitor flag -- while
+the same scenario WITHOUT a recovery policy must visibly lose requests
+(``make bench-smoke`` gates on all of it).
 """
 
 from __future__ import annotations
@@ -482,6 +494,65 @@ def telemetry_metrics(cfg, params, prompts, *, n_lanes: int,
     }
 
 
+def faults_metrics(cfg, params) -> dict:
+    """Faults section of BENCH_decode.json.
+
+    Two layers, same contract ("a crash costs time, never tokens"):
+
+    * **engine oracle** -- :func:`repro.fleet.execution.
+      validate_recovery_exactness` replays a seeded trace on the REAL
+      paged engine with a transient fault, periodic checkpoint ticks
+      and a mid-trace node crash; lanes resumed from checkpoints AND
+      lanes replayed from the prompt must reproduce the undisturbed
+      greedy streams bit for bit;
+    * **fleet sim** -- the shared ``benchmarks.fleet_sim.fault_reports``
+      scenario (derate + link flap + crash + transient on a 4-board
+      fleet): with a :class:`RecoveryPolicy` nothing is lost and
+      goodput stays >= 90% of the fault-free baseline; without one the
+      crash visibly loses requests -- the no-recovery arm is the
+      gate's self-test.
+    """
+    from benchmarks.fleet_sim import fault_reports
+    from repro.fleet.execution import validate_recovery_exactness
+    from repro.fleet.workload import LengthDist, poisson_trace
+
+    trace = poisson_trace(2.0, 6.0, seed=3, prompt=LengthDist(12, cv=0.3),
+                          gen=LengthDist(14, cv=0.4))
+    # crash at dispatch 10 exercises BOTH recovery paths on this trace:
+    # one live lane has a checkpoint (resumes), one does not (replays)
+    oracle = validate_recovery_exactness(
+        trace, cfg, params, crash_at_dispatch=10, checkpoint_every=3,
+        transient_dispatches=(2,), n_lanes=2, max_len=32, dispatch_n=4,
+        page_size=8, seed=5)
+    oracle.pop("mismatches", None)      # int-keyed; not JSON material
+
+    base, rec, norec = fault_reports()
+    return {
+        "engine_oracle": oracle,
+        "sim": {
+            "fault_free_goodput_rps": round(base.goodput_rps, 3),
+            "with_recovery": {
+                "goodput_rps": round(rec.goodput_rps, 3),
+                "goodput_vs_base": round(
+                    rec.goodput_rps / base.goodput_rps, 4),
+                "crashes": rec.crashes,
+                "recovered_lanes": rec.recovered_lanes,
+                "replayed_from_prompt": rec.replayed_from_prompt,
+                "checkpoints": rec.checkpoints,
+                "retries": rec.retries,
+                "requests_lost": rec.requests_lost,
+                "straggler_flags": len(rec.derate_detected),
+            },
+            "without_recovery": {
+                "goodput_rps": round(norec.goodput_rps, 3),
+                "goodput_vs_base": round(
+                    norec.goodput_rps / base.goodput_rps, 4),
+                "requests_lost": norec.requests_lost,
+            },
+        },
+    }
+
+
 def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
                         max_len: int = 64, prompt_len: int = 8,
                         max_new: int = 16, n_requests: int = 8,
@@ -594,6 +665,7 @@ def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
                                        max_new=max_new,
                                        dispatch_n=dispatch_n,
                                        page_size=bk),
+        "faults": faults_metrics(cfg, params),
     }
 
 
@@ -669,10 +741,31 @@ def main(argv=None) -> int:
         and tel["calibration"]["ok"]
         and tel["perturbation_check"]["gate_self_test_pass"])
     ok = ok and tel_ok
+    flt = rec.get("faults", {})
+    oracle = flt.get("engine_oracle", {})
+    sim = flt.get("sim", {})
+    flt_ok = (
+        bool(flt)
+        # engine oracle: both recovery paths exercised, both bit-exact
+        and oracle["resume_exact"]
+        and oracle["replay_exact"]
+        and oracle["counts_match"]
+        and oracle["crashes"] == 1
+        and oracle["recovered_lanes"] >= 1
+        and oracle["replayed_from_prompt"] >= 1
+        and oracle["retry_attempts"] > 0
+        # fleet sim: recovery keeps goodput, no-recovery self-test loses
+        and sim["with_recovery"]["crashes"] >= 1
+        and sim["with_recovery"]["requests_lost"] == 0
+        and sim["with_recovery"]["goodput_vs_base"] >= 0.90
+        and sim["with_recovery"]["straggler_flags"] >= 1
+        and sim["without_recovery"]["requests_lost"] > 0)
+    ok = ok and flt_ok
     print("BENCH_decode paged section:", "PASS" if paged_ok else "FAIL")
     print("BENCH_decode migration section:", "PASS" if mig_ok else "FAIL")
     print("BENCH_decode multimodel section:", "PASS" if mm_ok else "FAIL")
     print("BENCH_decode telemetry section:", "PASS" if tel_ok else "FAIL")
+    print("BENCH_decode faults section:", "PASS" if flt_ok else "FAIL")
     print("BENCH_decode:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -26,18 +26,24 @@ Modules: `workload` (trace generators + multi-model mixes), `node`
 (simulated boards incl. resident-model sets), `router` (placement
 policies incl. model affinity and anticipated eviction cost), `sim`
 (event loop + metrics), `autoscale` (queue-depth pool scaling),
+`faults` (deterministic fault plans, injection, recovery policy),
 `execution` (replay on the real `ServeEngine` /
-`MultiModelServeEngine` to validate token accounting).
+`MultiModelServeEngine` to validate token accounting and
+crash-recovery exactness).
 """
 
 from repro.fleet.autoscale import QueueDepthAutoscaler
-from repro.fleet.execution import (ExecutionResult,
+from repro.fleet.execution import (ExecutionResult, FaultReplayResult,
                                    MultiModelExecutionResult,
                                    run_multimodel_trace_on_engine,
                                    run_trace_on_engine,
+                                   run_trace_with_faults,
                                    validate_multimodel_exactness,
                                    validate_preemption_exactness,
+                                   validate_recovery_exactness,
                                    validate_token_accounting)
+from repro.fleet.faults import (FAULT_KINDS, FaultEvent, FaultInjector,
+                                FaultPlan, RecoveryPolicy, RetryPolicy)
 from repro.fleet.node import SimNode
 from repro.fleet.router import (CostAwareRouter, LeastLoadedRouter,
                                 PreemptionAwareSLORouter, Router,
@@ -51,11 +57,14 @@ from repro.fleet.workload import (FleetRequest, LengthDist, bursty_trace,
                                   multimodel_trace, poisson_trace)
 
 __all__ = [
-    "QueueDepthAutoscaler", "ExecutionResult",
+    "QueueDepthAutoscaler", "ExecutionResult", "FaultReplayResult",
     "MultiModelExecutionResult", "run_multimodel_trace_on_engine",
-    "run_trace_on_engine",
+    "run_trace_on_engine", "run_trace_with_faults",
     "validate_multimodel_exactness",
-    "validate_preemption_exactness", "validate_token_accounting",
+    "validate_preemption_exactness", "validate_recovery_exactness",
+    "validate_token_accounting",
+    "FAULT_KINDS", "FaultEvent", "FaultInjector", "FaultPlan",
+    "RecoveryPolicy", "RetryPolicy",
     "SimNode", "CostAwareRouter",
     "LeastLoadedRouter", "PreemptionAwareSLORouter", "Router",
     "SLOAwareRouter", "anticipated_eviction_s", "model_affinity_penalty",

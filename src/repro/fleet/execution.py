@@ -23,13 +23,14 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.fleet.faults import FaultPlan
 from repro.fleet.sim import FleetReport, FleetSim
 from repro.fleet.workload import FleetRequest
 from repro.models.common import ModelConfig
 from repro.obs import events as obs_events
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import SpanTracer
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import LaneCheckpoint, Request, ServeEngine
 from repro.serving.modelpool import ModelPool, MultiModelServeEngine
 
 
@@ -225,6 +226,217 @@ def validate_preemption_exactness(trace: Sequence[FleetRequest],
                     preemptions=verdict["preemptions"],
                     restores=verdict["restores"],
                     pages_migrated=verdict["pages_migrated"])
+    return verdict
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultReplayResult:
+    """Accounting from a crash-and-recover replay on the REAL engine.
+
+    ``checkpointed_uids`` resumed from a :class:`LaneCheckpoint` taken at
+    the last checkpoint tick before the crash (tokens generated since the
+    tick were rolled back and re-decoded); ``replayed_uids`` had no
+    checkpoint yet and restarted from the prompt.  ``retry_attempts``
+    counts both recovery admissions and transient dispatch retries, and
+    lands in the surviving engine's ``engine.retry.attempts`` counter.
+    """
+
+    gen_by_uid: Dict[int, int]
+    streams: Dict[int, Tuple[int, ...]]
+    crashes: int
+    checkpointed_uids: Tuple[int, ...]
+    replayed_uids: Tuple[int, ...]
+    retry_attempts: int
+    transients: int
+    checkpoints: int
+
+
+def run_trace_with_faults(trace: Sequence[FleetRequest],
+                          cfg: ModelConfig, params,
+                          plan: Optional[FaultPlan] = None,
+                          crash_at_dispatch: Optional[int] = None,
+                          checkpoint_every: Optional[int] = 4,
+                          transient_dispatches: Sequence[int] = (),
+                          n_lanes: int = 2, max_len: int = 64,
+                          vocab_size: Optional[int] = None, seed: int = 0,
+                          dispatch_n: int = 8, page_size: int = 16,
+                          n_pages: Optional[int] = None,
+                          temperature: float = 0.0) -> FaultReplayResult:
+    """Replay ``trace`` through the real paged engine while injecting a
+    node crash (plus optional transient dispatch errors) and recovering.
+
+    "Time" here is the decode dispatch index (a :class:`FaultPlan` with
+    ``at_dispatch`` events drives it; or pass the knobs directly).  Every
+    ``checkpoint_every`` dispatches each live lane is checkpointed -- an
+    evict/restore round trip, so the snapshot is exactly what a fleet
+    would hold host-side.  At ``crash_at_dispatch`` the engine ("node0")
+    dies with its lanes; a fresh engine ("node1") takes over:
+    checkpointed lanes re-enter from their snapshot (their request's
+    stream rolled back to the tick), the rest replay from the prompt.
+    Greedy streams must come out bit-identical to an undisturbed run
+    (``validate_recovery_exactness`` pins this).
+    """
+    if plan is not None:
+        if crash_at_dispatch is None:
+            crash_at_dispatch = plan.crash_dispatch()
+        transient_dispatches = plan.transient_dispatches()
+    vocab = vocab_size or cfg.vocab_size
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=r.uid,
+                    prompt=rng.integers(0, vocab, r.prompt_len,
+                                        dtype=np.int32),
+                    max_new_tokens=r.gen_len)
+            for r in sorted(trace, key=lambda r: (r.arrival_s, r.uid))]
+    final_req: Dict[int, Request] = {r.uid: r for r in reqs}
+
+    def mk_engine(node: str) -> ServeEngine:
+        return ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
+                           dispatch_n=dispatch_n, paged=True,
+                           page_size=page_size, n_pages=n_pages,
+                           temperature=temperature, name=node)
+
+    engine = mk_engine("node0")
+    pending = list(reqs)
+    held: deque = deque()                  # checkpoints awaiting restore
+    #: uid -> (checkpoint, generated-length at the tick); the request
+    #: object inside keeps accumulating, so the length pins the rollback
+    snapshots: Dict[int, Tuple[LaneCheckpoint, int]] = {}
+    dispatch = 0
+    crashes = 0
+    checkpoints = 0
+    transients = 0
+    retry_attempts = 0
+    transient_set = set(transient_dispatches)
+    checkpointed: list = []
+    replayed: list = []
+
+    while pending or held or engine.live_lanes():
+        while held and engine.restore(held[0]):
+            held.popleft()
+        if not held:
+            while pending and engine.free_lanes():
+                if not engine.admit(pending[0]):
+                    break
+                pending.pop(0)
+        if not engine.live_lanes():
+            raise RuntimeError("fault replay made no progress")
+        if dispatch in transient_set:
+            # transient dispatch error: the dispatch fails and is
+            # re-issued -- one retry attempt, no token-stream effect
+            retry_attempts += 1
+            engine.stats["retry_attempts"] += 1
+            transients += 1
+        engine.decode_n()
+        dispatch += 1
+        if checkpoint_every and dispatch % checkpoint_every == 0:
+            for lane in list(engine.live_lanes()):
+                ckpt = engine.evict(lane)
+                snapshots[ckpt.uid] = (ckpt, len(ckpt.req.generated))
+                assert engine.restore(ckpt), \
+                    "checkpoint round trip must fit the pages it freed"
+            checkpoints += 1
+        if crash_at_dispatch is not None and dispatch == crash_at_dispatch:
+            # node0 dies fail-stop: its lanes (and their pages) are gone
+            crashes += 1
+            casualties = [engine.lane_req[i] for i in engine.live_lanes()]
+            engine = mk_engine("node1")
+            for req in casualties:
+                snap = snapshots.get(req.uid)
+                if snap is not None:
+                    ckpt, glen = snap
+                    resumed = Request(uid=req.uid, prompt=req.prompt,
+                                      max_new_tokens=req.max_new_tokens,
+                                      generated=list(req.generated[:glen]),
+                                      model_id=req.model_id,
+                                      priority=req.priority)
+                    final_req[req.uid] = resumed
+                    held.append(dataclasses.replace(ckpt, req=resumed))
+                    checkpointed.append(req.uid)
+                else:
+                    req.generated.clear()    # no checkpoint yet: from prompt
+                    pending.insert(0, req)
+                    replayed.append(req.uid)
+                retry_attempts += 1
+            # node0's counter died with it; the surviving engine carries
+            # the replay-level total under engine.retry.attempts
+            engine.stats["retry_attempts"] = retry_attempts
+
+    engine.pool.check()
+    assert engine.pool.n_in_use == 0, "fault replay leaked KV pages"
+    streams = {uid: tuple(r.generated) for uid, r in final_req.items()}
+    return FaultReplayResult(
+        gen_by_uid={uid: len(s) for uid, s in streams.items()},
+        streams=streams, crashes=crashes,
+        checkpointed_uids=tuple(checkpointed),
+        replayed_uids=tuple(replayed),
+        retry_attempts=engine.stats["retry_attempts"],
+        transients=transients, checkpoints=checkpoints)
+
+
+def validate_recovery_exactness(trace: Sequence[FleetRequest],
+                                cfg: ModelConfig, params,
+                                crash_at_dispatch: int = 6,
+                                checkpoint_every: int = 3,
+                                transient_dispatches: Sequence[int] = (2,),
+                                **kw) -> Dict[str, object]:
+    """The recovery oracle: crash a node mid-trace and diff the TOKEN
+    STREAMS against an undisturbed run.
+
+    Checkpointed lanes must resume BIT-IDENTICALLY (the sampling
+    identity travels in the checkpoint); replayed-from-prompt lanes must
+    also complete identically under greedy decoding (the stream is a
+    pure function of the prompt).  Returns the verdict plus the recovery
+    counters, and leaves an auditable ``repro.obs`` event behind.
+    """
+    kw = dict(kw, temperature=0.0)      # the bit-exactness contract is greedy
+    base = run_trace_on_engine(trace, cfg, params, paged=True,
+                               **{k: v for k, v in kw.items()
+                                  if k != "temperature"})
+    # stream-level baseline: rebuild the same requests and run clean
+    vocab = kw.get("vocab_size") or cfg.vocab_size
+    rng = np.random.default_rng(kw.get("seed", 0))
+    clean = [Request(uid=r.uid,
+                     prompt=rng.integers(0, vocab, r.prompt_len,
+                                         dtype=np.int32),
+                     max_new_tokens=r.gen_len)
+             for r in sorted(trace, key=lambda r: (r.arrival_s, r.uid))]
+    eng = ServeEngine(cfg, params, n_lanes=kw.get("n_lanes", 2),
+                      max_len=kw.get("max_len", 64),
+                      dispatch_n=kw.get("dispatch_n", 8), paged=True,
+                      page_size=kw.get("page_size", 16),
+                      n_pages=kw.get("n_pages"), temperature=0.0)
+    eng.run(clean)
+    base_streams = {r.uid: tuple(r.generated) for r in clean}
+
+    faulted = run_trace_with_faults(
+        trace, cfg, params, crash_at_dispatch=crash_at_dispatch,
+        checkpoint_every=checkpoint_every,
+        transient_dispatches=transient_dispatches, **kw)
+    ckpt_mismatch = {uid: (base_streams[uid], faulted.streams[uid])
+                     for uid in faulted.checkpointed_uids
+                     if base_streams[uid] != faulted.streams[uid]}
+    replay_mismatch = {uid: (base_streams[uid], faulted.streams[uid])
+                       for uid in faulted.replayed_uids
+                       if base_streams[uid] != faulted.streams[uid]}
+    verdict = {
+        "resume_exact": not ckpt_mismatch,
+        "replay_exact": not replay_mismatch,
+        "counts_match": faulted.gen_by_uid == base.gen_by_uid,
+        "crashes": faulted.crashes,
+        "recovered_lanes": len(faulted.checkpointed_uids),
+        "replayed_from_prompt": len(faulted.replayed_uids),
+        "retry_attempts": faulted.retry_attempts,
+        "checkpoints": faulted.checkpoints,
+        "mismatches": {**ckpt_mismatch, **replay_mismatch},
+    }
+    obs_events.emit("validate.recovery_exactness",
+                    resume_exact=verdict["resume_exact"],
+                    replay_exact=verdict["replay_exact"],
+                    counts_match=verdict["counts_match"],
+                    crashes=verdict["crashes"],
+                    recovered_lanes=verdict["recovered_lanes"],
+                    replayed_from_prompt=verdict["replayed_from_prompt"],
+                    retry_attempts=verdict["retry_attempts"])
     return verdict
 
 

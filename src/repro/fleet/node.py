@@ -92,6 +92,10 @@ class DecodeSlot:
     #: per-step weight-stream time of THIS slot's model -- paid once per
     #: step per distinct resident model in the batch, not per lane
     t_weights_s: float = 0.0
+    #: tokens covered by the last host-side lane checkpoint (None: no
+    #: checkpoint interval has elapsed yet).  On a node crash the slot
+    #: resumes from here -- tokens past it are lost with the board's HBM
+    ckpt_tokens: Optional[int] = None
 
 
 class SimNode:
@@ -168,6 +172,11 @@ class SimNode:
         self.decode_queue: Deque[DecodeSlot] = deque()
         self._decode_last_t = 0.0
         self.decode_version = 0   # invalidates stale scheduled events
+        # fault state (driven by repro.fleet.faults via the sim)
+        self.failed = False        # crashed: permanently unroutable
+        self.derate = 1.0          # compute/thermal time dilation (>= 1)
+        self.link_derate = 1.0     # host-link time dilation (>= 1)
+        self.stall_until = 0.0     # transient stall window end (sim clock)
         # fleet membership (set by the sim / autoscaler)
         self.draining = False
         self.available_at = 0.0   # cold-start: unroutable before this
@@ -262,7 +271,8 @@ class SimNode:
         (0 when already resident) -- the router's estimate, no mutation."""
         if self.model_resident(mid):
             return 0.0
-        return link_transfer_seconds(self.profile, self._weight_bytes[mid])
+        return (link_transfer_seconds(self.profile, self._weight_bytes[mid])
+                * self.link_derate)
 
     def pin_model(self, mid: str) -> None:
         """Weights (or a request) are en route for ``mid``: not evictable."""
@@ -295,7 +305,8 @@ class SimNode:
             if mid in self.resident_models:
                 self.resident_models[mid] = now
             return 0.0
-        t = link_transfer_seconds(self.profile, self._weight_bytes[mid])
+        t = (link_transfer_seconds(self.profile, self._weight_bytes[mid])
+             * self.link_derate)
         self.resident_models[mid] = now
         self.model_swaps += 1
         self.swap_bytes += self._weight_bytes[mid]
@@ -353,13 +364,14 @@ class SimNode:
     def prefill_service_s(self, prompt_len: int,
                           mid: Optional[str] = None) -> float:
         tps, _ = self._prefill_est(prompt_len, mid)
-        return prompt_len / (tps * self._split)
+        return prompt_len / (tps * self._split) * self.derate
 
     def prefill_handoff_s(self, prompt_len: int,
                           peer: Optional[DeviceProfile] = None,
                           mid: Optional[str] = None) -> float:
         return kv_handoff_seconds(self.profile, prompt_len,
-                                  self._spec_for(mid), peer=peer)
+                                  self._spec_for(mid),
+                                  peer=peer) * self.link_derate
 
     def est_prefill_wait_s(self, now: float) -> float:
         """Backlog ahead of a newly routed request (router's estimate)."""
@@ -453,7 +465,7 @@ class SimNode:
         on the CMP 170HX both directions are strangled by the PCIe 1.1
         x4 link (~1 GB/s), which is the whole migration trade-off."""
         return kv_handoff_seconds(self.profile, n_pages * self.page_size,
-                                  self.spec, peer=peer)
+                                  self.spec, peer=peer) * self.link_derate
 
     def preempt_slot(self, uid: int, now: float) -> DecodeSlot:
         """Evict a resident slot mid-stream: advance everyone to ``now``
@@ -487,7 +499,8 @@ class SimNode:
                           prompt_len=slot.prompt_len,
                           tokens_done=slot.tokens_done,
                           t_first_token=slot.t_first_token,
-                          model_id=slot.model_id, t_weights_s=t_w)
+                          model_id=slot.model_id, t_weights_s=t_w,
+                          ckpt_tokens=slot.ckpt_tokens)
 
     def _spill_factor(self) -> float:
         """Multiplier on the KV-stream term when over-committed: the
@@ -541,7 +554,8 @@ class SimNode:
         comp_sum = sum(s.t_comp_s for s in self.decode_active.values())
         kv_sum = sum(s.t_kv_s for s in self.decode_active.values())
         kv_sum *= self._spill_factor()
-        return max(comp_sum, self._weights_stream_s({}) + kv_sum) / self._split
+        return (max(comp_sum, self._weights_stream_s({}) + kv_sum)
+                / self._split * self.derate)
 
     def decode_load(self) -> int:
         return len(self.decode_active) + len(self.decode_queue)
@@ -556,7 +570,8 @@ class SimNode:
         kv_sum += extra * t_kv
         kv_sum *= self._spill_factor()
         t_weights = self._weights_stream_s({mid: t_w})
-        return max(comp_sum, t_weights + kv_sum) / self._split
+        return (max(comp_sum, t_weights + kv_sum)
+                / self._split * self.derate)
 
     def make_slot(self, uid: int, prompt_len: int, gen_len: int,
                   model_id: Optional[str] = None) -> DecodeSlot:
@@ -581,8 +596,15 @@ class SimNode:
         return False
 
     def decode_advance(self, now: float) -> List[DecodeSlot]:
-        """Progress active lanes to ``now``; returns newly finished slots."""
-        dt = now - self._decode_last_t
+        """Progress active lanes to ``now``; returns newly finished slots.
+
+        A transient-fault stall window (``stall_until``) produces no
+        tokens: the overlap with [last_t, now] is excised from the
+        integration interval."""
+        run_start = self._decode_last_t
+        if self.stall_until > run_start:
+            run_start = min(self.stall_until, now)
+        dt = now - run_start
         if dt <= 0 or not self.decode_active:
             self._decode_last_t = max(self._decode_last_t, now)
             return []
@@ -594,8 +616,7 @@ class SimNode:
             slot.tokens_done = min(before + rate * dt, float(slot.gen_len))
             advanced = slot.tokens_done - before
             if slot.t_first_token is None and slot.tokens_done >= 1.0:
-                slot.t_first_token = (self._decode_last_t
-                                      + (1.0 - before) * step)
+                slot.t_first_token = run_start + (1.0 - before) * step
             self.energy_active_j += slot.dyn_j_per_tok * advanced
             self.tokens_decoded += advanced
             if slot.model_id is not None:
@@ -626,7 +647,7 @@ class SimNode:
         step = self._step_time_s()
         remaining = min(slot.gen_len - slot.tokens_done
                         for slot in self.decode_active.values())
-        return now + max(remaining, 0.0) * step
+        return max(now, self.stall_until) + max(remaining, 0.0) * step
 
     # ------------------------------------------------------------------
     def idle_energy_j(self, duration_s: float) -> float:

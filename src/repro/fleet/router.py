@@ -47,13 +47,13 @@ def _req_model(record) -> Optional[str]:
 def prefill_candidates(nodes: Sequence[SimNode],
                        mid: Optional[str] = None) -> List[SimNode]:
     return [n for n in nodes if n.role in ("prefill", "both")
-            and n.serves_model(mid)]
+            and n.serves_model(mid) and not n.failed]
 
 
 def decode_candidates(nodes: Sequence[SimNode],
                       mid: Optional[str] = None) -> List[SimNode]:
     return [n for n in nodes if n.role in ("decode", "both")
-            and n.serves_model(mid)]
+            and n.serves_model(mid) and not n.failed]
 
 
 def kv_capacity_penalty(record, node: SimNode) -> float:

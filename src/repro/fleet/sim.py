@@ -33,6 +33,8 @@ import numpy as np
 
 from repro.core.device_profile import get_profile
 from repro.core.perf_model import LLMSpec, QWEN25_1P5B
+from repro.fleet.faults import FaultEvent, FaultInjector, FaultPlan, \
+    RecoveryPolicy
 from repro.fleet.node import SimNode
 from repro.fleet.router import LeastLoadedRouter, Router
 from repro.fleet.workload import FleetRequest
@@ -40,6 +42,7 @@ from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import SpanTracer
 from repro.serving.disaggregation import FleetPlan
 from repro.serving.phase_model import capex_usd_per_hour, energy_usd_per_hour
+from repro.train.fault_tolerance import StragglerMonitor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +154,19 @@ class FleetReport:
     scale_events: Tuple[str, ...] = ()
     preempt_events: Tuple[str, ...] = ()
     swap_events: Tuple[str, ...] = ()
+    # fault-tolerance accounting (FaultPlan/RecoveryPolicy runs)
+    crashes: int = 0            # boards lost mid-run
+    derates: int = 0            # compute/thermal derate events
+    link_faults: int = 0        # host-link degradation windows
+    transients: int = 0         # transient dispatch stalls
+    retries: int = 0            # request retry attempts fired
+    hedges: int = 0             # tail-latency hedges launched
+    requests_lost: int = 0      # retries exhausted / no destination
+    recovered_lanes: int = 0    # crashed lanes resumed from checkpoint
+    replayed_from_prompt: int = 0  # crashed lanes with no usable ckpt
+    checkpoints: int = 0        # checkpoint ticks taken
+    fault_events: Tuple[str, ...] = ()
+    derate_detected: Tuple[str, ...] = ()   # straggler-monitor verdicts
 
     def metrics(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
@@ -158,6 +174,8 @@ class FleetReport:
         d.pop("preempt_events")
         d.pop("swap_events")
         d.pop("per_model")
+        d.pop("fault_events")
+        d.pop("derate_detected")
         return d
 
 
@@ -176,7 +194,10 @@ class FleetSim:
                  preemption: Optional[PreemptionPolicy] = None,
                  model_specs: Optional[Dict[str, LLMSpec]] = None,
                  tracer: Optional[SpanTracer] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 faults: Optional[FaultPlan] = None,
+                 recovery: Optional[RecoveryPolicy] = None,
+                 detect_stragglers: bool = False):
         self.fmt = fmt
         self.spec = spec
         # deterministic SIM-CLOCK telemetry: spans carry simulated
@@ -209,6 +230,38 @@ class FleetSim:
         self._migrations: Dict[int, int] = {}   # uid -> moves so far
         self._heap: List[tuple] = []
         self._seq = 0
+        # -- fault tolerance (repro.fleet.faults) ----------------------
+        self.faults = faults
+        self.recovery = recovery
+        self.injector = (FaultInjector(faults, self.registry)
+                         if faults is not None else None)
+        self.fault_events: List[str] = []
+        self.crashes = 0
+        self.derates = 0
+        self.link_faults = 0
+        self.transients = 0
+        self.retries = 0
+        self.hedges = 0
+        self.requests_lost = 0
+        self.recovered_lanes = 0
+        self.replayed_from_prompt = 0
+        self.checkpoints = 0
+        self._attempts: Dict[int, int] = {}      # uid -> retries so far
+        self._lost_uids: set = set()
+        self._hedged: set = set()                # uids hedged once
+        self._hedge_nodes: Dict[int, str] = {}   # uid -> hedge node_id
+        # derate detection: the training-loop straggler monitor reused
+        # on the SIM clock (injectable, so detection is deterministic)
+        self._now = 0.0
+        self.straggler_monitor: Optional[StragglerMonitor] = None
+        if faults is not None or detect_stragglers:
+            self.straggler_monitor = StragglerMonitor(
+                n_hosts=0, warmup=4, clock=lambda: self._now)
+        self._host_idx: Dict[str, int] = {}      # node_id -> monitor host
+        self._host_ids: List[str] = []           # monitor host -> node_id
+        self._obs_last: Dict[str, Tuple[float, float]] = {}
+        self._flagged: set = set()
+        self.derate_detected: List[str] = []
 
     # -- fleet mutation (autoscaler hooks) -----------------------------
     def add_node(self, ns: NodeSpec, now: float) -> SimNode:
@@ -248,7 +301,18 @@ class FleetSim:
 
     def _routable(self, now: float) -> List[SimNode]:
         return [n for n in self.nodes
-                if not n.draining and n.available_at <= now]
+                if not n.draining and not n.failed
+                and n.available_at <= now]
+
+    @property
+    def _retry_policy(self):
+        return self.recovery.retry if self.recovery is not None else None
+
+    def _work_remains(self) -> bool:
+        """Undone requests that are still recoverable (lost requests
+        never finish -- they must not keep periodic ticks alive)."""
+        return any(not rec.done and rec.req.uid not in self._lost_uids
+                   for rec in self.records)
 
     # -- event plumbing -------------------------------------------------
     def _push(self, t: float, kind: str, payload) -> None:
@@ -262,8 +326,21 @@ class FleetSim:
 
     # -- event handlers -------------------------------------------------
     def _on_arrive(self, rec: RequestRecord, now: float) -> None:
-        node = self.router.route_prefill(rec, self._routable(now), now)
+        if rec.t_prefill_start is not None or rec.done:
+            return    # a hedge copy (or earlier attempt) already took it
+        try:
+            node = self.router.route_prefill(rec, self._routable(now), now)
+        except AssertionError:
+            # no prefill-capable node survives right now (crashes):
+            # back off and retry instead of dying
+            self._retry(rec, now, "no_prefill_node")
+            return
         rec.prefill_node = node.node_id
+        pol = self._retry_policy
+        if (pol is not None and pol.hedge_after_s is not None
+                and rec.req.uid not in self._hedged):
+            self._hedged.add(rec.req.uid)
+            self._push(now + pol.hedge_after_s, "hedge", rec)
         if not node.prefill_busy and not node.prefill_queue:
             self._start_prefill(node, rec, now)
         else:
@@ -271,6 +348,7 @@ class FleetSim:
 
     def _start_prefill(self, node: SimNode, rec: RequestRecord,
                        now: float) -> None:
+        rec.prefill_node = node.node_id   # a hedge may win on a peer
         rec.t_prefill_start = now
         done_t = node.start_prefill(rec, now)
         self.tracer.add_span("sim.prefill", now, done_t,
@@ -278,12 +356,94 @@ class FleetSim:
                              prompt_len=rec.req.prompt_len)
         self._push(done_t, "prefill_done", (node, rec))
 
+    def _prefill_claimable(self, node: SimNode, rec: RequestRecord) -> bool:
+        """May ``node`` start this queued record?  Stale entries -- an
+        attempt that was retried elsewhere, a hedge whose twin already
+        started, a finished request -- are skipped at pop time."""
+        if rec.t_prefill_start is not None or rec.done:
+            return False
+        return (rec.prefill_node == node.node_id
+                or self._hedge_nodes.get(rec.req.uid) == node.node_id)
+
+    def _on_hedge(self, rec: RequestRecord, now: float) -> None:
+        """Tail-latency hedge: the request is still QUEUED after
+        ``hedge_after_s`` -- launch a duplicate on another board.  First
+        to start prefill wins; the loser is skipped at pop time."""
+        if rec.t_prefill_start is not None or rec.done \
+                or rec.req.uid in self._lost_uids:
+            return
+        cands = [n for n in self._routable(now)
+                 if n.node_id != rec.prefill_node]
+        try:
+            node = self.router.route_prefill(rec, cands, now)
+        except AssertionError:
+            return            # no second prefill-capable board exists
+        self._hedge_nodes[rec.req.uid] = node.node_id
+        self.hedges += 1
+        if self.injector is not None:
+            self.injector.count_hedge()
+        self.fault_events.append(
+            f"t={now:.2f}s uid={rec.req.uid} HEDGE -> {node.node_id}")
+        if not node.prefill_busy and not node.prefill_queue:
+            self._start_prefill(node, rec, now)
+        else:
+            node.prefill_queue.append(rec)
+
+    def _retry(self, rec: RequestRecord, now: float, reason: str) -> None:
+        """Request-layer retry: wipe the attempt's timeline and re-enter
+        through arrival after a capped exponential backoff.  Arrival
+        time is NOT reset, so TTFT/deadline pay for the fault.  With no
+        RecoveryPolicy (or an exhausted one) the request is LOST."""
+        uid = rec.req.uid
+        if uid in self._lost_uids or rec.done:
+            return
+        pol = self._retry_policy
+        attempt = self._attempts.get(uid, 0) + 1
+        if pol is None or not pol.allows(attempt,
+                                         now - rec.req.arrival_s):
+            self._lost_uids.add(uid)
+            self.requests_lost += 1
+            if self.injector is not None:
+                self.injector.count_lost()
+            self.fault_events.append(
+                f"t={now:.2f}s uid={uid} LOST ({reason}, "
+                f"attempt={attempt})")
+            self.tracer.add_instant("sim.request_lost", now,
+                                    track="fleet", uid=uid, reason=reason)
+            return
+        self._attempts[uid] = attempt
+        self.retries += 1
+        if self.injector is not None:
+            self.injector.count_retry()
+        rec.prefill_node = None
+        rec.decode_node = None
+        rec.t_prefill_start = None
+        rec.t_prefill_done = None
+        rec.t_decode_enter = None
+        rec.t_first_token = None
+        self._hedge_nodes.pop(uid, None)
+        delay = pol.backoff_s(attempt)
+        self.fault_events.append(
+            f"t={now:.2f}s uid={uid} RETRY#{attempt} ({reason}) "
+            f"backoff={delay * 1e3:.0f}ms")
+        self._push(now + delay, "arrive", rec)
+
     def _on_prefill_done(self, node: SimNode, rec: RequestRecord,
                          now: float) -> None:
+        if node.failed:
+            return   # board died mid-prefill; the crash already retried
         rec.t_prefill_done = now
         node.prefill_active = None
         mid = getattr(rec.req, "model_id", None)
-        dst = self.router.route_decode(rec, node, self._routable(now), now)
+        try:
+            dst = self.router.route_decode(rec, node, self._routable(now),
+                                           now)
+        except AssertionError:
+            # every decode-capable board is dead: the prefill output has
+            # nowhere to go -- back off and retry (or report LOST)
+            self._retry(rec, now, "no_decode_node")
+            self._on_prefill_free(node, now)
+            return
         rec.decode_node = dst.node_id
         plen = rec.req.prompt_len
         if dst is node:
@@ -302,15 +462,26 @@ class FleetSim:
             self._on_prefill_free(node, now)
 
     def _on_prefill_free(self, node: SimNode, now: float) -> None:
+        if node.failed:
+            return
         node.prefill_busy = False
-        if node.prefill_queue:
-            self._start_prefill(node, node.prefill_queue.popleft(), now)
+        while node.prefill_queue:
+            rec = node.prefill_queue.popleft()
+            if not self._prefill_claimable(node, rec):
+                continue          # stale retry copy / lost hedge twin
+            self._start_prefill(node, rec, now)
+            break
         self._maybe_reap(node, now)
 
     def _on_decode_enter(self, node: SimNode, rec: RequestRecord,
                          now: float, pinned: bool = False) -> None:
         node.inbound_inflight -= 1
         mid = getattr(rec.req, "model_id", None)
+        if node.failed:
+            # the KV (or the swap) was in flight TO a board that died:
+            # the prefill output is gone, recompute from the prompt
+            self._retry(rec, now, "crash_inflight")
+            return
         if pinned:
             node.unpin_model(mid)
         if node.models is not None and mid is not None:
@@ -353,9 +524,47 @@ class FleetSim:
         if version != node.decode_version or node not in self.nodes:
             return                          # stale membership snapshot
         self._finish(node, node.decode_advance(now), now)
+        if self.straggler_monitor is not None:
+            self._observe_decode(node)
         self._maybe_preempt(node, now)
         self._schedule_decode(node, now)
         self._maybe_reap(node, now)
+
+    def _observe_decode(self, node: SimNode) -> None:
+        """Feed the straggler monitor one per-token decode-time sample
+        for ``node``, on the SIM clock (the monitor's injected clock
+        reads ``self._now``) -- a derated board's seconds-per-token EWMA
+        drifts above the fleet median and gets flagged, deterministically."""
+        mon = self.straggler_monitor
+        t = mon.clock()
+        host = self._host_idx.get(node.node_id)
+        if host is None:
+            host = mon.add_host()
+            self._host_idx[node.node_id] = host
+            self._host_ids.append(node.node_id)
+        if not node.decode_active:
+            # going idle: drop the baseline, or the next busy window's
+            # sample would charge the idle gap as decode time
+            self._obs_last.pop(node.node_id, None)
+            return
+        last = self._obs_last.get(node.node_id)
+        self._obs_last[node.node_id] = (t, node.tokens_decoded)
+        if last is None:
+            return
+        t0, tok0 = last
+        dtok = node.tokens_decoded - tok0
+        if t <= t0 or dtok <= 0:
+            return
+        mon.record(host, (t - t0) / dtok)
+        for idx in mon.stragglers():
+            nid = self._host_ids[idx]
+            if nid not in self._flagged:
+                self._flagged.add(nid)
+                self.derate_detected.append(
+                    f"t={t:.2f}s STRAGGLER {nid} "
+                    f"ewma={mon.ewma[idx]:.4g}s/tok")
+                self.tracer.add_instant("sim.straggler_detected", t,
+                                        track=nid)
 
     # -- preemption & KV-page migration --------------------------------
     def _movable(self, node: SimNode) -> List:
@@ -445,6 +654,11 @@ class FleetSim:
                           n_pg: int, now: float) -> None:
         dst.inbound_inflight -= 1
         dst.inbound_pages -= n_pg      # reservation becomes occupancy
+        if dst.failed:
+            # pages were in flight TO a board that died: the KV is gone,
+            # recompute from the prompt on whatever survives
+            self._retry(rec, now, "crash_inflight")
+            return
         dst.pages_migrated_in += n_pg
         mid = getattr(slot, "model_id", None)
         if dst.models is not None and mid is not None:
@@ -471,11 +685,176 @@ class FleetSim:
                                      uid=slot.uid,
                                      gen_len=rec.req.gen_len)
 
+    # -- fault injection & recovery ------------------------------------
+    def _on_fault(self, ev: FaultEvent, now: float) -> None:
+        node = self.injector.resolve(ev, self.nodes)
+        if node is None:
+            return                     # everything already dead
+        self.injector.count(ev.kind)
+        if ev.kind == "crash":
+            self._crash_node(node, now)
+            return
+        # derate / link / transient all mutate live node state: settle
+        # the decode integral first so past progress is priced at the
+        # old rate, then bump the version so stale events are dropped
+        self._finish(node, node.decode_advance(now), now)
+        node.decode_version += 1
+        if ev.kind == "derate":
+            node.derate = ev.factor
+            self.derates += 1
+            self.fault_events.append(
+                f"t={now:.2f}s {node.node_id} DERATE x{ev.factor:g}"
+                + (f" for {ev.duration_s:.2f}s" if ev.duration_s else ""))
+            self.tracer.add_span("sim.fault.derate", now,
+                                 now + (ev.duration_s or 0.0),
+                                 track=node.node_id, factor=ev.factor)
+        elif ev.kind == "link":
+            node.link_derate = ev.factor
+            self.link_faults += 1
+            self.fault_events.append(
+                f"t={now:.2f}s {node.node_id} LINK x{ev.factor:g}"
+                + (f" for {ev.duration_s:.2f}s" if ev.duration_s else ""))
+            self.tracer.add_span("sim.fault.link", now,
+                                 now + (ev.duration_s or 0.0),
+                                 track=f"{node.node_id}/link",
+                                 factor=ev.factor)
+        elif ev.kind == "transient":
+            # a dispatch hiccup: the board produces nothing for the
+            # stall window, then resumes exactly where it was
+            node.stall_until = max(node.stall_until,
+                                   now + (ev.duration_s or 0.0))
+            self.transients += 1
+            self.fault_events.append(
+                f"t={now:.2f}s {node.node_id} STALL "
+                f"{(ev.duration_s or 0.0) * 1e3:.0f}ms")
+            self.tracer.add_span("sim.fault.transient", now,
+                                 now + (ev.duration_s or 0.0),
+                                 track=node.node_id)
+        if ev.kind in ("derate", "link") and ev.duration_s is not None:
+            self._push(now + ev.duration_s, "fault_clear",
+                       (ev.kind, node))
+        self._schedule_decode(node, now)
+
+    def _on_fault_clear(self, kind: str, node: SimNode,
+                        now: float) -> None:
+        if node.failed or node not in self.nodes:
+            return
+        self._finish(node, node.decode_advance(now), now)
+        node.decode_version += 1
+        if kind == "derate":
+            node.derate = 1.0
+        elif kind == "link":
+            node.link_derate = 1.0
+        self.fault_events.append(
+            f"t={now:.2f}s {node.node_id} CLEAR {kind}")
+        self._schedule_decode(node, now)
+        self._maybe_reap(node, now)
+
+    def _crash_node(self, node: SimNode, now: float) -> None:
+        """Fail-stop: settle decode progress, mark the board dead, and
+        recover its live work -- checkpointed lanes migrate their pages
+        (replaying only tokens since the last checkpoint tick), the rest
+        retry from the prompt.  Uptime/energy accounting stops here."""
+        self._finish(node, node.decode_advance(now), now)
+        node.failed = True
+        node.draining = True
+        node.decode_version += 1
+        self.crashes += 1
+        self.fault_events.append(f"t={now:.2f}s {node.node_id} CRASH")
+        self.tracer.add_instant("sim.fault.crash", now,
+                                track=node.node_id)
+        if self.straggler_monitor is not None:
+            host = self._host_idx.get(node.node_id)
+            if host is not None:        # dead host must not skew the median
+                self.straggler_monitor.reset(host)
+                self._obs_last.pop(node.node_id, None)
+        if node in self.nodes:          # stop routing + billing now
+            self.nodes.remove(node)
+            self.retired.append(node)
+            self._retired_at[node.node_id] = now
+        for slot in sorted(node.decode_active.values(),
+                           key=lambda s: s.uid):
+            rec = self._slot_rec.pop((node.node_id, slot.uid))
+            self._recover_slot(node, slot, rec, now)
+        node.decode_active.clear()
+        for slot in list(node.decode_queue):
+            rec = self._slot_rec.pop((node.node_id, slot.uid))
+            self._retry(rec, now, "crash")
+        node.decode_queue.clear()
+        if node.prefill_active is not None:
+            self._retry(node.prefill_active, now, "crash")
+            node.prefill_active = None
+        node.prefill_busy = False
+        for rec in list(node.prefill_queue):
+            if self._prefill_claimable(node, rec):
+                self._retry(rec, now, "crash")
+        node.prefill_queue.clear()
+
+    def _recover_slot(self, node: SimNode, slot, rec: RequestRecord,
+                      now: float) -> None:
+        """One live lane of a crashed board: roll back to the last
+        checkpoint tick and re-place it like a migration (the checkpoint
+        lives host-side, so only the DESTINATION link is paid)."""
+        ckpt = slot.ckpt_tokens if self.recovery is not None else None
+        if ckpt is None:
+            self.replayed_from_prompt += 1
+            self._retry(rec, now, "crash_no_checkpoint")
+            return
+        slot.tokens_done = float(min(ckpt, slot.gen_len))
+        if slot.tokens_done < 1.0:
+            slot.t_first_token = None
+        dst = self.router.route_migration(slot, node,
+                                          self._routable(now), now)
+        if dst is None:
+            self.replayed_from_prompt += 1
+            self._retry(rec, now, "crash_no_destination")
+            return
+        ctx = slot.prompt_len + int(slot.tokens_done)
+        n_pg = node.migration_pages(ctx)
+        transfer_s = dst.kv_page_transfer_s(n_pg)
+        mid = getattr(slot, "model_id", None)
+        if dst.models is not None and mid is not None:
+            transfer_s += dst.swap_in(mid, now)
+            dst.pin_model(mid)
+        rec.preemptions += 1
+        self._migrations[slot.uid] = self._migrations.get(slot.uid, 0) + 1
+        self.recovered_lanes += 1
+        dst.inbound_inflight += 1
+        dst.inbound_pages += n_pg
+        self.tracer.add_span("sim.recover", now, now + transfer_s,
+                             track=f"{dst.node_id}/link", uid=slot.uid,
+                             pages=n_pg, src=node.node_id)
+        self._push(now + transfer_s, "migrate_enter",
+                   (dst, slot, rec, n_pg))
+        self.fault_events.append(
+            f"t={now:.2f}s uid={slot.uid} RECOVER {node.node_id} -> "
+            f"{dst.node_id} ckpt_tokens={int(slot.tokens_done)} "
+            f"pages={n_pg}")
+
+    def _on_checkpoint(self, now: float) -> None:
+        """Periodic fleet-wide checkpoint tick: every live decode slot
+        snapshots its progress (``ckpt_tokens``); a later crash rolls
+        the slot back here instead of to the prompt."""
+        for node in list(self.nodes):
+            if node.failed:
+                continue
+            finished = node.decode_advance(now)
+            if finished:
+                self._finish(node, finished, now)
+                self._schedule_decode(node, now)
+                self._maybe_reap(node, now)
+            for slot in node.decode_active.values():
+                slot.ckpt_tokens = int(slot.tokens_done)
+        self.checkpoints += 1
+        if self._work_remains():
+            self._push(now + self.recovery.checkpoint_interval_s,
+                       "checkpoint", None)
+
     def _on_autoscale(self, now: float) -> None:
         if self.autoscaler is None:
             return
         self.scale_events.extend(self.autoscaler.tick(self, now))
-        if any(not rec.done for rec in self.records):
+        if self._work_remains():
             self._push(now + self.autoscaler.interval_s, "autoscale", None)
 
     # -- main loop ------------------------------------------------------
@@ -484,9 +863,16 @@ class FleetSim:
             self._push(rec.req.arrival_s, "arrive", rec)
         if self.autoscaler is not None:
             self._push(self.autoscaler.interval_s, "autoscale", None)
+        if self.injector is not None:
+            for ev in self.injector.plan.sim_events():
+                self._push(ev.at_s, "fault", ev)
+        if self.recovery is not None:
+            self._push(self.recovery.checkpoint_interval_s,
+                       "checkpoint", None)
         now = 0.0
         while self._heap:
             now, _, kind, payload = heapq.heappop(self._heap)
+            self._now = now            # the straggler monitor's clock
             if kind == "arrive":
                 self._on_arrive(payload, now)
             elif kind == "prefill_done":
@@ -503,6 +889,14 @@ class FleetSim:
                                        payload[3], now)
             elif kind == "autoscale":
                 self._on_autoscale(now)
+            elif kind == "fault":
+                self._on_fault(payload, now)
+            elif kind == "fault_clear":
+                self._on_fault_clear(payload[0], payload[1], now)
+            elif kind == "checkpoint":
+                self._on_checkpoint(now)
+            elif kind == "hedge":
+                self._on_hedge(payload, now)
         return self._report(makespan=now)
 
     # -- metrics --------------------------------------------------------
@@ -580,7 +974,16 @@ class FleetSim:
             per_model=tuple(per_model),
             scale_events=tuple(self.scale_events),
             preempt_events=tuple(self.preempt_events),
-            swap_events=tuple(self.swap_events))
+            swap_events=tuple(self.swap_events),
+            crashes=self.crashes, derates=self.derates,
+            link_faults=self.link_faults, transients=self.transients,
+            retries=self.retries, hedges=self.hedges,
+            requests_lost=self.requests_lost,
+            recovered_lanes=self.recovered_lanes,
+            replayed_from_prompt=self.replayed_from_prompt,
+            checkpoints=self.checkpoints,
+            fault_events=tuple(self.fault_events),
+            derate_detected=tuple(self.derate_detected))
         # publish the aggregate report under the fleet.* namespace so
         # the sim's numbers sit next to the engines' in one exposition
         for key, val in report.metrics().items():

@@ -51,6 +51,20 @@ class EventLog:
             return list(self._events)
         return [e for e in self._events if e.name == name]
 
+    def records_prefix(self, prefix: str) -> List[Event]:
+        """Events whose name starts with a dotted ``prefix`` -- e.g.
+        ``records_prefix("degrade")`` collects every ladder transition."""
+        dotted = prefix if prefix.endswith(".") else prefix + "."
+        return [e for e in self._events
+                if e.name == prefix or e.name.startswith(dotted)]
+
+    def names(self) -> List[str]:
+        """Distinct event names seen, in first-emission order."""
+        seen: Dict[str, None] = {}
+        for e in self._events:
+            seen.setdefault(e.name)
+        return list(seen)
+
     def __len__(self) -> int:
         return len(self._events)
 

@@ -175,6 +175,18 @@ class MetricsRegistry:
     def names(self) -> List[str]:
         return sorted(self._metrics)
 
+    def sum_prefix(self, prefix: str) -> float:
+        """Sum of every counter/gauge value under a dotted ``prefix``
+        (e.g. ``fleet.faults`` aggregates all fault counters) --
+        histograms are skipped, they have no single value."""
+        dotted = prefix if prefix.endswith(".") else prefix + "."
+        total = 0.0
+        for name in self.names():
+            if name.startswith(dotted) and not isinstance(
+                    self._metrics[name], Histogram):
+                total += float(self._metrics[name].value)
+        return total
+
     def __contains__(self, name: str) -> bool:
         return name in self._metrics
 

@@ -119,6 +119,19 @@ class SpanTracer:
         self.instants.append(ev)
         return ev
 
+    def add_instant(self, name: str, t: float, track: str = "main",
+                    **args) -> Optional[Instant]:
+        """Record an instant at an explicit timestamp (the sim-clock
+        path -- :meth:`instant` reads the host clock)."""
+        if not self.enabled:
+            return None
+        ev = Instant(name=name, track=track, t=t, args=args)
+        self.instants.append(ev)
+        return ev
+
+    def instants_named(self, name: str) -> List[Instant]:
+        return [e for e in self.instants if e.name == name]
+
     def _observe(self, sp: Span) -> None:
         if self.registry is not None:
             self.registry.histogram(

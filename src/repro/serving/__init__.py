@@ -11,6 +11,8 @@ from repro.serving.phase_model import (Workload, capex_usd_per_hour,
                                        energy_usd_per_hour,
                                        kv_handoff_seconds,
                                        link_transfer_seconds, phase_tps)
+from repro.serving.resilience import (AdmissionRejected, DegradationLadder,
+                                      RetryPolicy)
 
 __all__ = ["FleetPlan", "LaneCheckpoint", "PagePool", "PoolAssignment",
            "Workload",
@@ -20,4 +22,5 @@ __all__ = ["FleetPlan", "LaneCheckpoint", "PagePool", "PoolAssignment",
            "dequantize_params", "quantize_params", "phase_tps",
            "kv_handoff_seconds", "link_transfer_seconds",
            "effective_prefill_tps",
-           "capex_usd_per_hour", "energy_usd_per_hour"]
+           "capex_usd_per_hour", "energy_usd_per_hour",
+           "AdmissionRejected", "DegradationLadder", "RetryPolicy"]

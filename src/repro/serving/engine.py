@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -56,6 +57,21 @@ from repro.models.transformer import (init_cache, init_paged_cache,
 from repro.obs.metrics import MetricsRegistry, StatsView
 from repro.obs.trace import SpanTracer
 from repro.quant.quantize import QTensor, dequantize, quantize
+from repro.serving.resilience import AdmissionRejected, DegradationLadder
+
+
+def __getattr__(name):
+    # legacy alias for the bare-RuntimeError admission failure run()
+    # used to raise; kept importable one release as a shim
+    if name == "AdmissionError":
+        import warnings
+        warnings.warn(
+            "repro.serving.engine.AdmissionError is deprecated; catch "
+            "repro.serving.AdmissionRejected (a RuntimeError subclass, "
+            "so existing handlers keep working) instead",
+            DeprecationWarning, stacklevel=2)
+        return AdmissionRejected
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ----------------------------------------------------------------------
@@ -253,6 +269,10 @@ class Request:
     #: which registered model serves this request (multi-model engines;
     #: a single-model ServeEngine ignores it)
     model_id: Optional[str] = None
+    #: degradation ladder victim ordering: LOWER priority is evicted
+    #: first when the engine sheds load (ties broken by highest lane
+    #: context, i.e. the most page-hungry request goes first)
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -352,6 +372,11 @@ class ServeEngine:
         "preemptions": "preempt.evictions",
         "restores": "preempt.restores",
         "pages_migrated": "preempt.pages_migrated",
+        "retry_attempts": "retry.attempts",
+        "retry_hedges": "retry.hedges",
+        "admit_rejected": "admit.rejected",
+        "degrade_transitions": "degrade.transitions",
+        "degrade_sheds": "degrade.sheds",
     }
 
     def __init__(self, cfg: ModelConfig, params, n_lanes: int = 4,
@@ -361,8 +386,14 @@ class ServeEngine:
                  page_size: int = 16, n_pages: Optional[int] = None,
                  tracer: Optional[SpanTracer] = None,
                  registry: Optional[MetricsRegistry] = None,
-                 name: str = "serve"):
+                 name: str = "serve",
+                 ladder: Optional[DegradationLadder] = None):
         self.cfg = cfg
+        # graceful-degradation ladder (None = legacy behavior: run()
+        # never sheds, and only raises in the never-admissible case)
+        self.ladder = ladder
+        if ladder is not None:
+            ladder.name = name
         self.model = build_model(cfg)
         self.params = params
         self.n_lanes = n_lanes
@@ -984,33 +1015,104 @@ class ServeEngine:
         """Single-token compatibility wrapper; returns {uid: token}."""
         return {uid: seq[0] for uid, seq in self.decode_n(1).items() if seq}
 
+    def _never_admissible(self, head: Request) -> AdmissionRejected:
+        """Structured terminal refusal: the head request was refused with
+        NOTHING in flight, so no retirement can ever free a lane or a
+        page.  ``retry_after_s`` is None -- retrying cannot help."""
+        self.stats["admit_rejected"] += 1
+        return AdmissionRejected(
+            uid=head.uid, reason="never_admissible", retry_after_s=None,
+            need_pages=(self.admission_pages(head) if self.paged else None),
+            pool_pages=(self.pool.n_pages if self.paged else None),
+            n_lanes=self.n_lanes)
+
+    def _shed_victim(self) -> Optional[int]:
+        """Lane the degradation ladder evicts next: lowest request
+        priority first, then largest live context (most pages back)."""
+        live = self.live_lanes()
+        if len(live) < 2:
+            return None          # never shed the last live lane
+        return min(live, key=lambda i: (self.lane_req[i].priority,
+                                        -self.lane_context(i), i))
+
     def run(self, requests: List[Request],
             dispatch_n: Optional[int] = None) -> List[Request]:
         """Serve a workload to completion with continuous admission.
 
         Retirement rides the done-flags returned by the batched dispatch
         (no per-step completion scan over the request list).
+
+        With a :class:`DegradationLadder` attached, sustained page
+        pressure or repeated page-blocked admissions escalate load
+        shedding: the dispatch knob shrinks, new admissions are deferred
+        (backpressure), and at the top rung the lowest-priority lane is
+        evicted to a checkpoint and re-admitted once pressure clears.
+
+        Raises :class:`AdmissionRejected` (a ``RuntimeError``) when the
+        head request can never be admitted and nothing is in flight.
         """
+        ladder = self.ladder
         pending = list(requests)
-        while pending or any(r is not None for r in self.lane_req):
+        shed: deque = deque()        # evicted-by-ladder checkpoints
+        while pending or shed or any(r is not None for r in self.lane_req):
+            # ladder-evicted checkpoints re-enter first (their tokens
+            # are paid for; finishing them frees pages fastest) -- but
+            # not while the ladder is still at the evict rung with live
+            # work, or restore/evict would thrash
+            while shed and self.free_lanes():
+                if ladder is not None and ladder.should_evict \
+                        and self.live_lanes():
+                    break
+                if not self.restore(shed[0]):
+                    break
+                shed.popleft()
             while pending and self.free_lanes():
+                if ladder is not None and ladder.refusing_admissions \
+                        and (self.live_lanes() or shed):
+                    # backpressure rung: finish in-flight work before
+                    # taking on new requests
+                    break
                 if not self.admit(pending[0]):
                     # paged: a lane is free but the pages are not --
                     # wait for retirements to refill the pool (a single
                     # request always fits an empty engine, see __init__)
+                    if ladder is not None and self.paged:
+                        ladder.note_admission_blocked(pending[0].uid)
+                        self.stats["degrade_transitions"] = \
+                            len(ladder.transitions)
                     break
+                if ladder is not None:
+                    ladder.note_ok()
                 pending.pop(0)
             if not any(r is not None for r in self.lane_req):
-                # the head request was refused with NOTHING in flight:
-                # no retirement can ever free a lane or a page, so the
-                # loop would spin on no-op dispatches forever.  Fail
-                # loudly instead of livelocking.
-                head = pending[0]
-                raise RuntimeError(
-                    f"request uid={head.uid} can never be admitted "
-                    f"(n_lanes={self.n_lanes}, "
-                    + (f"need={self.admission_pages(head)} pages of "
-                       f"{self.pool.n_pages}" if self.paged else "dense")
-                    + ") and no request is in flight to retire")
-            self.decode_n(dispatch_n)
+                if shed:
+                    # every live lane was shed and none can restore:
+                    # force the head checkpoint back in (it fit before,
+                    # so it fits an empty engine)
+                    assert self.restore(shed[0]), \
+                        "shed checkpoint no longer fits an empty engine"
+                    shed.popleft()
+                    continue
+                raise self._never_admissible(pending[0])
+            n = dispatch_n if dispatch_n is not None else self.dispatch_n
+            if ladder is not None:
+                n = ladder.dispatch_n(n)
+            self.decode_n(n)
+            if ladder is not None:
+                if self.paged:
+                    pool = self.pool
+                    ladder.note_pressure(
+                        (pool.n_pages - pool.available()) / pool.n_pages)
+                else:
+                    ladder.note_ok()
+                self.stats["degrade_transitions"] = len(ladder.transitions)
+                if ladder.should_evict and self.paged:
+                    victim = self._shed_victim()
+                    if victim is not None:
+                        uid = self.lane_req[victim].uid
+                        shed.append(self.evict(victim))
+                        self.stats["degrade_sheds"] += 1
+                        self.tracer.instant(
+                            "degrade.shed", track=self.lane_track(victim),
+                            uid=uid, level=ladder.level_name)
         return requests

@@ -30,13 +30,56 @@ import numpy as np
 # ----------------------------------------------------------------------
 
 class StragglerMonitor:
+    """Per-host EWMA of step times; flags hosts slower than ``threshold``
+    x the fleet median.
+
+    The clock is INJECTABLE (``clock``, defaults to ``time.monotonic``):
+    under the fleet simulator the monitor runs on the sim clock, so
+    derate detection is deterministic and testable.  Interval timing is
+    explicit -- ``begin(host)`` marks the start of a host's step,
+    ``end(host)`` reads the clock, records the elapsed interval and
+    returns it; ``record`` remains for callers that measure externally.
+    """
+
     def __init__(self, n_hosts: int, alpha: float = 0.2,
-                 threshold: float = 1.5, warmup: int = 3):
+                 threshold: float = 1.5, warmup: int = 3,
+                 clock: Callable[[], float] = time.monotonic):
         self.ewma = np.zeros(n_hosts)
         self.count = np.zeros(n_hosts, dtype=int)
         self.alpha = alpha
         self.threshold = threshold
         self.warmup = warmup
+        self.clock = clock
+        self._open: Dict[int, float] = {}
+
+    @property
+    def n_hosts(self) -> int:
+        return int(self.ewma.shape[0])
+
+    def add_host(self) -> int:
+        """Grow the host set by one (elastic fleets); returns the new
+        host index."""
+        self.ewma = np.append(self.ewma, 0.0)
+        self.count = np.append(self.count, 0)
+        return self.n_hosts - 1
+
+    def reset(self, host: int) -> None:
+        """Forget a host's history: a crashed/replaced host must neither
+        be flagged on stale data nor skew the fleet median (it re-warms
+        from scratch if it comes back)."""
+        self.ewma[host] = 0.0
+        self.count[host] = 0
+        self._open.pop(host, None)
+
+    def begin(self, host: int) -> None:
+        """Mark the start of ``host``'s step on the injected clock."""
+        self._open[host] = self.clock()
+
+    def end(self, host: int) -> float:
+        """Close the open interval for ``host``, record it, return it."""
+        dt = self.clock() - self._open.pop(host)
+        self.record(host, dt)
+        return dt
 
     def record(self, host: int, step_seconds: float) -> None:
         if self.count[host] == 0:
@@ -51,6 +94,8 @@ class StragglerMonitor:
         if not np.any(ready):
             return []
         med = float(np.median(self.ewma[ready]))
+        if med <= 0.0:
+            return []
         return [int(i) for i in np.nonzero(
             ready & (self.ewma > self.threshold * med))[0]]
 

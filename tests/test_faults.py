@@ -1,0 +1,571 @@
+"""Fault-tolerant serving: injection, recovery, retry/hedging, shedding.
+
+Four layers of invariants around the contract "a crash costs time,
+never tokens":
+
+* plan/policy -- :class:`FaultPlan` is seeded, validated and immutable;
+  :class:`RetryPolicy` backs off with a cap and honors deadlines;
+  :class:`~repro.train.fault_tolerance.StragglerMonitor` flags a derated
+  host on an injected clock (and why that needs >= 3 hosts);
+* simulator -- a mid-trace crash with a :class:`RecoveryPolicy` loses
+  nothing (checkpointed lanes migrate, the rest replay), without one the
+  crash visibly loses requests; faulted runs are bit-deterministic and
+  their counters land in the ``fleet.faults.*`` registry namespace;
+* engine -- :func:`validate_recovery_exactness` pins that lanes resumed
+  from checkpoints AND lanes replayed from the prompt reproduce the
+  undisturbed greedy streams token for token (hypothesis drives random
+  crash/checkpoint/transient interleavings through the same oracle);
+* degradation -- the engine ladder escalates shed-batch -> backpressure
+  -> evict in order, de-escalates on cooldown, and never changes the
+  token streams; admission failures surface as structured
+  :class:`AdmissionRejected` (with the legacy ``RuntimeError`` contract
+  and the deprecated ``AdmissionError`` alias intact).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.fleet import (FaultEvent, FaultInjector, FaultPlan, FleetSim,
+                         LengthDist, NodeSpec, RecoveryPolicy, RetryPolicy,
+                         poisson_trace)
+from repro.serving.resilience import (DEGRADE_LEVELS, AdmissionRejected,
+                                      DegradationLadder)
+from repro.train.fault_tolerance import StragglerMonitor
+
+pytestmark = pytest.mark.faults
+
+
+# ----------------------------------------------------------------------
+# plan / policy units (no jax, no sim)
+# ----------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultEvent("meltdown", at_s=1.0)
+        with pytest.raises(ValueError, match="exactly one"):
+            FaultEvent("crash", at_s=1.0, at_dispatch=3)
+        with pytest.raises(ValueError, match="exactly one"):
+            FaultEvent("crash")
+        with pytest.raises(ValueError, match="factor"):
+            FaultEvent("derate", at_s=1.0, factor=0.5)
+        with pytest.raises(ValueError, match="duration_s"):
+            FaultEvent("transient", at_s=1.0)
+        # dispatch-indexed transients carry no duration: that is legal
+        FaultEvent("transient", at_dispatch=4)
+
+    def test_seeded_deterministic(self):
+        a = FaultPlan.seeded(3, n_nodes=4, horizon_s=60.0)
+        b = FaultPlan.seeded(3, n_nodes=4, horizon_s=60.0)
+        c = FaultPlan.seeded(4, n_nodes=4, horizon_s=60.0)
+        assert a == b
+        assert a != c
+        kinds = [e.kind for e in a.events]
+        for k in ("crash", "derate", "link", "transient"):
+            assert k in kinds
+        # crashes land mid-trace by construction
+        for e in a.events:
+            if e.kind == "crash":
+                assert 0.25 * 60 <= e.at_s <= 0.75 * 60
+
+    def test_merge_and_views(self):
+        plan = (FaultPlan(events=(
+            FaultEvent("crash", node=1, at_dispatch=6),
+            FaultEvent("transient", at_dispatch=2),
+            FaultEvent("transient", at_dispatch=9),
+        )) + FaultPlan.flap("n0", t0=2.0, period_s=1.0, n_flaps=2))
+        assert plan.crash_dispatch() == 6
+        assert plan.transient_dispatches() == [2, 9]
+        sim_evs = plan.sim_events()
+        assert [e.at_s for e in sim_evs] == [2.0, 3.0]
+        assert all(e.kind == "link" for e in sim_evs)
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            plan.events = ()
+
+    def test_injector_resolution(self):
+        @dataclasses.dataclass
+        class N:
+            node_id: str
+            failed: bool = False
+
+        nodes = [N("b"), N("a"), N("c", failed=True)]
+        inj = FaultInjector(FaultPlan())
+        # ints index the ALIVE set sorted by node_id, modulo its size
+        assert inj.resolve(FaultEvent("crash", node=0, at_s=1.0),
+                           nodes).node_id == "a"
+        assert inj.resolve(FaultEvent("crash", node=3, at_s=1.0),
+                           nodes).node_id == "b"
+        assert inj.resolve(FaultEvent("crash", node="b", at_s=1.0),
+                           nodes).node_id == "b"
+        assert inj.resolve(FaultEvent("crash", node="c", at_s=1.0),
+                           nodes) is None          # failed: not a target
+        assert inj.resolve(FaultEvent("crash", node="zz", at_s=1.0),
+                           nodes) is None
+
+
+class TestRetryPolicy:
+    def test_backoff_caps(self):
+        pol = RetryPolicy(max_attempts=5, base_backoff_s=0.1,
+                          backoff_cap_s=0.5)
+        assert pol.backoff_s(1) == pytest.approx(0.1)
+        assert pol.backoff_s(2) == pytest.approx(0.2)
+        assert pol.backoff_s(3) == pytest.approx(0.4)
+        assert pol.backoff_s(4) == pytest.approx(0.5)   # capped
+        assert pol.backoff_s(10) == pytest.approx(0.5)
+
+    def test_allows(self):
+        pol = RetryPolicy(max_attempts=2, deadline_s=1.0)
+        assert pol.allows(1, waited_s=0.0)
+        assert pol.allows(2, waited_s=0.99)
+        assert not pol.allows(3, waited_s=0.0)      # attempts exhausted
+        assert not pol.allows(1, waited_s=1.0)      # deadline blown
+
+
+class TestStragglerMonitor:
+    def test_injected_clock_begin_end(self):
+        t = [0.0]
+        mon = StragglerMonitor(n_hosts=1, warmup=1, clock=lambda: t[0])
+        mon.begin(0)
+        t[0] = 2.5
+        assert mon.end(0) == pytest.approx(2.5)
+        assert mon.ewma[0] == pytest.approx(2.5)
+
+    def test_three_hosts_flag_two_cannot(self):
+        # with two hosts the median IS their mean: a host derated by 3x
+        # converges to exactly threshold x median and never crosses it.
+        # A third healthy host pins the median and detection works --
+        # the reason the bench/sim scenarios run >= 3 decode boards.
+        def feed(n_hosts, slow_host, rounds=12):
+            mon = StragglerMonitor(n_hosts=n_hosts, warmup=3)
+            for _ in range(rounds):
+                for h in range(n_hosts):
+                    mon.record(h, 0.3 if h == slow_host else 0.1)
+            return mon.stragglers()
+
+        assert feed(2, slow_host=1) == []
+        assert feed(3, slow_host=1) == [1]
+
+    def test_reset_forgets_history(self):
+        mon = StragglerMonitor(n_hosts=3, warmup=2)
+        for _ in range(4):
+            mon.record(0, 0.1)
+            mon.record(1, 0.1)
+            mon.record(2, 0.9)
+        assert mon.stragglers() == [2]
+        mon.reset(2)            # crashed host: stale EWMA must not flag
+        assert mon.stragglers() == []
+        assert mon.count[2] == 0
+
+
+class TestDegradationLadder:
+    def test_escalation_order_and_knobs(self):
+        ladder = DegradationLadder(page_pressure=0.9, trip_after=2,
+                                   cooldown=3)
+        assert ladder.level_name == "normal"
+        assert ladder.dispatch_n(8) == 8
+        path = []
+        for _ in range(6):
+            ladder.note_pressure(0.95)
+            path.append(ladder.level)
+        assert path == [0, 1, 1, 2, 2, 3]       # one rung per trip_after
+        assert ladder.level_name == "evict"
+        assert ladder.dispatch_n(8) == 1        # 8 >> 3
+        assert ladder.refusing_admissions and ladder.should_evict
+        assert ladder.retry_after_s(0.05) == pytest.approx(0.2)
+        # strikes do not escalate past the top rung
+        ladder.note_pressure(0.95)
+        ladder.note_pressure(0.95)
+        assert ladder.level == 3
+
+    def test_cooldown_deescalates_one_rung(self):
+        ladder = DegradationLadder(trip_after=1, cooldown=2)
+        ladder.note_admission_blocked(uid=7)
+        ladder.note_admission_blocked(uid=7)
+        assert ladder.level == 2
+        ladder.note_ok()
+        assert ladder.level == 2                # cooldown not met yet
+        ladder.note_ok()
+        assert ladder.level == 1
+        # a strike resets the clear streak
+        ladder.note_ok()
+        ladder.note_pressure(0.99)
+        ladder.note_ok()
+        assert ladder.level == 2
+
+    def test_transitions_logged_and_emitted(self):
+        from repro.obs.events import DEFAULT_LOG
+        before = len(DEFAULT_LOG.records("degrade.transition"))
+        ladder = DegradationLadder(trip_after=1, cooldown=1,
+                                   name="ladder-under-test")
+        ladder.note_pressure(1.0)
+        ladder.note_ok()
+        assert [(a, b) for a, b, _ in ladder.transitions] == [(0, 1), (1, 0)]
+        evs = [e for e in DEFAULT_LOG.records("degrade.transition")
+               if e.fields.get("engine") == "ladder-under-test"]
+        assert len(DEFAULT_LOG.records("degrade.transition")) == before + 2
+        assert [e.fields["to_level"] for e in evs] == ["shed_batch",
+                                                       "normal"]
+        assert all(e.fields["from_level"] in DEGRADE_LEVELS for e in evs)
+
+
+class TestAdmissionRejected:
+    def test_structured_fields_and_legacy_phrase(self):
+        err = AdmissionRejected(uid=9, reason="never_admissible",
+                                need_pages=12, pool_pages=8, n_lanes=2)
+        assert isinstance(err, RuntimeError)
+        assert "can never be admitted" in str(err)
+        assert (err.uid, err.reason) == (9, "never_admissible")
+        assert err.retry_after_s is None
+        back = AdmissionRejected(uid=3, reason="backpressure",
+                                 retry_after_s=0.2)
+        assert back.retry_after_s == pytest.approx(0.2)
+        assert "backpressure" in str(back)
+
+    def test_deprecated_alias(self):
+        import repro.serving.engine as engine_mod
+        with pytest.warns(DeprecationWarning, match="AdmissionError"):
+            alias = engine_mod.AdmissionError
+        assert alias is AdmissionRejected
+
+
+# ----------------------------------------------------------------------
+# simulator: crash recovery, derate detection, retry/hedging
+# ----------------------------------------------------------------------
+
+def _specs(n_decode=2, decode_lanes=4):
+    return [NodeSpec("a100-40g", 1, "prefill"),
+            NodeSpec("cmp-170hx-nofma", n_decode, "decode",
+                     decode_lanes=decode_lanes, kv_pool_pages=256,
+                     page_size=16)]
+
+
+def _trace(rate=4.0, dur=20.0, seed=0):
+    return poisson_trace(rate, dur, seed=seed,
+                         prompt=LengthDist(128, cv=0.3),
+                         gen=LengthDist(256, cv=0.5))
+
+
+CRASH_PLAN = FaultPlan(events=(
+    FaultEvent("crash", node="cmp-170hx-nofma/decode#1", at_s=8.0),))
+# tick well below the per-request decode time, so lanes live at the
+# crash have a checkpoint to resume from
+RECOVERY = RecoveryPolicy(checkpoint_interval_s=0.1,
+                          retry=RetryPolicy(max_attempts=4))
+
+
+class TestSimCrashRecovery:
+    def test_recovery_loses_nothing(self):
+        rep = FleetSim(_specs(), _trace(), faults=CRASH_PLAN,
+                       recovery=RECOVERY).run()
+        assert rep.crashes == 1
+        assert rep.recovered_lanes >= 1
+        assert rep.requests_lost == 0
+        assert rep.completed == rep.offered
+        assert rep.checkpoints > 0
+        assert any("CRASH" in line for line in rep.fault_events)
+        assert any("RECOVER" in line for line in rep.fault_events)
+
+    def test_no_recovery_loses_inflight_work(self):
+        rep = FleetSim(_specs(), _trace(), faults=CRASH_PLAN).run()
+        assert rep.crashes == 1
+        assert rep.recovered_lanes == 0
+        assert rep.requests_lost > 0
+        assert rep.completed + rep.requests_lost <= rep.offered
+
+    def test_faulted_run_is_deterministic(self):
+        mk = lambda: FleetSim(_specs(), _trace(), faults=CRASH_PLAN,
+                              recovery=RECOVERY).run()
+        assert mk() == mk()
+
+    def test_counters_land_in_registry(self):
+        from repro.obs import MetricsRegistry
+        registry = MetricsRegistry()
+        rep = FleetSim(_specs(), _trace(), faults=CRASH_PLAN,
+                       recovery=RECOVERY, registry=registry).run()
+        vals = registry.collect()
+        assert vals["fleet.faults.crashes"] == rep.crashes == 1
+        assert vals["fleet.faults.requests_lost"] == 0
+        assert vals["fleet.retry.attempts"] == rep.retries
+
+    def test_retry_exhaustion_marks_lost(self):
+        # the ONLY decode board dies: every in-flight and queued request
+        # retries with backoff until the policy gives up, then is LOST
+        plan = FaultPlan(events=(
+            FaultEvent("crash", node="cmp-170hx-nofma/decode#1",
+                       at_s=5.0),))
+        rep = FleetSim(_specs(n_decode=1), _trace(dur=15.0), faults=plan,
+                       recovery=RecoveryPolicy(
+                           checkpoint_interval_s=0.5,
+                           retry=RetryPolicy(max_attempts=2))).run()
+        assert rep.crashes == 1
+        assert rep.retries > 0
+        assert rep.requests_lost > 0
+        assert any("LOST" in line for line in rep.fault_events)
+
+
+class TestSimDerateAndLink:
+    def test_derate_dilates_decode_and_is_detected(self):
+        # 3 decode boards so the monitor's median is pinned by healthy
+        # hosts (see TestStragglerMonitor.test_three_hosts_flag_two_cannot)
+        specs = _specs(n_decode=3)
+        trace = _trace(rate=6.0, dur=20.0, seed=2)
+        plan = FaultPlan(events=(
+            FaultEvent("derate", node="cmp-170hx-nofma/decode#1",
+                       at_s=3.0, factor=3.0, duration_s=10.0),))
+        base = FleetSim(specs, trace).run()
+        rep = FleetSim(specs, trace, faults=plan,
+                       recovery=RECOVERY).run()
+        assert rep.derates == 1
+        assert rep.tpot_p99_s > base.tpot_p99_s
+        assert any("decode#1" in line for line in rep.derate_detected)
+        flagged = {line.split("STRAGGLER ")[1].split(" ")[0]
+                   for line in rep.derate_detected}
+        assert flagged == {"cmp-170hx-nofma/decode#1"}
+        # the derate window CLEARs and the sim still completes everything
+        assert any("CLEAR" in line for line in rep.fault_events)
+        assert rep.completed == rep.offered
+
+    def test_link_flap_counts_windows(self):
+        plan = FaultPlan.flap("a100-40g/prefill#0", t0=2.0, period_s=2.0,
+                              n_flaps=3, factor=4.0)
+        base = FleetSim(_specs(), _trace()).run()
+        rep = FleetSim(_specs(), _trace(), faults=plan,
+                       recovery=RECOVERY).run()
+        assert rep.link_faults == 3
+        assert rep.completed == rep.offered
+        assert rep.ttft_p99_s >= base.ttft_p99_s
+
+    def test_transient_stalls_node(self):
+        plan = FaultPlan(events=(
+            FaultEvent("transient", node="cmp-170hx-nofma/decode#1",
+                       at_s=4.0, duration_s=1.0),))
+        base = FleetSim(_specs(), _trace()).run()
+        rep = FleetSim(_specs(), _trace(), faults=plan,
+                       recovery=RECOVERY).run()
+        assert rep.transients == 1
+        assert rep.completed == rep.offered
+        assert rep.tpot_p99_s >= base.tpot_p99_s
+
+
+class TestSimHedging:
+    def test_hedge_fires_for_long_queued_requests(self):
+        # saturate ONE prefill board so arrivals queue well past the
+        # hedge trigger; duplicates launch on the second board and the
+        # first copy to start wins -- nothing is served twice
+        specs = [NodeSpec("a100-40g", 2, "prefill"),
+                 NodeSpec("cmp-170hx-nofma", 2, "decode",
+                          decode_lanes=4, kv_pool_pages=256,
+                          page_size=16)]
+        trace = poisson_trace(40.0, 5.0, seed=1,
+                              prompt=LengthDist(1024, cv=0.3),
+                              gen=LengthDist(64, cv=0.4))
+        rec_pol = RecoveryPolicy(
+            checkpoint_interval_s=1.0,
+            retry=RetryPolicy(max_attempts=3, hedge_after_s=0.2))
+        rep = FleetSim(specs, trace, faults=FaultPlan(),
+                       recovery=rec_pol).run()
+        assert rep.hedges > 0
+        assert rep.completed == rep.offered
+        assert rep.requests_lost == 0
+
+
+# ----------------------------------------------------------------------
+# engine: crash-recovery exactness, degradation ladder (jax)
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_model():
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("qwen2.5-1.5b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+ORACLE_TRACE_KW = dict(seed=3, prompt=LengthDist(12, cv=0.3),
+                       gen=LengthDist(14, cv=0.4))
+ORACLE_KW = dict(n_lanes=2, max_len=32, dispatch_n=4, page_size=8, seed=5)
+
+
+class TestRecoveryExactness:
+    def test_oracle_exercises_both_paths(self, small_model):
+        from repro.fleet import validate_recovery_exactness
+
+        cfg, params = small_model
+        trace = poisson_trace(2.0, 6.0, **ORACLE_TRACE_KW)
+        # crash at dispatch 10: on this trace one live lane has a
+        # checkpoint (resumes) and one does not (replays from prompt)
+        verdict = validate_recovery_exactness(
+            trace, cfg, params, crash_at_dispatch=10, checkpoint_every=3,
+            transient_dispatches=(2,), **ORACLE_KW)
+        assert verdict["resume_exact"], verdict["mismatches"]
+        assert verdict["replay_exact"], verdict["mismatches"]
+        assert verdict["counts_match"]
+        assert verdict["crashes"] == 1
+        assert verdict["recovered_lanes"] >= 1
+        assert verdict["replayed_from_prompt"] >= 1
+        assert verdict["retry_attempts"] > 0
+        assert verdict["checkpoints"] > 0
+
+    def test_replay_counts_retries_in_engine_stats(self, small_model):
+        from repro.fleet import run_trace_with_faults
+        from repro.fleet.workload import FleetRequest
+
+        cfg, params = small_model
+        trace = [FleetRequest(uid=i, arrival_s=0.1 * i, prompt_len=6 + i,
+                              gen_len=8) for i in range(4)]
+        out = run_trace_with_faults(trace, cfg, params,
+                                    crash_at_dispatch=4,
+                                    checkpoint_every=2,
+                                    transient_dispatches=(1,),
+                                    **ORACLE_KW)
+        # transient retry + one recovery admission per casualty, carried
+        # into the SURVIVING engine's counter (node0's died with it)
+        assert out.crashes == 1
+        assert out.transients == 1
+        assert out.retry_attempts >= 1 + len(out.checkpointed_uids
+                                             + out.replayed_uids)
+
+    def test_plan_drives_replay(self, small_model):
+        from repro.fleet import run_trace_with_faults
+        from repro.fleet.workload import FleetRequest
+
+        cfg, params = small_model
+        trace = [FleetRequest(uid=i, arrival_s=0.1 * i, prompt_len=6 + i,
+                              gen_len=8) for i in range(4)]
+        plan = FaultPlan(events=(
+            FaultEvent("transient", at_dispatch=1),
+            FaultEvent("crash", at_dispatch=4),))
+        via_plan = run_trace_with_faults(trace, cfg, params, plan=plan,
+                                         checkpoint_every=2, **ORACLE_KW)
+        via_knobs = run_trace_with_faults(trace, cfg, params,
+                                          crash_at_dispatch=4,
+                                          checkpoint_every=2,
+                                          transient_dispatches=(1,),
+                                          **ORACLE_KW)
+        assert via_plan == via_knobs
+
+
+class TestEngineLadder:
+    def test_ladder_sheds_without_changing_tokens(self, small_model):
+        from repro.serving import Request, ServeEngine
+
+        cfg, params = small_model
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+                   for _ in range(6)]
+
+        def reqs():
+            return [Request(uid=i, prompt=prompts[i].copy(),
+                            max_new_tokens=12, priority=i % 2)
+                    for i in range(6)]
+        kw = dict(n_lanes=4, max_len=32, dispatch_n=4, paged=True,
+                  page_size=8, n_pages=10)
+        plain = ServeEngine(cfg, params, **kw)
+        plain.run(reqs())
+        ladder = DegradationLadder(page_pressure=0.5, trip_after=1,
+                                   cooldown=50)
+        eng = ServeEngine(cfg, params, ladder=ladder, **kw)
+        served = eng.run(reqs())
+        # the ladder escalated under the tight pool and shed at least
+        # one lane to a checkpoint -- yet every stream is untouched
+        assert eng.stats["degrade_transitions"] > 0
+        assert eng.stats["degrade_sheds"] > 0
+        assert ladder.level_name in DEGRADE_LEVELS
+        base = ServeEngine(cfg, params, **kw)
+        base_reqs = reqs()
+        base.run(base_reqs)
+        assert ([list(r.generated) for r in served]
+                == [list(r.generated) for r in base_reqs])
+        eng.pool.check()
+        assert eng.pool.n_in_use == 0
+
+    def test_never_admissible_is_structured(self, small_model):
+        from repro.serving import Request, ServeEngine
+
+        cfg, params = small_model
+        # zero lanes: nothing can ever be admitted and nothing is in
+        # flight to retire (the pinned legacy livelock case)
+        eng = ServeEngine(cfg, params, n_lanes=0, max_len=32,
+                          dispatch_n=4)
+        req = Request(uid=7,
+                      prompt=np.arange(5, dtype=np.int32) % 7,
+                      max_new_tokens=4)
+        with pytest.raises(RuntimeError, match="never be admitted") as ei:
+            eng.run([req])
+        assert isinstance(ei.value, AdmissionRejected)
+        assert ei.value.reason == "never_admissible"
+        assert ei.value.uid == 7
+        assert ei.value.retry_after_s is None
+        assert ei.value.n_lanes == 0
+        assert eng.stats["admit_rejected"] == 1
+
+
+# ----------------------------------------------------------------------
+# churn properties: random crash/checkpoint/transient interleavings
+# ----------------------------------------------------------------------
+
+def _churn_trace():
+    from repro.fleet.workload import FleetRequest
+    return [FleetRequest(uid=i, arrival_s=0.1 * i, prompt_len=5 + i,
+                         gen_len=8) for i in range(5)]
+
+
+def _assert_churn_invariant(small_model, base, crash_at, checkpoint_every,
+                            transients):
+    """Whatever the evict/restore/crash/retry interleaving, the paged
+    pool balances (asserted inside the replay) and every request's
+    greedy stream is bit-identical to the undisturbed run."""
+    from repro.fleet import run_trace_with_faults
+
+    cfg, params = small_model
+    out = run_trace_with_faults(_churn_trace(), cfg, params,
+                                crash_at_dispatch=crash_at,
+                                checkpoint_every=checkpoint_every,
+                                transient_dispatches=transients,
+                                **ORACLE_KW)
+    assert out.streams == base.streams, (crash_at, checkpoint_every,
+                                         transients)
+    if crash_at is not None:
+        assert out.crashes <= 1
+
+
+class TestChurnProperties:
+    @pytest.fixture(scope="class")
+    def base(self, small_model):
+        from repro.fleet import run_trace_with_faults
+        cfg, params = small_model
+        return run_trace_with_faults(_churn_trace(), cfg, params,
+                                     **ORACLE_KW)
+
+    def test_seeded_random_interleavings(self, small_model, base):
+        # deterministic fallback for containers without hypothesis:
+        # the same invariant over a seeded sample of interleavings
+        rng = np.random.default_rng(11)
+        for _ in range(6):
+            crash_at = (int(rng.integers(1, 13))
+                        if rng.random() < 0.8 else None)
+            checkpoint_every = int(rng.integers(1, 6))
+            transients = sorted(set(
+                rng.integers(0, 11, rng.integers(0, 4)).tolist()))
+            _assert_churn_invariant(small_model, base, crash_at,
+                                    checkpoint_every, transients)
+
+    def test_streams_survive_any_interleaving(self, small_model, base):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=8, deadline=None)
+        @given(crash_at=st.one_of(st.none(), st.integers(1, 12)),
+               checkpoint_every=st.integers(1, 5),
+               transients=st.lists(st.integers(0, 10), max_size=3,
+                                   unique=True))
+        def run(crash_at, checkpoint_every, transients):
+            _assert_churn_invariant(small_model, base, crash_at,
+                                    checkpoint_every, sorted(transients))
+
+        run()
