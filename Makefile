@@ -16,6 +16,10 @@
 # `make test-faults` runs the fault-tolerance layer (fault injection,
 # checkpointed crash recovery, retry/hedging, degradation ladder,
 # recovery-exactness oracle + hypothesis churn).
+# `make test-prefix` runs the copy-on-write KV prefix-sharing layer
+# (PagePool refcounts, radix prompt cache, CoW splits, shared-prefix
+# exactness incl. evict/restore of prefix-hit lanes, cache flush on
+# weight unload).
 # `make bench-smoke` runs the measured decode-path bench on a tiny config
 # and emits BENCH_decode.json (tokens/s, dispatches/token, bytes/token,
 # and the paged section: admission capacity, paged-vs-dense token parity,
@@ -23,13 +27,17 @@
 # onward; the bench FAILS if the paged section is missing, paged
 # bytes/token drifts >10% from dense at full occupancy, the telemetry
 # section's sim-to-real calibration fit exceeds its declared tolerance,
-# or the faults section's recovery oracle / goodput-under-faults gate
-# fails (crash recovery must be bit-exact and keep >= 90% goodput).
+# the faults section's recovery oracle / goodput-under-faults gate
+# fails (crash recovery must be bit-exact and keep >= 90% goodput), or
+# the prefix section fails its gates (shared-prefix streams must stay
+# bit-exact, a cache hit must beat the miss TTFT, pages-saved > 0, and
+# effective admission must reach >= 2x the no-sharing baseline at the
+# bench's 50% overlap point).
 
 PYTEST := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest
 PYRUN  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast test-paged test-preempt test-multimodel test-obs test-faults bench bench-smoke
+.PHONY: test test-fast test-paged test-preempt test-multimodel test-obs test-faults test-prefix bench bench-smoke
 
 test:
 	$(PYTEST) -x -q
@@ -51,6 +59,9 @@ test-obs:
 
 test-faults:
 	$(PYTEST) -q -m faults
+
+test-prefix:
+	$(PYTEST) -q -m prefix
 
 bench:
 	$(PYRUN) -m benchmarks.run

@@ -16,7 +16,8 @@ from typing import List
 from benchmarks.common import Row
 from repro.fleet import (FleetSim, LeastLoadedRouter, LengthDist, NodeSpec,
                          PreemptionPolicy, bursty_trace, constant_trace,
-                         fleet_from_plan, multimodel_trace, poisson_trace)
+                         fleet_from_plan, multimodel_trace, poisson_trace,
+                         shared_prefix_trace)
 from repro.serving import Workload, plan_fleet
 
 WL = Workload(prompt_len=512, gen_len=128, fmt="q8_0")
@@ -64,6 +65,7 @@ def rows() -> List[Row]:
                    f"plan={plan.requests_per_s:.2f}req/s "
                    f"ratio={steady.requests_per_s / plan.requests_per_s:.3f}"))
     out.extend(preemption_rows())
+    out.extend(prefix_rows())
     out.extend(multimodel_rows())
     out.extend(fault_rows())
     return out
@@ -100,6 +102,48 @@ def preemption_rows() -> List[Row]:
             f"preemptions={mig.preemptions} "
             f"pages_migrated={mig.pages_migrated} "
             f"tpot_p99_gain={base.tpot_p99_s / mig.tpot_p99_s:.2f}x"),
+    ]
+
+
+def prefix_rows() -> List[Row]:
+    """Shared-prefix trace on a page-starved decode board, KV prefix
+    sharing on vs off.
+
+    Every request opens with its family's common template head (50% of
+    the mean prompt), so with sharing ON the board charges a resident
+    family's prefix pages ONCE instead of once per lane -- the same
+    trace fits more concurrent decodes in the same pool, over-commit
+    spills recede, and the decode tail tightens.  With sharing OFF the
+    identical workload over-commits and pays the ~1000x host-link spill
+    penalty (the engine-measured counterpart is the bench's
+    ``prefix`` section in BENCH_decode.json).
+    """
+    def fleet(sharing):
+        return [NodeSpec("a100-40g", 1, "prefill"),
+                NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                         kv_pool_pages=64, page_size=16,
+                         prefix_sharing=sharing)]
+
+    # two heavyweight templates (192 of ~256 prompt tokens = 12 of a
+    # slot's ~24 pages) at a rate that keeps several same-family
+    # decodes resident at once -- the regime the radix cache targets
+    trace = shared_prefix_trace(
+        poisson_trace(16.0, 40.0, seed=2, prompt=LengthDist(256, cv=0.3),
+                      gen=LengthDist(128, cv=0.5)),
+        prefix_len=192, n_prefixes=2, seed=1)
+    off = FleetSim(fleet(False), trace, fmt=WL.fmt).run()
+    on = FleetSim(fleet(True), trace, fmt=WL.fmt).run()
+    return [
+        Row("fleet_prefix[sharing_off]", 0.0,
+            f"completed={off.completed}/{off.offered} "
+            f"goodput={off.goodput_rps:.2f}req/s "
+            f"tpot_p99={off.tpot_p99_s * 1e3:.2f}ms"),
+        Row("fleet_prefix[sharing_on]", 0.0,
+            f"completed={on.completed}/{on.offered} "
+            f"goodput={on.goodput_rps:.2f}req/s "
+            f"tpot_p99={on.tpot_p99_s * 1e3:.2f}ms "
+            f"goodput_gain={on.goodput_rps / off.goodput_rps:.2f}x "
+            f"tpot_p99_gain={off.tpot_p99_s / on.tpot_p99_s:.2f}x"),
     ]
 
 

@@ -68,6 +68,7 @@ the same scenario WITHOUT a recovery policy must visibly lose requests
 
 from __future__ import annotations
 
+import os
 import time
 from typing import List
 
@@ -553,6 +554,164 @@ def faults_metrics(cfg, params) -> dict:
     }
 
 
+def prefix_metrics(cfg, params, *, n_lanes: int, max_len: int,
+                   max_new: int, dispatch_n: int, page_size: int) -> dict:
+    """Prefix-sharing section of BENCH_decode.json.
+
+    Three experiments over the copy-on-write radix prompt cache:
+
+    * exactness -- shared-prefix workloads (full-page hits plus one
+      partial-page hit that forces a CoW split) served with sharing on
+      vs off, greedy and temperature, dense and int8 KV: token streams
+      must be bit-identical (sharing is a memory optimization, not a
+      model change);
+    * TTFT -- admission latency of a prompt whose prefix is cached vs
+      the same-shape cache miss, on one engine with both compile paths
+      warmed: the hit prefills only the unmatched tail;
+    * effective admission -- concurrent requests admitted at ~50%
+      prompt overlap with a warm cache vs the no-sharing baseline on
+      the same pool: hits reserve only their tail pages.
+    """
+    import dataclasses as _dc
+
+    import jax
+    import numpy as np
+    from repro.serving import Request, ServeEngine
+
+    ps = page_size
+    rng = np.random.default_rng(11)
+    head = rng.integers(0, cfg.vocab_size, 2 * ps, dtype=np.int32)
+
+    # donor, an extension of it (partial-page hit => CoW on prefill),
+    # and full-page-hit siblings with unique tails
+    donor = np.concatenate([head, rng.integers(0, cfg.vocab_size,
+                                               ps // 2, dtype=np.int32)])
+    extension = np.concatenate([donor, rng.integers(0, cfg.vocab_size,
+                                                    4, dtype=np.int32)])
+    prompts = [donor, extension] + [
+        np.concatenate([head, rng.integers(0, cfg.vocab_size, ps // 2,
+                                           dtype=np.int32)])
+        for _ in range(2 * n_lanes - 2)]
+
+    def serve(c, sharing, temperature=0.0):
+        reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        eng = ServeEngine(c, params, n_lanes=n_lanes, max_len=max_len,
+                          dispatch_n=dispatch_n, paged=True,
+                          page_size=ps, temperature=temperature,
+                          prefix_sharing=sharing)
+        eng.run(reqs)
+        stats = dict(eng.stats)
+        if eng.prefix_cache is not None:
+            eng.prefix_cache.flush()
+        eng.pool.check()
+        leak_free = eng.pool.n_in_use == 0
+        return [tuple(r.generated) for r in reqs], stats, leak_free
+
+    cfg_int8 = _dc.replace(cfg, kv_quant="int8")
+    runs = {"greedy": (cfg, 0.0), "temperature": (cfg, 0.8),
+            "int8_greedy": (cfg_int8, 0.0)}
+    exact, leak_free, shared_stats = {}, True, None
+    for name, (c, temp) in runs.items():
+        base, _, lf0 = serve(c, False, temp)
+        shared, stats, lf1 = serve(c, True, temp)
+        exact[name] = base == shared
+        leak_free = leak_free and lf0 and lf1
+        if name == "greedy":
+            shared_stats = stats
+
+    # -- TTFT: cache hit vs same-shape miss on one warmed engine ------
+    # long-context probe: the miss pays a batched prefill over the full
+    # power-of-two bucket; the hit matches the donor's whole prompt
+    # (full pages AND its partial last page -> one CoW split) and
+    # streams only the single-token tail
+    ttft_len = 4 * max_len
+    long_donor = rng.integers(0, cfg.vocab_size, ttft_len - 2,
+                              dtype=np.int32)
+    consumer = np.concatenate(
+        [long_donor, rng.integers(0, cfg.vocab_size, 1, dtype=np.int32)])
+    eng = ServeEngine(cfg, params, n_lanes=2, max_len=ttft_len,
+                      dispatch_n=dispatch_n, paged=True, page_size=ps,
+                      prefix_sharing=True)
+
+    def drain(e):
+        while e.live_lanes():
+            e.decode_n()
+
+    def timed_admit(e, prompt, uid):
+        req = Request(uid=uid, prompt=prompt.copy(), max_new_tokens=2)
+        t0 = time.perf_counter()
+        assert e.admit(req), "TTFT probe must fit an empty engine"
+        jax.block_until_ready(e._next_token)
+        dt = time.perf_counter() - t0
+        drain(e)
+        return dt
+
+    t_miss, t_hit = [], []
+    for rep in range(3):                 # rep 0 pays the compiles
+        eng.prefix_cache.flush()         # donor admission = true miss
+        t_miss.append(timed_admit(eng, long_donor, 100 + 2 * rep))
+        t_hit.append(timed_admit(eng, consumer, 101 + 2 * rep))
+    ttft_miss = min(t_miss[1:])
+    ttft_hit = min(t_hit[1:])
+
+    # -- effective admission at ~50% prompt overlap -------------------
+    # pool sized so the marginal arithmetic is visible: misses need 4
+    # pages (prompt 63 + write slot @ ps=16), hits on the 2-page cached
+    # template reserve only their 2 tail pages -- 10 pages admit 2
+    # without sharing (the cache itself holds 2) vs 4 with it
+    pool_pages = 10
+    overlap_plen = 4 * ps - 1
+
+    def admitted(sharing):
+        e = ServeEngine(cfg, params, n_lanes=3 * n_lanes,
+                        max_len=max_len, dispatch_n=dispatch_n,
+                        paged=True, page_size=ps, n_pages=pool_pages,
+                        prefix_sharing=sharing)
+        if sharing:                      # warm the cache, then retire
+            e.run([Request(uid=0, prompt=head.copy(),
+                           max_new_tokens=1)])
+        count = 0
+        for uid in range(1, 3 * n_lanes):
+            tail = rng.integers(0, cfg.vocab_size,
+                                overlap_plen - len(head), dtype=np.int32)
+            prompt = np.concatenate([head, tail])
+            if not e.admit(Request(uid=uid, prompt=prompt,
+                                   max_new_tokens=1)):
+                break
+            count += 1
+        return count
+
+    adm_off = admitted(False)
+    adm_on = admitted(True)
+
+    return {
+        "page_size": ps,
+        "prefix_len": len(head),
+        "token_exact_vs_unshared": exact,
+        "pool_leak_free": leak_free,
+        "prefix_hits": shared_stats["prefix_hits"],
+        "prefix_tokens_matched": shared_stats["prefix_tokens_matched"],
+        "pages_saved": shared_stats["prefix_pages_saved"],
+        "cow_copies": shared_stats["prefix_cow_copies"],
+        "ttft": {
+            "prompt_len": int(len(consumer)),
+            "matched_tokens_on_hit": int(len(consumer)) - 1,
+            "miss_ms": round(ttft_miss * 1e3, 3),
+            "hit_ms": round(ttft_hit * 1e3, 3),
+            "speedup_x": round(ttft_miss / max(ttft_hit, 1e-9), 2),
+        },
+        "effective_admission": {
+            "pool_pages": pool_pages,
+            "prompt_len": overlap_plen,
+            "overlap_fraction": round(len(head) / overlap_plen, 3),
+            "admitted_no_sharing": adm_off,
+            "admitted_sharing": adm_on,
+            "admission_gain_x": round(adm_on / max(adm_off, 1), 2),
+        },
+    }
+
+
 def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
                         max_len: int = 64, prompt_len: int = 8,
                         max_new: int = 16, n_requests: int = 8,
@@ -649,9 +808,23 @@ def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
         "greedy_token_exact": exact,
         "bytes_read_per_token": occupancy,
         "bytes_read_context_sweep": context_sweep,
+        # steady-state compile counters (the timed second workload above
+        # ran with counters zeroed: any non-zero value is a recompile on
+        # the hot path) plus the persistent jit-cache dir, when the
+        # launch env (scripts/serve_env.sh) configured one
+        "warm_start": {
+            "steady_state_prefill_compiles": new_stats["prefill_compiles"],
+            "steady_state_ssm_prefill_compiles": new_stats[
+                "ssm_prefill_compiles"],
+            "compilation_cache_dir": os.environ.get(
+                "JAX_COMPILATION_CACHE_DIR"),
+        },
         "paged": paged_metrics(cfg, params, prompts, n_lanes=n_lanes,
                                max_len=max_len, max_new=max_new,
                                dispatch_n=dispatch_n, page_size=bk),
+        "prefix": prefix_metrics(cfg, params, n_lanes=n_lanes,
+                                 max_len=max_len, max_new=max_new,
+                                 dispatch_n=dispatch_n, page_size=bk),
         "migration": migration_metrics(cfg, params, n_lanes=n_lanes,
                                        max_len=max_len, max_new=max_new,
                                        dispatch_n=dispatch_n,
@@ -709,6 +882,20 @@ def main(argv=None) -> int:
               "lengthaware_bytes_per_token"]
           < rec["bytes_read_per_token"]["25%"]["masked_bytes_per_token"]
           and paged_ok)
+    pfx = rec.get("prefix", {})
+    pfx_ok = (
+        bool(pfx)
+        # sharing is a memory optimization: streams must not move
+        and all(pfx["token_exact_vs_unshared"].values())
+        and pfx["pool_leak_free"]
+        and pfx["prefix_hits"] > 0
+        and pfx["pages_saved"] > 0
+        and pfx["cow_copies"] > 0
+        # a cache hit prefills only the unmatched tail
+        and pfx["ttft"]["hit_ms"] < pfx["ttft"]["miss_ms"]
+        # hits reserve tail pages only: >= 2x admissions at ~50% overlap
+        and pfx["effective_admission"]["admission_gain_x"] >= 2.0)
+    ok = ok and pfx_ok
     mig = rec.get("migration", {})
     mig_ok = (
         bool(mig)
@@ -762,6 +949,7 @@ def main(argv=None) -> int:
         and sim["without_recovery"]["requests_lost"] > 0)
     ok = ok and flt_ok
     print("BENCH_decode paged section:", "PASS" if paged_ok else "FAIL")
+    print("BENCH_decode prefix section:", "PASS" if pfx_ok else "FAIL")
     print("BENCH_decode migration section:", "PASS" if mig_ok else "FAIL")
     print("BENCH_decode multimodel section:", "PASS" if mm_ok else "FAIL")
     print("BENCH_decode telemetry section:", "PASS" if tel_ok else "FAIL")

@@ -1,0 +1,42 @@
+# Canonical serving environment -- source this before any serve/bench
+# launch:
+#
+#     source scripts/serve_env.sh
+#     python -m repro.launch.serve --arch qwen2.5-1.5b --smoke \
+#         --paged --prefix-sharing
+#
+# Rationale (idioms from production JAX serving stacks, see SNIPPETS.md):
+#
+# * tcmalloc -- glibc malloc stalls multi-GiB host allocations (weight
+#   staging, checkpoint gathers); tcmalloc keeps them off the serving
+#   hot path.  The preload is skipped when the library is absent, so
+#   the script is safe to source on minimal containers.
+# * XLA_FLAGS -- one host-platform device (the engine shards lanes, not
+#   processes).  On TPU builds additionally set
+#   "--xla_step_marker_location=1" (step markers at the outer while
+#   loop, so profile traces cut at dispatch boundaries, matching the
+#   span tracer); CPU-only XLA builds reject the flag, so it stays off
+#   by default.
+# * TF_CPP_MIN_LOG_LEVEL=4 -- silence the TF/XLA banner spam that
+#   otherwise drowns the serve launcher's throughput lines.
+# * JAX_COMPILATION_CACHE_DIR -- persistent XLA compilation cache: a
+#   relaunch (same config/buckets) reuses compiled prefill/decode
+#   executables instead of re-tracing.  The serve launcher and
+#   bench-smoke report their steady-state compile counters so a cold
+#   cache is visible (see BENCH_decode.json "warm_start").
+
+_TCMALLOC=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+if [ -e "${_TCMALLOC}" ]; then
+    export LD_PRELOAD="${_TCMALLOC}"                  # faster malloc
+    export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+fi
+unset _TCMALLOC
+
+export TF_CPP_MIN_LOG_LEVEL=4
+export XLA_FLAGS="--xla_force_host_platform_device_count=1"
+# export XLA_FLAGS="--xla_step_marker_location=1 ${XLA_FLAGS}"  # TPU builds
+
+# Persistent compilation cache (override the location before sourcing
+# to share one cache across checkouts).
+export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-${HOME}/.cache/repro-jax}"
+mkdir -p "${JAX_COMPILATION_CACHE_DIR}"

@@ -54,7 +54,8 @@ from repro.fleet.sim import (FleetReport, FleetSim, NodeSpec,
                              fleet_from_plan)
 from repro.fleet.workload import (FleetRequest, LengthDist, bursty_trace,
                                   constant_trace, diurnal_trace,
-                                  multimodel_trace, poisson_trace)
+                                  multimodel_trace, poisson_trace,
+                                  shared_prefix_trace)
 
 __all__ = [
     "QueueDepthAutoscaler", "ExecutionResult", "FaultReplayResult",
@@ -73,4 +74,5 @@ __all__ = [
     "fleet_from_plan",
     "FleetRequest", "LengthDist", "bursty_trace", "constant_trace",
     "diurnal_trace", "multimodel_trace", "poisson_trace",
+    "shared_prefix_trace",
 ]

@@ -17,7 +17,6 @@ simulated served-token totals must equal the engine's exactly.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from collections import deque
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -44,15 +43,10 @@ class ExecutionResult:
     blocked episode, so the number is dispatch-granularity invariant).
     Zero for a fixed-lane replay.  These feed the sim-to-real
     calibration loop: the simulator's ``SimNode.kv_pages_hwm`` models
-    the same peak.
-
-    Naming note: this field was published as ``kv_spill_events`` for a
-    while, ALIASING the simulator's counter of the same name -- which
-    counts over-commit TRANSITIONS in ``SimNode._note_occupancy``, a
-    different event (the sim over-commits where the engine defers
-    admission).  The telemetry schema keeps them distinct
-    (``serve.kv.admit_blocked`` vs ``fleet.node.*.kv_spill_events``);
-    the old attribute survives as a deprecated alias.
+    the same peak.  (The simulator's ``kv_spill_events`` counts
+    over-commit TRANSITIONS in ``SimNode._note_occupancy`` -- a
+    different event; the telemetry schema keeps them distinct as
+    ``serve.kv.admit_blocked`` vs ``fleet.node.*.kv_spill_events``.)
     """
 
     prompt_tokens: int
@@ -68,17 +62,41 @@ class ExecutionResult:
     preemptions: int = 0
     restores: int = 0
     pages_migrated: int = 0
+    #: prefix-sharing counters (zero unless the replay ran with
+    #: ``prefix_sharing=True``): prompts that opened on cached pages,
+    #: and prefill pages those hits avoided allocating
+    prefix_hits: int = 0
+    prefix_pages_saved: int = 0
 
-    @property
-    def kv_spill_events(self) -> int:
-        """Deprecated alias of ``kv_admit_blocked`` (the engine never
-        spills; the sim's spill counter is a different event)."""
-        warnings.warn(
-            "ExecutionResult.kv_spill_events is a deprecated alias of "
-            "kv_admit_blocked (the simulator's kv_spill_events counts "
-            "over-commit transitions, a distinct event)",
-            DeprecationWarning, stacklevel=2)
-        return self.kv_admit_blocked
+
+def _prompt_for(rng: np.random.Generator, r: FleetRequest,
+                vocab: int) -> np.ndarray:
+    """Deterministic prompt ids for one fleet request.
+
+    A request without prefix structure draws its whole prompt from the
+    caller's shared ``rng`` stream -- byte-identical to the pre-prefix
+    replays, so every pinned token stream survives.  A request with a
+    ``prefix_id`` OPENS with its family's shared tokens (their own rng,
+    keyed by family id, so all members agree regardless of arrival
+    order) and draws only the unique tail from the shared stream.
+    """
+    if r.prefix_id is None:
+        return rng.integers(0, vocab, r.prompt_len, dtype=np.int32)
+    head_len = min(r.prefix_len, r.prompt_len - 1)
+    head = np.random.default_rng((7919, r.prefix_id)).integers(
+        0, vocab, head_len, dtype=np.int32)
+    tail = rng.integers(0, vocab, r.prompt_len - head_len, dtype=np.int32)
+    return np.concatenate([head, tail])
+
+
+def trace_requests(trace: Sequence[FleetRequest], vocab: int,
+                   seed: int) -> list:
+    """Engine :class:`Request` list for a fleet trace, in the arrival
+    order every replay in this module admits them."""
+    rng = np.random.default_rng(seed)
+    return [Request(uid=r.uid, prompt=_prompt_for(rng, r, vocab),
+                    max_new_tokens=r.gen_len)
+            for r in sorted(trace, key=lambda r: (r.arrival_s, r.uid))]
 
 
 def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
@@ -90,6 +108,7 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
                         n_pages: Optional[int] = None,
                         temperature: float = 0.0,
                         preempt_every: Optional[int] = None,
+                        prefix_sharing: bool = False,
                         tracer: Optional[SpanTracer] = None,
                         registry: Optional[MetricsRegistry] = None
                         ) -> ExecutionResult:
@@ -111,16 +130,12 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
     preemption invariant.
     """
     vocab = vocab_size or cfg.vocab_size
-    rng = np.random.default_rng(seed)
-    reqs = [Request(uid=r.uid,
-                    prompt=rng.integers(0, vocab, r.prompt_len,
-                                        dtype=np.int32),
-                    max_new_tokens=r.gen_len)
-            for r in sorted(trace, key=lambda r: (r.arrival_s, r.uid))]
+    reqs = trace_requests(trace, vocab, seed)
     engine = ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
                          dispatch_n=dispatch_n, paged=paged,
                          page_size=page_size, n_pages=n_pages,
-                         temperature=temperature, tracer=tracer,
+                         temperature=temperature,
+                         prefix_sharing=prefix_sharing, tracer=tracer,
                          registry=registry)
     if preempt_every is None:
         engine.run(reqs)
@@ -128,6 +143,8 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
         assert paged, "preemption replay needs the paged engine"
         _run_with_preemption(engine, reqs, preempt_every)
     if paged:
+        if engine.prefix_cache is not None:
+            engine.prefix_cache.flush()      # release the cache's refs
         engine.pool.check()
         assert engine.pool.n_in_use == 0, "replay leaked KV pages"
     gen_by_uid = {r.uid: len(r.generated) for r in reqs}
@@ -141,7 +158,9 @@ def run_trace_on_engine(trace: Sequence[FleetRequest], cfg: ModelConfig,
         kv_admit_blocked=engine.stats["kv_admit_blocked"],
         preemptions=engine.stats["preemptions"],
         restores=engine.stats["restores"],
-        pages_migrated=engine.stats["pages_migrated"])
+        pages_migrated=engine.stats["pages_migrated"],
+        prefix_hits=engine.stats["prefix_hits"],
+        prefix_pages_saved=engine.stats["prefix_pages_saved"])
 
 
 def _run_with_preemption(engine: ServeEngine, reqs, every: int) -> None:
@@ -181,17 +200,14 @@ def validate_preemption_exactness(trace: Sequence[FleetRequest],
                                   **kw) -> Dict[str, object]:
     """Replay ``trace`` with and without evict-and-replay churn and diff
     the TOKEN STREAMS (not just counts): a migrated request must resume
-    bit-identically.  Returns the diff plus the preemption counters."""
+    bit-identically.  Returns the diff plus the preemption counters.
+    With ``prefix_sharing=True`` both replays share cached prefixes, so
+    the diff also pins evict/restore of prefix-hit lanes."""
     kw = dict(kw, paged=True)
     vocab = kw.pop("vocab_size", None) or cfg.vocab_size
 
     def streams(preempt):
-        rng = np.random.default_rng(kw.get("seed", 0))
-        reqs = [Request(uid=r.uid,
-                        prompt=rng.integers(0, vocab, r.prompt_len,
-                                            dtype=np.int32),
-                        max_new_tokens=r.gen_len)
-                for r in sorted(trace, key=lambda r: (r.arrival_s, r.uid))]
+        reqs = trace_requests(trace, vocab, kw.get("seed", 0))
         engine = ServeEngine(cfg, params,
                              n_lanes=kw.get("n_lanes", 2),
                              max_len=kw.get("max_len", 64),
@@ -199,11 +215,15 @@ def validate_preemption_exactness(trace: Sequence[FleetRequest],
                              paged=True,
                              page_size=kw.get("page_size", 16),
                              n_pages=kw.get("n_pages"),
-                             temperature=kw.get("temperature", 0.0))
+                             temperature=kw.get("temperature", 0.0),
+                             prefix_sharing=kw.get("prefix_sharing",
+                                                   False))
         if preempt:
             _run_with_preemption(engine, reqs, preempt_every)
         else:
             engine.run(reqs)
+        if engine.prefix_cache is not None:
+            engine.prefix_cache.flush()
         engine.pool.check()
         return {r.uid: tuple(r.generated) for r in reqs}, engine.stats
 
@@ -261,7 +281,9 @@ def run_trace_with_faults(trace: Sequence[FleetRequest],
                           vocab_size: Optional[int] = None, seed: int = 0,
                           dispatch_n: int = 8, page_size: int = 16,
                           n_pages: Optional[int] = None,
-                          temperature: float = 0.0) -> FaultReplayResult:
+                          temperature: float = 0.0,
+                          prefix_sharing: bool = False
+                          ) -> FaultReplayResult:
     """Replay ``trace`` through the real paged engine while injecting a
     node crash (plus optional transient dispatch errors) and recovering.
 
@@ -281,19 +303,15 @@ def run_trace_with_faults(trace: Sequence[FleetRequest],
             crash_at_dispatch = plan.crash_dispatch()
         transient_dispatches = plan.transient_dispatches()
     vocab = vocab_size or cfg.vocab_size
-    rng = np.random.default_rng(seed)
-    reqs = [Request(uid=r.uid,
-                    prompt=rng.integers(0, vocab, r.prompt_len,
-                                        dtype=np.int32),
-                    max_new_tokens=r.gen_len)
-            for r in sorted(trace, key=lambda r: (r.arrival_s, r.uid))]
+    reqs = trace_requests(trace, vocab, seed)
     final_req: Dict[int, Request] = {r.uid: r for r in reqs}
 
     def mk_engine(node: str) -> ServeEngine:
         return ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
                            dispatch_n=dispatch_n, paged=True,
                            page_size=page_size, n_pages=n_pages,
-                           temperature=temperature, name=node)
+                           temperature=temperature,
+                           prefix_sharing=prefix_sharing, name=node)
 
     engine = mk_engine("node0")
     pending = list(reqs)
@@ -361,6 +379,8 @@ def run_trace_with_faults(trace: Sequence[FleetRequest],
             # the replay-level total under engine.retry.attempts
             engine.stats["retry_attempts"] = retry_attempts
 
+    if engine.prefix_cache is not None:
+        engine.prefix_cache.flush()
     engine.pool.check()
     assert engine.pool.n_in_use == 0, "fault replay leaked KV pages"
     streams = {uid: tuple(r.generated) for uid, r in final_req.items()}
@@ -394,17 +414,13 @@ def validate_recovery_exactness(trace: Sequence[FleetRequest],
                                   if k != "temperature"})
     # stream-level baseline: rebuild the same requests and run clean
     vocab = kw.get("vocab_size") or cfg.vocab_size
-    rng = np.random.default_rng(kw.get("seed", 0))
-    clean = [Request(uid=r.uid,
-                     prompt=rng.integers(0, vocab, r.prompt_len,
-                                         dtype=np.int32),
-                     max_new_tokens=r.gen_len)
-             for r in sorted(trace, key=lambda r: (r.arrival_s, r.uid))]
+    clean = trace_requests(trace, vocab, kw.get("seed", 0))
     eng = ServeEngine(cfg, params, n_lanes=kw.get("n_lanes", 2),
                       max_len=kw.get("max_len", 64),
                       dispatch_n=kw.get("dispatch_n", 8), paged=True,
                       page_size=kw.get("page_size", 16),
-                      n_pages=kw.get("n_pages"), temperature=0.0)
+                      n_pages=kw.get("n_pages"), temperature=0.0,
+                      prefix_sharing=kw.get("prefix_sharing", False))
     eng.run(clean)
     base_streams = {r.uid: tuple(r.generated) for r in clean}
 
@@ -485,8 +501,7 @@ def _mm_requests(trace: Sequence[FleetRequest],
             f"unregistered model {r.model_id!r}"
         vocab = models[r.model_id][0].vocab_size
         reqs.append(Request(uid=r.uid,
-                            prompt=rng.integers(0, vocab, r.prompt_len,
-                                                dtype=np.int32),
+                            prompt=_prompt_for(rng, r, vocab),
                             max_new_tokens=r.gen_len,
                             model_id=r.model_id))
     return reqs
@@ -498,7 +513,8 @@ def run_multimodel_trace_on_engine(
         hbm_bytes: Optional[int] = None,
         n_lanes: int = 2, max_len: int = 64, seed: int = 0,
         dispatch_n: int = 8, page_size: int = 16,
-        temperature: float = 0.0) -> MultiModelExecutionResult:
+        temperature: float = 0.0,
+        prefix_sharing: bool = False) -> MultiModelExecutionResult:
     """Serve a multi-model ``trace`` through the REAL
     :class:`~repro.serving.modelpool.MultiModelServeEngine`.
 
@@ -517,10 +533,13 @@ def run_multimodel_trace_on_engine(
         pool.register(mid, models[mid][0], models[mid][1])
     engine = MultiModelServeEngine(pool, n_lanes=n_lanes, max_len=max_len,
                                    temperature=temperature, rng_seed=seed,
-                                   dispatch_n=dispatch_n)
+                                   dispatch_n=dispatch_n,
+                                   prefix_sharing=prefix_sharing)
     reqs = _mm_requests(trace, models, seed)
     engine.run(reqs)
     for eng in engine.engines.values():
+        if eng.prefix_cache is not None:
+            eng.prefix_cache.flush()
         eng.pool.check()
         assert eng.pool.n_in_use == 0, "replay leaked KV pages"
     gen_by_uid = {r.uid: len(r.generated) for r in reqs}

@@ -96,6 +96,11 @@ class DecodeSlot:
     #: checkpoint interval has elapsed yet).  On a node crash the slot
     #: resumes from here -- tokens past it are lost with the board's HBM
     ckpt_tokens: Optional[int] = None
+    #: prompt-prefix family (see ``FleetRequest``): on a prefix-sharing
+    #: board the family's full prefix pages are physical ONCE no matter
+    #: how many resident slots open with them
+    prefix_id: Optional[int] = None
+    prefix_len: int = 0
 
 
 class SimNode:
@@ -108,7 +113,8 @@ class SimNode:
                  models: Optional[Dict[str, LLMSpec]] = None,
                  resident_models: Optional[Sequence[str]] = None,
                  hbm_gb: Optional[float] = None,
-                 weight_fmt: Optional[str] = None):
+                 weight_fmt: Optional[str] = None,
+                 prefix_sharing: bool = False):
         assert role in ("prefill", "decode", "both"), role
         self.node_id = node_id
         self.profile = profile
@@ -117,6 +123,9 @@ class SimNode:
         self.spec = spec
         self.decode_lanes = decode_lanes
         self.page_size = page_size
+        #: model the engine's copy-on-write prefix cache: resident slots
+        #: of one prefix family share the family's full prefix pages
+        self.prefix_sharing = prefix_sharing
         self._kv_pool_pages_static = kv_pool_pages
         self._model = InferencePerfModel(profile, spec)
         # multi-model catalog: per-model perf models + weight bytes, a
@@ -407,13 +416,44 @@ class SimNode:
     # ------------------------------------------------------------------
     # decode: lane-limited processor sharing + page-pool occupancy
     # ------------------------------------------------------------------
-    def _slot_pages(self, slot: DecodeSlot) -> int:
-        """Pages a resident slot occupies at its CURRENT live context."""
+    def _prefix_pages(self, prefix_len: int) -> int:
+        """Full pages a prefix family can share (the engine never
+        shares a partial tail page for good: CoW copies it on the
+        consumer's first append)."""
+        return max(int(prefix_len), 0) // self.page_size
+
+    def _slot_shared(self, slot: DecodeSlot) -> int:
+        """Pages of ``slot`` served from its family's shared prefix --
+        capped so every slot keeps at least one private page (the
+        engine's admission reserve: the live tail is always written)."""
+        if not self.prefix_sharing or slot.prefix_id is None:
+            return 0
         ctx = slot.prompt_len + int(slot.tokens_done)
-        return max(-(-ctx // self.page_size), 1)
+        total = max(-(-ctx // self.page_size), 1)
+        return min(self._prefix_pages(slot.prefix_len), total - 1)
+
+    def _slot_pages(self, slot: DecodeSlot) -> int:
+        """PRIVATE pages a resident slot occupies at its CURRENT live
+        context.  Shared prefix pages are charged once per resident
+        family (:meth:`_resident_prefix_pages`), not per slot -- the
+        copy-on-write cache's whole capacity win."""
+        ctx = slot.prompt_len + int(slot.tokens_done)
+        return max(-(-ctx // self.page_size), 1) - self._slot_shared(slot)
+
+    def _resident_prefix_pages(self) -> int:
+        """One physical page charge per DISTINCT resident prefix
+        family, however many slots opened with it."""
+        fams: Dict[int, int] = {}
+        for s in self.decode_active.values():
+            shared = self._slot_shared(s)
+            if shared:
+                fams[s.prefix_id] = max(fams.get(s.prefix_id, 0), shared)
+        return sum(fams.values())
 
     def kv_pages_in_use(self) -> int:
-        return sum(self._slot_pages(s) for s in self.decode_active.values())
+        return (sum(self._slot_pages(s)
+                    for s in self.decode_active.values())
+                + self._resident_prefix_pages())
 
     def kv_pages_free(self) -> int:
         """Free pages net of in-flight migration reservations (negative
@@ -434,19 +474,36 @@ class SimNode:
         router scores instead of today's occupancy: a board that fits
         now but cannot fit its residents' futures is a migration (pages
         x transfer time over the host link) waiting to happen."""
-        final = sum(
-            max(-(-(s.prompt_len + s.gen_len) // self.page_size), 1)
-            for s in self.decode_active.values())
-        return final + self.inbound_pages
+        final = 0
+        fams: Dict[int, int] = {}
+        for s in self.decode_active.values():
+            pages = max(-(-(s.prompt_len + s.gen_len)
+                          // self.page_size), 1)
+            shared = 0
+            if self.prefix_sharing and s.prefix_id is not None:
+                shared = min(self._prefix_pages(s.prefix_len), pages - 1)
+                fams[s.prefix_id] = max(fams.get(s.prefix_id, 0), shared)
+            final += pages - shared
+        return final + sum(fams.values()) + self.inbound_pages
 
-    def kv_overcommit(self, prompt_len: int = 0, gen_len: int = 0) -> int:
+    def kv_overcommit(self, prompt_len: int = 0, gen_len: int = 0,
+                      prefix_id: Optional[int] = None,
+                      prefix_len: int = 0) -> int:
         """Pages by which admitting such a request (at its steady-state
         mid-generation context) would exceed the pool; 0 if it fits or
-        no pool is configured."""
+        no pool is configured.  A prefix-sharing board discounts the
+        request's full prefix pages when its family is already resident
+        -- routers therefore see the cache's EFFECTIVE capacity, and
+        steer prefix siblings onto the boards that already hold their
+        template."""
         if self.kv_pool_pages is None:
             return 0
         ctx = prompt_len + gen_len // 2
         need = -(-ctx // self.page_size) if ctx > 0 else 0
+        if (need > 1 and self.prefix_sharing and prefix_id is not None
+                and any(s.prefix_id == prefix_id
+                        for s in self.decode_active.values())):
+            need -= min(self._prefix_pages(prefix_len), need - 1)
         return max(need - self.kv_pages_free(), 0)
 
     # ------------------------------------------------------------------
@@ -493,6 +550,10 @@ class SimNode:
         ctx = slot.prompt_len + done + max(slot.gen_len - done, 0) // 2
         t_comp, t_w, t_kv, dyn_j = self._decode_parts(max(ctx, 1),
                                                       slot.model_id)
+        # a resumed slot holds EXCLUSIVE pages: the engine's evict
+        # deep-copies shared prefix pages into the checkpoint and
+        # restore re-anchors onto fresh ones, so the prefix discount
+        # does not survive a migration
         return DecodeSlot(uid=slot.uid, gen_len=slot.gen_len,
                           t_comp_s=t_comp, t_kv_s=t_kv,
                           dyn_j_per_tok=dyn_j,
@@ -574,13 +635,16 @@ class SimNode:
                 / self._split * self.derate)
 
     def make_slot(self, uid: int, prompt_len: int, gen_len: int,
-                  model_id: Optional[str] = None) -> DecodeSlot:
+                  model_id: Optional[str] = None,
+                  prefix_id: Optional[int] = None,
+                  prefix_len: int = 0) -> DecodeSlot:
         context = prompt_len + gen_len // 2
         t_comp, t_w, t_kv, dyn_j = self._decode_parts(context, model_id)
         return DecodeSlot(uid=uid, gen_len=gen_len, t_comp_s=t_comp,
                           t_kv_s=t_kv, dyn_j_per_tok=dyn_j,
                           prompt_len=prompt_len, model_id=model_id,
-                          t_weights_s=t_w)
+                          t_weights_s=t_w, prefix_id=prefix_id,
+                          prefix_len=prefix_len)
 
     def decode_admit(self, slot: DecodeSlot, now: float) -> bool:
         """Returns True if the slot went active (else queued)."""

@@ -62,8 +62,15 @@ def kv_capacity_penalty(record, node: SimNode) -> float:
     free lane but a full pool must lose to one with pages to spare
     (spilling over the PCIe 1.1 x4 host link is ~1000x slower than HBM).
     Zero for nodes without a configured pool -- legacy scores unchanged.
+    On a prefix-sharing board the over-commit probe discounts a request
+    whose prefix family is already resident, so siblings gravitate to
+    the board holding their template.
     """
-    over = node.kv_overcommit(record.req.prompt_len, record.req.gen_len)
+    over = node.kv_overcommit(record.req.prompt_len, record.req.gen_len,
+                              prefix_id=getattr(record.req, "prefix_id",
+                                                None),
+                              prefix_len=getattr(record.req, "prefix_len",
+                                                 0))
     return 1e9 * over if over else 0.0
 
 

@@ -62,6 +62,9 @@ class NodeSpec:
     model_ids: Optional[Tuple[str, ...]] = None
     resident: Optional[Tuple[str, ...]] = None
     hbm_gb: Optional[float] = None
+    #: boards run the engine's copy-on-write prefix cache: slots of one
+    #: prefix family share its full prefix pages (see SimNode)
+    prefix_sharing: bool = False
 
 
 def fleet_from_plan(plan: FleetPlan, decode_lanes: int = 1) -> List[NodeSpec]:
@@ -277,7 +280,8 @@ class FleetSim:
                        page_size=ns.page_size,
                        kv_pool_pages=ns.kv_pool_pages,
                        models=models, resident_models=ns.resident,
-                       hbm_gb=ns.hbm_gb)
+                       hbm_gb=ns.hbm_gb,
+                       prefix_sharing=ns.prefix_sharing)
         self._node_seq += 1
         node.available_at = now
         self.nodes.append(node)
@@ -514,7 +518,11 @@ class FleetSim:
                                               phase="decode", mid=mid)
         self._finish(node, node.decode_advance(now), now)
         slot = node.make_slot(rec.req.uid, rec.req.prompt_len,
-                              rec.req.gen_len, model_id=mid)
+                              rec.req.gen_len, model_id=mid,
+                              prefix_id=getattr(rec.req, "prefix_id",
+                                                None),
+                              prefix_len=getattr(rec.req, "prefix_len",
+                                                 0))
         self._slot_rec[(node.node_id, rec.req.uid)] = rec
         node.decode_admit(slot, now)
         self._maybe_preempt(node, now)

@@ -36,6 +36,13 @@ class FleetRequest:
     #: which registered model serves this request (None = single-model
     #: fleet, the pre-multimodel behavior)
     model_id: Optional[str] = None
+    #: prompt-prefix family: requests sharing a ``prefix_id`` open with
+    #: the same ``prefix_len`` tokens (system prompt / few-shot
+    #: template).  None = unique prompt, the pre-prefix behavior.  A
+    #: prefix-sharing engine/board serves the shared span from cached
+    #: KV pages; capacity models discount it accordingly.
+    prefix_id: Optional[int] = None
+    prefix_len: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,6 +167,42 @@ def multimodel_trace(trace: List[FleetRequest], mix: dict,
     draws = rng.choice(len(ids), size=len(trace), p=weights)
     return [dataclasses.replace(r, model_id=ids[d])
             for r, d in zip(trace, draws)]
+
+
+def shared_prefix_trace(trace: List[FleetRequest], prefix_len: int = 256,
+                        fanout: int = 4, n_prefixes: Optional[int] = None,
+                        seed: int = 0) -> List[FleetRequest]:
+    """Overlay a shared-prefix structure on an arrival ``trace``: each
+    request joins one of the prompt-prefix families (system prompts /
+    few-shot templates) and its prompt OPENS with that family's
+    ``prefix_len`` common tokens, followed by a unique tail.
+
+    * ``fanout`` -- mean requests per prefix family (the reuse degree);
+      ``n_prefixes`` overrides it with a fixed family count;
+    * prompts shorter than ``prefix_len + 1`` are lengthened to hold
+      the prefix plus at least one unique tail token (a real serving
+      stack never sees a prompt that is ONLY the cached template);
+    * the family draw is seeded separately from the arrival process so
+      the same arrivals replay under different sharing structures.
+
+    The *overlap fraction* -- the knob the prefix bench sweeps -- is
+    ``prefix_len / mean_prompt_len``.  Composes with every generator in
+    this module, like :func:`multimodel_trace`::
+
+        trace = shared_prefix_trace(poisson_trace(3.0, 60.0, seed=0),
+                                    prefix_len=256, fanout=8, seed=1)
+    """
+    assert prefix_len > 0 and fanout >= 1
+    if not trace:
+        return []
+    k = n_prefixes if n_prefixes is not None \
+        else max(int(round(len(trace) / fanout)), 1)
+    rng = np.random.default_rng(seed)
+    fams = rng.integers(0, k, size=len(trace))
+    return [dataclasses.replace(
+                r, prefix_id=int(f), prefix_len=prefix_len,
+                prompt_len=max(r.prompt_len, prefix_len + 1))
+            for r, f in zip(trace, fams)]
 
 
 def constant_trace(rate_rps: float, duration_s: float,

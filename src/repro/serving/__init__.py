@@ -1,8 +1,9 @@
 from repro.serving.disaggregation import (FleetPlan, PoolAssignment,
                                           homogeneous_baseline, plan_fleet)
-from repro.serving.engine import (LaneCheckpoint, PagePool, Request,
-                                  ServeEngine, dequantize_params,
+from repro.serving.engine import (LaneCheckpoint, PagePool, PrefixHit,
+                                  Request, ServeEngine, dequantize_params,
                                   quantize_params)
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.modelpool import (ModelEntry, ModelPool,
                                      MultiModelServeEngine, kv_page_bytes,
                                      params_nbytes)
@@ -15,7 +16,7 @@ from repro.serving.resilience import (AdmissionRejected, DegradationLadder,
                                       RetryPolicy)
 
 __all__ = ["FleetPlan", "LaneCheckpoint", "PagePool", "PoolAssignment",
-           "Workload",
+           "PrefixCache", "PrefixHit", "Workload",
            "ModelEntry", "ModelPool", "MultiModelServeEngine",
            "kv_page_bytes", "params_nbytes",
            "homogeneous_baseline", "plan_fleet", "Request", "ServeEngine",

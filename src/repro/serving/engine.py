@@ -57,21 +57,8 @@ from repro.models.transformer import (init_cache, init_paged_cache,
 from repro.obs.metrics import MetricsRegistry, StatsView
 from repro.obs.trace import SpanTracer
 from repro.quant.quantize import QTensor, dequantize, quantize
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.resilience import AdmissionRejected, DegradationLadder
-
-
-def __getattr__(name):
-    # legacy alias for the bare-RuntimeError admission failure run()
-    # used to raise; kept importable one release as a shim
-    if name == "AdmissionError":
-        import warnings
-        warnings.warn(
-            "repro.serving.engine.AdmissionError is deprecated; catch "
-            "repro.serving.AdmissionRejected (a RuntimeError subclass, "
-            "so existing handlers keep working) instead",
-            DeprecationWarning, stacklevel=2)
-        return AdmissionRejected
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ----------------------------------------------------------------------
@@ -125,10 +112,16 @@ class PagePool:
     * conservation -- ``n_free + n_in_use == n_pages`` at all times;
     * no double-free / no double-alloc -- page ids move between exactly
       two disjoint sets;
+    * refcounting -- every in-use page carries a refcount >= 1 (one per
+      holder: each mapping lane, plus the prefix cache when it caches
+      the page).  ``share`` adds a holder, ``free`` drops one; the page
+      returns to the free list only when the LAST holder lets go, so a
+      retiring lane can never free a page another lane still maps;
     * reservation safety -- ``reserve(n)`` promises ``n`` future
       ``alloc`` pages; ``available()`` (what admission gates on) never
       counts pages already promised to admitted requests, so a lane's
-      mid-generation growth cannot fail;
+      mid-generation growth (and its copy-on-write split of a shared
+      page, which draws on the same reservation) cannot fail;
     * zero fragmentation by construction -- pages are an unordered pool
       (the block table supplies ordering), so any free page serves any
       request: the free list can never be "too fragmented to admit";
@@ -136,7 +129,8 @@ class PagePool:
       (and unpromised) pages into a disabled set and ``grow(n)``
       returns them: the multi-model pool trades KV pages for weight
       residency without ever touching a page a lane holds or was
-      promised.
+      promised.  A shared page is in-use like any other: sharing pins
+      pages against shrink exactly as a live lane does.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -144,11 +138,14 @@ class PagePool:
         self.page_size = int(page_size)
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
         self._in_use: set = set()
+        self._refcount: Dict[int, int] = {}
         self._disabled: List[int] = []
         self._reserved = 0
         self.hwm = 0                 # high-water mark: in-use + reserved
         self.alloc_count = 0
         self.free_count = 0
+        self.share_count = 0
+        self.cow_count = 0
 
     @property
     def n_free(self) -> int:
@@ -190,15 +187,67 @@ class PagePool:
         self._reserved -= n
         pages = [self._free.pop() for _ in range(n)]
         self._in_use.update(pages)
+        for p in pages:
+            self._refcount[p] = 1
         self.alloc_count += n
         return pages
 
     def free(self, pages: List[int]) -> None:
+        """Drop one reference per page; a page returns to the free list
+        only when its LAST holder releases it (``free_count`` counts
+        physical returns, not reference drops)."""
         for p in pages:
             assert p in self._in_use, f"double free of page {p}"
-            self._in_use.remove(p)
-            self._free.append(p)
-        self.free_count += len(pages)
+            self._refcount[p] -= 1
+            if self._refcount[p] == 0:
+                del self._refcount[p]
+                self._in_use.remove(p)
+                self._free.append(p)
+                self.free_count += 1
+
+    def share(self, pages: List[int]) -> None:
+        """Add one reference per page: a second holder (another lane's
+        block table, or the prefix cache) now maps the same bytes."""
+        for p in pages:
+            assert p in self._in_use, f"share of unallocated page {p}"
+            self._refcount[p] += 1
+        self.share_count += len(pages)
+
+    def cow(self, page: int) -> int:
+        """Copy-on-write split: the caller gives up its reference on a
+        SHARED ``page`` and receives a fresh exclusive page in exchange,
+        drawn from its admission-time reservation (which is sized for
+        the lane's full footprint, so the split cannot fail mid-flight).
+        The caller copies the page contents and rewrites its block-table
+        entry; the other holders keep the original."""
+        assert page in self._in_use, f"cow of unallocated page {page}"
+        assert self._refcount[page] >= 2, "cow of an exclusively owned page"
+        assert self._reserved >= 1, "cow without a reservation"
+        self._reserved -= 1
+        new = self._free.pop()
+        self._in_use.add(new)
+        self._refcount[new] = 1
+        self._refcount[page] -= 1
+        self.alloc_count += 1
+        self.cow_count += 1
+        return new
+
+    def refcount(self, page: int) -> int:
+        """Holders of ``page`` (0 if free/disabled)."""
+        return self._refcount.get(page, 0)
+
+    def is_shared(self, page: int) -> bool:
+        return self._refcount.get(page, 0) >= 2
+
+    @property
+    def n_shared(self) -> int:
+        """In-use pages with more than one holder."""
+        return sum(1 for c in self._refcount.values() if c >= 2)
+
+    @property
+    def n_refs(self) -> int:
+        """Total references across all in-use pages."""
+        return sum(self._refcount.values())
 
     def shrink(self, n: int) -> int:
         """Retire up to ``n`` free, unpromised pages from the pool (the
@@ -242,6 +291,12 @@ class PagePool:
         registry.gauge(f"{prefix}.pages.frees",
                        fn=lambda: self.free_count,
                        help="cumulative page frees")
+        registry.gauge(f"{prefix}.pages.shared",
+                       fn=lambda: self.n_shared,
+                       help="in-use pages with more than one holder")
+        registry.gauge(f"{prefix}.pages.cow_splits",
+                       fn=lambda: self.cow_count,
+                       help="cumulative copy-on-write page splits")
 
     def check(self) -> None:
         """Assert the conservation invariant (test hook)."""
@@ -253,6 +308,8 @@ class PagePool:
         assert not self._in_use.intersection(self._disabled)
         assert not set(self._free).intersection(self._disabled)
         assert 0 <= self._reserved <= len(self._free)
+        assert set(self._refcount) == self._in_use
+        assert all(c >= 1 for c in self._refcount.values())
 
 
 # ----------------------------------------------------------------------
@@ -342,6 +399,33 @@ _POOL_KEYS = ("k_pages", "v_pages", "k_scale_pages", "v_scale_pages")
 _LANE0_KEYS = ("len", "block_tables")
 
 
+def prefix_sharing_supported(cfg: ModelConfig) -> bool:
+    """Whether ``cfg`` can serve with ``prefix_sharing=True``: the whole
+    prompt context must be page-resident and append-only.  Sliding-
+    window lanes rewrite their fixed page set in place (a shared page
+    would corrupt under the donor); recurrent families (ssm/hybrid)
+    keep prompt state outside the pool, so a mapped prefix would skip
+    rebuilding it."""
+    return (not cfg.is_encdec and not cfg.attn_free
+            and cfg.family != "hybrid" and cfg.sliding_window is None)
+
+
+@dataclasses.dataclass
+class PrefixHit:
+    """One admission's radix-cache match (see :class:`PrefixCache`)."""
+
+    pages: List[int]                     # full shared pages, block order
+    matched_len: int                     # prompt tokens covered in total
+    partial: Optional[Tuple[int, int]]   # (page, n_tokens) tail page
+
+    @property
+    def n_full(self) -> int:
+        """Full matched pages -- the lane's allocation discount (the
+        partial page is NOT discounted: its copy-on-write split draws a
+        fresh page from the reservation)."""
+        return len(self.pages)
+
+
 class ServeEngine:
     """Continuous batcher around the LM decode step (fixed-lane or paged).
 
@@ -377,6 +461,13 @@ class ServeEngine:
         "admit_rejected": "admit.rejected",
         "degrade_transitions": "degrade.transitions",
         "degrade_sheds": "degrade.sheds",
+        "prefix_hits": "prefix.hits",
+        "prefix_misses": "prefix.misses",
+        "prefix_tokens_matched": "prefix.tokens_matched",
+        "prefix_pages_shared": "prefix.pages_shared",
+        "prefix_pages_saved": "prefix.pages_saved",
+        "prefix_cow_copies": "prefix.cow_copies",
+        "prefix_evictions": "prefix.evictions",
     }
 
     def __init__(self, cfg: ModelConfig, params, n_lanes: int = 4,
@@ -384,6 +475,7 @@ class ServeEngine:
                  rng_seed: int = 0, dispatch_n: int = 8,
                  prefill_bucketing: bool = True, paged: bool = False,
                  page_size: int = 16, n_pages: Optional[int] = None,
+                 prefix_sharing: bool = False,
                  tracer: Optional[SpanTracer] = None,
                  registry: Optional[MetricsRegistry] = None,
                  name: str = "serve",
@@ -433,9 +525,19 @@ class ServeEngine:
             self._lane_pages: List[List[int]] = [[] for _ in range(n_lanes)]
             self._lane_reserved = [0] * n_lanes
             self._blocked_uids: set = set()
+            self.prefix_cache: Optional[PrefixCache] = None
+            if prefix_sharing:
+                assert prefix_sharing_supported(cfg), (
+                    "prefix sharing needs the whole prompt context "
+                    "page-resident and append-only (no sliding window, "
+                    "no recurrent state)")
+                assert "ssm_h" not in self.cache, \
+                    "prefix sharing: attention-backed paged caches only"
+                self.prefix_cache = PrefixCache(self.pool, page_size)
         else:
             self.pool = None
             self._bt_width = 0
+            self.prefix_cache = None
             self.cache = init_cache(cfg, n_lanes, max_len)
         self._len_host = np.zeros((n_lanes,), np.int64)
         self.lane_req: List[Optional[Request]] = [None] * n_lanes
@@ -469,6 +571,11 @@ class ServeEngine:
         self._stats = StatsView(self.registry, keymap)
         if self.paged:
             self.pool.bind_registry(self.registry, prefix=f"{name}.pool")
+        if self.prefix_cache is not None:
+            self.registry.gauge(
+                f"{name}.prefix.cached_pages",
+                fn=lambda: self.prefix_cache.n_pages,
+                help="pool pages the radix prompt cache holds a ref on")
         self._decode = jax.jit(
             lambda p, c, t: self.model.decode_step(p, c, t))
         self._temperature = self.temperature      # captured, see above
@@ -559,35 +666,63 @@ class ServeEngine:
         if not lanes:
             return False
         lane = lanes[0]
+        hit: Optional[PrefixHit] = None
         if self.paged:
             need = self.admission_pages(req)
-            if not self.pool.reserve(need):
-                # a lane is free but the KV bytes are not: admission is
-                # gated on pages, the caller retries after retirements.
-                # Counted once per blocked EPISODE (not per retry), so
-                # the stat is dispatch-granularity invariant.
-                if req.uid not in self._blocked_uids:
-                    self._blocked_uids.add(req.uid)
-                    self.stats["kv_admit_blocked"] += 1
-                    self.tracer.instant("admit.blocked",
-                                        track=self.lane_track(lane),
-                                        uid=req.uid, need_pages=need)
-                return False
+            reserve = need
+            if self.prefix_cache is not None:
+                hit = self._prefix_match(req)
+                # every FULL matched page is a page this request never
+                # allocates: the reservation (what admission gates on)
+                # shrinks by exactly that, which is the effective-
+                # admission gain the bench measures
+                reserve = need - hit.n_full
+            if not self.pool.reserve(reserve):
+                if self.prefix_cache is not None \
+                        and self.prefix_cache.n_pages:
+                    # under pool pressure, cached-but-unmapped prefix
+                    # pages are the first bytes to go; eviction may
+                    # drop matched nodes (their pages can be reissued
+                    # once the last holder lets go), so re-match after
+                    self._trim_prefix_cache(reserve)
+                    hit = self._prefix_match(req)
+                    reserve = need - hit.n_full
+                if not self.pool.reserve(reserve):
+                    # a lane is free but the KV bytes are not: admission
+                    # is gated on pages, the caller retries after
+                    # retirements.  Counted once per blocked EPISODE
+                    # (not per retry), so the stat is dispatch-
+                    # granularity invariant.
+                    if req.uid not in self._blocked_uids:
+                        self._blocked_uids.add(req.uid)
+                        self.stats["kv_admit_blocked"] += 1
+                        self.tracer.instant("admit.blocked",
+                                            track=self.lane_track(lane),
+                                            uid=req.uid, need_pages=need)
+                    return False
             self._blocked_uids.discard(req.uid)
         with self.tracer.span("admit", track=self.lane_track(lane),
                               uid=req.uid):
             if self.paged:
-                self._lane_reserved[lane] = need
+                self._lane_reserved[lane] = reserve
                 self._lane_pages[lane] = []
-                # map the prompt's pages (plus the first decode write
-                # slot); generation growth maps the rest at dispatch
-                # boundaries
-                self._map_pages(lane, self._pages_needed(
-                    self._trunc_plen(req) + 1))
+                if hit is None or hit.matched_len == 0:
+                    # map the prompt's pages (plus the first decode
+                    # write slot); generation growth maps the rest at
+                    # dispatch boundaries
+                    self._map_pages(lane, self._pages_needed(
+                        self._trunc_plen(req) + 1))
             self._lane_seed = self._lane_seed.at[lane].set(
                 self._admit_count)
             self._tok_idx = self._tok_idx.at[lane].set(0)
-            self._prefill_into_lane(req, lane)
+            if hit is not None and hit.matched_len > 0:
+                self._prefill_hit(req, lane, hit)
+            else:
+                if self.prefix_cache is not None:
+                    self.stats["prefix_misses"] += 1
+                self._prefill_into_lane(req, lane)
+            if self.prefix_cache is not None:
+                self._cache_lane_prefix(req, lane)
             self.lane_req[lane] = req
             self._remaining = self._remaining.at[lane].set(
                 req.max_new_tokens)
@@ -611,6 +746,162 @@ class ServeEngine:
             .set(jnp.asarray(new, jnp.int32)))
         self.stats["kv_pages_hwm"] = max(self.stats["kv_pages_hwm"],
                                          self.pool.hwm)
+
+    # -- prefix sharing ----------------------------------------------------
+    def _trunc_prompt(self, req: Request) -> np.ndarray:
+        """The prompt as the lane will actually hold it: a fixed cache
+        cannot back more than ``max_len - 1`` prompt positions and still
+        decode, so over-long prompts keep their TAIL (coherent
+        positions/KV, llama.cpp-style truncation)."""
+        prompt = req.prompt
+        limit = self.max_len - 1
+        if prompt.shape[0] > limit:
+            prompt = prompt[-limit:]
+        return prompt
+
+    def _prefix_match(self, req: Request) -> PrefixHit:
+        """Match the (truncated) prompt against the radix cache.  int8
+        caches match FULL pages only: the hit path replays the batched
+        full-precision prefill for the logits (see ``_prefill_hit``),
+        and a partial page would save nothing while still costing a
+        copy-on-write split."""
+        prompt = self._trunc_prompt(req)
+        pages, matched, partial = self.prefix_cache.match(
+            np.asarray(prompt),
+            allow_partial=self.cfg.kv_quant != "int8")
+        return PrefixHit(pages=pages, matched_len=matched, partial=partial)
+
+    def _trim_prefix_cache(self, target_available: int) -> int:
+        """Evict LRU cache entries until the pool can cover a
+        ``target_available``-page reservation (or the cache is empty).
+        A dropped page only refills the free list if no live lane still
+        maps it, hence the loop on actual availability."""
+        dropped = 0
+        while (self.pool.available() < target_available
+               and self.prefix_cache.n_pages):
+            if not self.prefix_cache.evict_lru():
+                break
+            dropped += 1
+            self.stats["prefix_evictions"] += 1
+        return dropped
+
+    def _prefill_hit(self, req: Request, lane: int, hit: PrefixHit) -> None:
+        """Admit ``req`` over a radix-cache hit: map the matched pages
+        into the lane's block table (refcount bump, zero copies), then
+        produce the prompt's last-token logits.
+
+        * full-precision KV: only the unmatched TAIL streams through
+          the decode step (the masked-scan prefill path) -- zero new
+          prefill work for the matched span.  A matched partial tail
+          page is copy-on-written first: this lane's first append
+          diverges from the donor's.
+        * int8 KV: the decode step reads DEQUANTIZED pages, so a
+          streamed tail would attend to lossy prefix KV while the
+          non-shared engine's batched prefill attends at full
+          precision -- the first token would drift.  The batched
+          prefill replays for the logits (bit-exact by construction)
+          and only the tail pages are scattered; the page/admission
+          saving stands, the prefill-compute saving does not.
+        """
+        prompt = self._trunc_prompt(req)
+        plen = int(prompt.shape[0])
+        shared = list(hit.pages)
+        if hit.partial is not None:
+            shared.append(hit.partial[0])
+        # the lane takes its own reference on every matched page; the
+        # block-table row is written in logical order, so evict's
+        # position-ordered gather needs no special case
+        self.pool.share(shared)
+        self._lane_pages[lane] = list(shared)
+        self.cache["block_tables"] = (
+            self.cache["block_tables"].at[lane, :len(shared)]
+            .set(jnp.asarray(shared, jnp.int32)))
+        if hit.partial is not None:
+            self._cow_lane_page(lane, len(hit.pages))
+        self._map_pages(lane, self._pages_needed(plen + 1))
+        self._len_host[lane] = plen
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_tokens_matched"] += hit.matched_len
+        self.stats["prefix_pages_shared"] += len(shared)
+        self.stats["prefix_pages_saved"] += hit.n_full
+        self.tracer.instant("prefix.hit", track=self.lane_track(lane),
+                            uid=req.uid, matched_tokens=hit.matched_len,
+                            shared_pages=len(shared))
+        if self.cfg.kv_quant == "int8":
+            self._prefill_hit_quant(prompt, lane, plen, hit)
+        else:
+            self._prefill_hit_stream(prompt, lane, plen, hit.matched_len)
+
+    def _cow_lane_page(self, lane: int, idx: int) -> None:
+        """Copy-on-write split of the lane's shared block ``idx``: swap
+        in a fresh page from the reservation, snapshot the shared
+        page's contents into it (jax arrays are immutable, so the copy
+        is a true point-in-time snapshot even while the donor keeps
+        appending to the original), and retarget the block table."""
+        old = self._lane_pages[lane][idx]
+        with self.tracer.span("prefix.cow", track=self.lane_track(lane),
+                              page=old):
+            new = self.pool.cow(old)
+            self._lane_reserved[lane] -= 1
+            self._lane_pages[lane][idx] = new
+            for key in _POOL_KEYS:
+                if key in self.cache:
+                    self.cache[key] = self.cache[key].at[:, new].set(
+                        self.cache[key][:, old])
+            self.cache["block_tables"] = (
+                self.cache["block_tables"].at[lane, idx].set(new))
+        self.stats["prefix_cow_copies"] += 1
+        self.stats["kv_pages_hwm"] = max(self.stats["kv_pages_hwm"],
+                                         self.pool.hwm)
+
+    def _prefill_hit_stream(self, prompt: np.ndarray, lane: int,
+                            plen: int, matched_len: int) -> None:
+        """Full-precision hit path: stream only the unmatched tail
+        through the masked-scan decode path, attending over the shared
+        span already page-resident.  Bit-exactness vs the batched
+        prefill is pinned by the prefix exactness tests."""
+        tail = np.asarray(prompt[matched_len:], np.int32)
+        tlen = int(tail.shape[0])
+        assert tlen >= 1, "prefix match must leave a tail token"
+        lane_cache = self._slice_lane_cache(lane)
+        lane_cache["len"] = jnp.full((1,), matched_len, jnp.int32)
+        bucket = _bucket_len(tlen) if self.prefill_bucketing else tlen
+        padded = np.zeros((bucket,), np.int32)
+        padded[:tlen] = tail
+        with self.tracer.span("prefix.tail_prefill",
+                              track=self.lane_track(lane),
+                              bucket=bucket, tlen=tlen):
+            logits, lane_cache = self._ssm_prefill(
+                self.params, lane_cache, jnp.asarray(padded),
+                jnp.asarray(tlen, jnp.int32))
+        self._merge_lane_cache(lane_cache, lane)
+        self._set_first_token(logits, lane)
+
+    def _prefill_hit_quant(self, prompt: np.ndarray, lane: int,
+                           plen: int, hit: PrefixHit) -> None:
+        """int8 hit path: batched prefill for exact logits, scatter
+        only the blocks the match did not cover."""
+        bucket = _bucket_len(plen) if self.prefill_bucketing else plen
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :plen] = prompt
+        with self.tracer.span("prefill.bucket",
+                              track=self.lane_track(lane),
+                              bucket=bucket, plen=plen):
+            logits, kv = self._prefill(self.params, jnp.asarray(padded),
+                                       jnp.asarray([plen - 1], jnp.int32))
+            self._scatter_prompt_paged(kv, lane, plen,
+                                       first_block=hit.n_full)
+        self.cache["len"] = self.cache["len"].at[lane].set(plen)
+        self._set_first_token(logits, lane)
+
+    def _cache_lane_prefix(self, req: Request, lane: int) -> None:
+        """Offer the freshly prefilled lane's prompt pages to the radix
+        cache (the cache takes its own refs on pages it keeps)."""
+        prompt = self._trunc_prompt(req)
+        self.prefix_cache.insert(
+            np.asarray(prompt), int(prompt.shape[0]),
+            self._lane_pages[lane],
+            allow_partial=self.cfg.kv_quant != "int8")
 
     def _prefill_into_lane(self, req: Request, lane: int) -> None:
         prompt = req.prompt
@@ -681,10 +972,13 @@ class ServeEngine:
                 self.cache[key], val[:, None].astype(self.cache[key].dtype),
                 (0, lane, 0, 0, 0))
 
-    def _scatter_prompt_paged(self, kv, lane: int, plen: int) -> None:
+    def _scatter_prompt_paged(self, kv, lane: int, plen: int,
+                              first_block: int = 0) -> None:
         """Write the prompt KV into the lane's mapped pages (one
         dynamic_update_slice per page -- pages are not contiguous in the
-        pool, that is the point)."""
+        pool, that is the point).  ``first_block`` skips blocks already
+        backed by shared prefix pages: their bytes are the donor's, and
+        writing them would corrupt every other lane mapping them."""
         ps = self.page_size
         entries, take = self._prompt_kv_views(kv, plen, ps * self._bt_width)
         n_pg = -(-take // ps)
@@ -695,6 +989,8 @@ class ServeEngine:
         key_map = {"k": "k_pages", "v": "v_pages",
                    "k_scale": "k_scale_pages", "v_scale": "v_scale_pages"}
         for i, page in enumerate(self._lane_pages[lane][:n_pg]):
+            if i < first_block:
+                continue
             for key, val in entries.items():
                 pk = key_map[key]
                 seg = val[:, None, :, i * ps:(i + 1) * ps]
@@ -854,11 +1150,13 @@ class ServeEngine:
     def _release_lane(self, lane: int) -> None:
         """Return a lane to the DEAD state (retirement and eviction both
         end here): zero its cache length so the length-aware kernel pins
-        a single key block instead of streaming the stale context, free
-        its pages, and point the dead block-table row at the scratch
-        page -- its page ids may be re-issued to another lane, but the
-        dead lane keeps stepping (and writing its frozen slot) until
-        re-admission."""
+        a single key block instead of streaming the stale context, drop
+        the lane's reference on its pages (a page another lane or the
+        prefix cache still maps survives; exclusively-owned pages return
+        to the free list), and point the dead block-table row at the
+        scratch page -- its page ids may be re-issued to another lane,
+        but the dead lane keeps stepping (and writing its frozen slot)
+        until re-admission."""
         self.lane_req[lane] = None
         self.cache["len"] = self.cache["len"].at[lane].set(0)
         self._len_host[lane] = 0
@@ -894,6 +1192,15 @@ class ServeEngine:
 
         The scratch page is dead-lane plumbing, not request state: it is
         never captured, never freed, never migrated.
+
+        Prefix-shared pages: the gather is a DEEP COPY through the block
+        table, so a page this lane maps but does not exclusively own
+        (refcount > 1: the radix cache or a sibling lane also holds it)
+        is captured by value and never stolen -- releasing the lane
+        merely drops its reference, the other holders keep the bytes,
+        and :meth:`restore` re-anchors the checkpoint onto fresh
+        exclusively-owned pages.  Cross-engine restore of a prefix-hit
+        lane is pinned bit-exact by the prefix test tier.
         """
         assert self.paged, "evict/restore: paged engines only"
         req = self.lane_req[lane]

@@ -47,7 +47,8 @@ from repro.models.common import ModelConfig
 from repro.obs.metrics import MetricsRegistry, StatsView
 from repro.obs.trace import SpanTracer
 from repro.quant.quantize import QTensor
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import (Request, ServeEngine,
+                                  prefix_sharing_supported)
 from repro.serving.phase_model import link_transfer_seconds
 
 
@@ -269,6 +270,7 @@ class MultiModelServeEngine:
                  max_len: int = 64, temperature: float = 0.0,
                  rng_seed: int = 0, dispatch_n: int = 8,
                  prefill_bucketing: bool = True,
+                 prefix_sharing: bool = False,
                  tracer: Optional[SpanTracer] = None,
                  registry: Optional[MetricsRegistry] = None,
                  name: str = "mm"):
@@ -279,6 +281,10 @@ class MultiModelServeEngine:
         self.rng_seed = rng_seed
         self.dispatch_n = dispatch_n
         self.prefill_bucketing = prefill_bucketing
+        # per-model radix prompt caches: each inner engine gets its own
+        # (prefixes never match across models), dropped whole when the
+        # model's weights unload
+        self.prefix_sharing = bool(prefix_sharing)
         self.engines: Dict[str, ServeEngine] = {}
         # one registry for the whole board: the byte pool, this engine,
         # and every inner per-model ServeEngine (namespaced by model id)
@@ -335,6 +341,15 @@ class MultiModelServeEngine:
     def _unload(self, model_id: str) -> None:
         eng = self.engines.pop(model_id)
         assert not eng.live_lanes(), f"unload of live model {model_id}"
+        if eng.prefix_cache is not None:
+            # cache invalidation on weight unload: cached pages index
+            # KV this model computed -- a reload gets a cold cache, and
+            # the refs must drop NOW or the zero-KV-charge assert below
+            # (and the byte budget) would see phantom in-use pages
+            eng.prefix_cache.flush()
+            eng.pool.check()
+            assert eng.pool.n_in_use == 0, \
+                f"unload of {model_id} with pages still referenced"
         entry = self.pool.entries[model_id]
         # preserve the sampling lineage and accumulate stats so a
         # reload continues exactly where this residency stopped
@@ -362,8 +377,15 @@ class MultiModelServeEngine:
             lack = -(-(need_bytes - self.pool.free_bytes())
                      // entry.page_bytes)
             floor = self._bt_width(entry.cfg)
-            can = max(self.engines[other].pool.n_active - floor, 0)
-            shrunk = self.engines[other].pool.shrink(min(lack, can))
+            oeng = self.engines[other]
+            want = min(lack, max(oeng.pool.n_active - floor, 0))
+            if oeng.prefix_cache is not None \
+                    and oeng.pool.available() < want:
+                # shrink only takes free unpromised pages; pages pinned
+                # by the victim's prefix cache are reclaimable bytes --
+                # drop cache entries (LRU) until the shrink can land
+                oeng._trim_prefix_cache(want)
+            shrunk = oeng.pool.shrink(want)
             if shrunk:
                 self.stats["kv_pages_shrunk"] += shrunk
                 self._charge(other)
@@ -440,6 +462,9 @@ class MultiModelServeEngine:
                               prefill_bucketing=self.prefill_bucketing,
                               paged=True, page_size=self.pool.page_size,
                               n_pages=dense if dense else None,
+                              prefix_sharing=(
+                                  self.prefix_sharing
+                                  and prefix_sharing_supported(entry.cfg)),
                               tracer=self.tracer, registry=self.registry,
                               name=model_id)
             # physical array at the dense target, pool shrunk to the

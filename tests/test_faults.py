@@ -19,7 +19,7 @@ never tokens":
   -> evict in order, de-escalates on cooldown, and never changes the
   token streams; admission failures surface as structured
   :class:`AdmissionRejected` (with the legacy ``RuntimeError`` contract
-  and the deprecated ``AdmissionError`` alias intact).
+  intact; the old ``AdmissionError`` alias is gone).
 """
 
 import dataclasses
@@ -223,11 +223,10 @@ class TestAdmissionRejected:
         assert back.retry_after_s == pytest.approx(0.2)
         assert "backpressure" in str(back)
 
-    def test_deprecated_alias(self):
+    def test_legacy_alias_removed(self):
         import repro.serving.engine as engine_mod
-        with pytest.warns(DeprecationWarning, match="AdmissionError"):
-            alias = engine_mod.AdmissionError
-        assert alias is AdmissionRejected
+        with pytest.raises(AttributeError):
+            engine_mod.AdmissionError
 
 
 # ----------------------------------------------------------------------

@@ -274,22 +274,28 @@ def test_pagepool_shrink_grow_respects_reservations():
 
 
 def test_pagepool_randomized_invariants():
-    """Randomized reserve/alloc/free/unreserve/shrink/grow sequences:
-    conservation, no double-issue, and reservation safety hold after
-    every operation (hypothesis)."""
+    """Randomized reserve/alloc/share/cow/free/unreserve/shrink/grow
+    sequences: conservation, no double-issue, reservation safety, and
+    the refcount invariants hold after every operation (hypothesis).
+
+    ``live`` models outstanding REFERENCES (a shared page appears once
+    per holder), so the checks pin exactly the prefix-sharing contract:
+    a page is physically freed only when its last reference drops
+    (never double-freed, never freed while rc > 0), reference totals
+    match the pool's refcounts, and accounting sums to capacity."""
     pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     ops = st.lists(st.tuples(
-        st.sampled_from(["reserve", "alloc", "free", "unreserve",
-                         "shrink", "grow"]),
+        st.sampled_from(["reserve", "alloc", "share", "cow", "free",
+                         "unreserve", "shrink", "grow"]),
         st.integers(0, 9)), max_size=80)
 
     @given(ops, st.integers(1, 24))
     @settings(max_examples=60, deadline=None)
     def run(seq, n_pages):
         pool = PagePool(n_pages, PAGE)
-        live = []
+        live = []                       # one entry per reference
         for op, n in seq:
             if op == "reserve":
                 before = pool.available()
@@ -297,6 +303,19 @@ def test_pagepool_randomized_invariants():
             elif op == "alloc":
                 k = min(n, pool._reserved, pool.n_free)
                 live.extend(pool.alloc(k))
+            elif op == "share":
+                pages = live[-min(n, len(live)):] if n else []
+                pool.share(pages)
+                live.extend(pages)
+            elif op == "cow":
+                shared = sorted(p for p in set(live)
+                                if pool.refcount(p) >= 2)
+                if shared and pool._reserved >= 1 and pool.n_free >= 1:
+                    old = shared[n % len(shared)]
+                    new = pool.cow(old)
+                    assert new != old and pool.refcount(new) == 1
+                    live.remove(old)    # one holder moved to the copy
+                    live.append(new)
             elif op == "free":
                 k = min(n, len(live))
                 pool.free([live.pop() for _ in range(k)])
@@ -310,7 +329,12 @@ def test_pagepool_randomized_invariants():
                 assert got <= n
             pool.check()                           # conservation, always
             assert pool.available() >= 0
-            assert pool.n_in_use == len(live)
+            # distinct pages in use == distinct live references;
+            # refcounts account for every holder exactly once
+            assert pool.n_in_use == len(set(live))
+            assert pool.n_refs == len(live)
+            assert all(pool.refcount(p) == live.count(p)
+                       for p in set(live))
         pool.free(live)
         pool.grow(pool.n_pages)
         pool.unreserve(pool._reserved)

@@ -409,9 +409,10 @@ def test_calibration_gate_on_real_replay(small_model):
     assert not calibrate_replay(real, pert).ok
 
 
-def test_execution_result_spill_alias_deprecated(small_model):
-    """kv_spill_events aliased the engine's blocked-admission counter;
-    the field is now kv_admit_blocked with a deprecation shim."""
+def test_execution_result_spill_alias_removed(small_model):
+    """kv_spill_events once aliased the engine's blocked-admission
+    counter; the alias is gone (the simulator's counter of that name is
+    a DIFFERENT event) -- only kv_admit_blocked remains."""
     from repro.fleet.execution import run_trace_on_engine
     from repro.fleet.workload import FleetRequest
 
@@ -420,8 +421,8 @@ def test_execution_result_spill_alias_deprecated(small_model):
              for i in range(3)]
     res = run_trace_on_engine(trace, cfg, params, n_lanes=2, max_len=64,
                               dispatch_n=4, paged=True, page_size=8)
-    with pytest.warns(DeprecationWarning, match="kv_admit_blocked"):
-        assert res.kv_spill_events == res.kv_admit_blocked
+    assert res.kv_admit_blocked >= 0
+    assert not hasattr(res, "kv_spill_events")
 
 
 def test_validators_emit_verdict_events(small_model):

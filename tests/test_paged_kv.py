@@ -348,7 +348,7 @@ def test_execution_replay_reports_page_stats(small_model):
                                 dispatch_n=4, paged=True, page_size=8)
     assert paged.gen_by_uid == dense.gen_by_uid
     assert paged.kv_pages_hwm > 0
-    assert dense.kv_pages_hwm == 0 and dense.kv_spill_events == 0
+    assert dense.kv_pages_hwm == 0 and dense.kv_admit_blocked == 0
 
 
 def test_ssm_prefill_scan_matches_eager(small_model):
