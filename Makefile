@@ -20,6 +20,13 @@
 # (PagePool refcounts, radix prompt cache, CoW splits, shared-prefix
 # exactness incl. evict/restore of prefix-hit lanes, cache flush on
 # weight unload).
+# `make test-analysis` runs the static-analysis layer (lint rules on
+# synthetic snippets + the repo's own src/, sanitizer seeded-mutation
+# detection, interleaving-checker exhaustive sweep, always-on
+# invariants incl. the `python -O` subprocess pin).
+# `make lint` runs the project lint (R001-R005) over src/ and fails on
+# any unsuppressed finding -- the same gate test_analysis pins.
+# `make check` is the umbrella: lint + the fast test tier.
 # `make bench-smoke` runs the measured decode-path bench on a tiny config
 # and emits BENCH_decode.json (tokens/s, dispatches/token, bytes/token,
 # and the paged section: admission capacity, paged-vs-dense token parity,
@@ -32,12 +39,14 @@
 # the prefix section fails its gates (shared-prefix streams must stay
 # bit-exact, a cache hit must beat the miss TTFT, pages-saved > 0, and
 # effective admission must reach >= 2x the no-sharing baseline at the
-# bench's 50% overlap point).
+# bench's 50% overlap point), or the sanitize section fails (a fully
+# sanitized shared-prefix run must report zero lifecycle violations,
+# identical streams, and < 5% steady-state decode overhead).
 
 PYTEST := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest
 PYRUN  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast test-paged test-preempt test-multimodel test-obs test-faults test-prefix bench bench-smoke
+.PHONY: test test-fast test-paged test-preempt test-multimodel test-obs test-faults test-prefix test-analysis lint check bench bench-smoke
 
 test:
 	$(PYTEST) -x -q
@@ -62,6 +71,14 @@ test-faults:
 
 test-prefix:
 	$(PYTEST) -q -m prefix
+
+test-analysis:
+	$(PYTEST) -q -m analysis
+
+lint:
+	$(PYRUN) -m repro.analysis.lint src/
+
+check: lint test-fast
 
 bench:
 	$(PYRUN) -m benchmarks.run

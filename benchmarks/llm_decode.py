@@ -712,6 +712,73 @@ def prefix_metrics(cfg, params, *, n_lanes: int, max_len: int,
     }
 
 
+def sanitize_metrics(cfg, params, prompts, *, n_lanes: int, max_len: int,
+                     max_new: int, dispatch_n: int, page_size: int) -> dict:
+    """Sanitizer section of BENCH_decode.json.
+
+    The page-lifecycle sanitizer (``ServeEngine(sanitize=True)``) is an
+    always-on-capable production guard, so the bench holds it to two
+    gates: a real shared-prefix workload (prefill, prefix hits, CoW
+    splits) runs with ZERO violations and bit-identical streams, and
+    the steady-state decode overhead vs the unsanitized engine stays
+    under 5% (warm-then-timed on the same engine, like the headline
+    tokens/s number).  Also pins the OFF mode to its contract: no
+    monitor attached, one attribute check on the hot path.
+    """
+    import numpy as np
+    from repro.serving import Request, ServeEngine
+
+    ps = page_size
+    rng = np.random.default_rng(13)
+    head = rng.integers(0, cfg.vocab_size, 2 * ps, dtype=np.int32)
+    family = [np.concatenate([head,
+                              rng.integers(0, cfg.vocab_size, 4 + i,
+                                           dtype=np.int32)])
+              for i in range(len(prompts))]
+
+    def serve(sanitize):
+        # warm and time the SAME engine (see decode_path_metrics)
+        eng = ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
+                          dispatch_n=dispatch_n, paged=True,
+                          page_size=ps, prefix_sharing=True,
+                          sanitize=sanitize)
+        eng.run([Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+                 for i, p in enumerate(family)])
+        eng.stats = {k: 0 for k in eng.stats}
+        reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+                for i, p in enumerate(family)]
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
+        streams = [tuple(r.generated) for r in reqs]
+        hits = eng.stats["prefix_hits"]
+        tps = eng.stats["generated_tokens"] / dt
+        eng.prefix_cache.flush()
+        eng.pool.check()
+        leak_free = eng.pool.n_in_use == 0
+        san = eng._sanitizer
+        if san is not None:
+            san.crosscheck(eng.pool)
+        return streams, tps, hits, leak_free, eng, san
+
+    base_streams, base_tps, _, base_leak, base_eng, _ = serve(False)
+    streams, tps, hits, leak_free, eng, san = serve(True)
+
+    return {
+        "page_size": ps,
+        "token_exact_vs_unsanitized": streams == base_streams,
+        "violations": len(san.violations),
+        "ops_checked": san.ops_seen,
+        "prefix_hits": int(hits),
+        "pool_leak_free": bool(base_leak and leak_free),
+        "off_mode_monitor_detached": base_eng.pool.monitor is None
+        and base_eng._sanitizer is None,
+        "tokens_per_s_off": round(base_tps, 2),
+        "tokens_per_s_on": round(tps, 2),
+        "overhead_frac": round(1.0 - tps / base_tps, 4),
+    }
+
+
 def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
                         max_len: int = 64, prompt_len: int = 8,
                         max_new: int = 16, n_requests: int = 8,
@@ -839,6 +906,11 @@ def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
                                        dispatch_n=dispatch_n,
                                        page_size=bk),
         "faults": faults_metrics(cfg, params),
+        "sanitize": sanitize_metrics(cfg, params, prompts,
+                                     n_lanes=n_lanes, max_len=max_len,
+                                     max_new=max_new,
+                                     dispatch_n=dispatch_n,
+                                     page_size=bk),
     }
 
 
@@ -948,12 +1020,26 @@ def main(argv=None) -> int:
         and sim["with_recovery"]["straggler_flags"] >= 1
         and sim["without_recovery"]["requests_lost"] > 0)
     ok = ok and flt_ok
+    san = rec.get("sanitize", {})
+    san_ok = (
+        bool(san)
+        # the sanitizer is a mirror, not a model change
+        and san["token_exact_vs_unsanitized"]
+        and san["violations"] == 0
+        and san["ops_checked"] > 0
+        and san["prefix_hits"] > 0           # CoW path actually ran
+        and san["pool_leak_free"]
+        and san["off_mode_monitor_detached"]
+        # steady-state decode overhead sanitize-on stays under 5%
+        and san["overhead_frac"] < 0.05)
+    ok = ok and san_ok
     print("BENCH_decode paged section:", "PASS" if paged_ok else "FAIL")
     print("BENCH_decode prefix section:", "PASS" if pfx_ok else "FAIL")
     print("BENCH_decode migration section:", "PASS" if mig_ok else "FAIL")
     print("BENCH_decode multimodel section:", "PASS" if mm_ok else "FAIL")
     print("BENCH_decode telemetry section:", "PASS" if tel_ok else "FAIL")
     print("BENCH_decode faults section:", "PASS" if flt_ok else "FAIL")
+    print("BENCH_decode sanitize section:", "PASS" if san_ok else "FAIL")
     print("BENCH_decode:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -1,0 +1,24 @@
+"""repro.analysis: project lint, page-lifecycle sanitizer, invariants.
+
+Three parts (see ``docs/lint_rules.md`` and the README's "Static
+analysis & sanitizers" section):
+
+* :mod:`repro.analysis.invariants` -- :class:`InvariantError` /
+  :func:`invariant`: always-on structured replacements for the bare
+  ``assert`` invariants in allocator/lifecycle code;
+* :mod:`repro.analysis.lint` -- repo-specific AST rules R001-R005
+  (``python -m repro.analysis.lint src/``);
+* :mod:`repro.analysis.sanitizer` -- :class:`PageSanitizer`, the
+  shadow-state model behind ``ServeEngine(sanitize=True)`` and the
+  offline ``pages.jsonl`` replay;
+* :mod:`repro.analysis.interleave` -- the bounded lifecycle
+  interleaving explorer.  NOT imported here (it imports the engine,
+  which imports ``invariants``); import it explicitly.
+"""
+
+from repro.analysis.invariants import InvariantError, invariant
+from repro.analysis.sanitizer import (PageSanitizer, SanitizerError,
+                                      Violation, load_jsonl)
+
+__all__ = ["InvariantError", "invariant", "PageSanitizer",
+           "SanitizerError", "Violation", "load_jsonl"]

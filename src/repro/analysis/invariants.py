@@ -1,0 +1,60 @@
+"""Always-on structured invariants for allocator / lifecycle code.
+
+The page allocator and lane lifecycle used to enforce their invariants
+with bare ``assert`` statements -- stripped to nothing under
+``python -O``, which is exactly the mode a throughput deployment might
+run in.  A silent double-free or shared-page write corrupts every
+stream sharing that page; the check that would have caught it must not
+be optional.
+
+:func:`invariant` is the replacement: an ordinary ``if``/``raise``
+(nothing the interpreter can strip) raising :class:`InvariantError`
+with the failed condition's context attached as structured fields.
+
+:class:`InvariantError` deliberately subclasses ``AssertionError`` --
+the same compatibility move :class:`~repro.serving.resilience.
+AdmissionRejected` made for ``RuntimeError``: every pre-existing
+``except AssertionError`` / ``pytest.raises(AssertionError)`` call
+site written against the bare asserts keeps working, while new callers
+read ``.context`` instead of parsing the message.  Unlike a bare
+assert, it is raised unconditionally.
+
+Lint rule R001 (``repro.analysis.lint``) flags any bare ``assert``
+remaining in the allocator/lifecycle modules.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+__all__ = ["InvariantError", "invariant"]
+
+
+class InvariantError(AssertionError):
+    """A runtime invariant does not hold.
+
+    Structured fields:
+
+    * ``message`` -- the human-readable statement of the invariant;
+    * ``context`` -- the values that witnessed the violation (page ids,
+      refcounts, reservation counters ...), attached as a dict so a
+      fleet supervisor can log them without parsing the string.
+    """
+
+    def __init__(self, message: str, **context: Any):
+        self.message = message
+        self.context: Dict[str, Any] = dict(context)
+        if context:
+            detail = ", ".join(f"{k}={v!r}" for k, v in context.items())
+            message = f"{message} ({detail})"
+        super().__init__(message)
+
+
+def invariant(cond: Any, message: str, **context: Any) -> None:
+    """Raise :class:`InvariantError` unless ``cond`` is truthy.
+
+    A plain ``if``/``raise`` -- survives ``python -O`` (pinned by the
+    assertions-disabled subprocess test in ``tests/test_analysis.py``).
+    """
+    if not cond:
+        raise InvariantError(message, **context)

@@ -1,0 +1,375 @@
+"""Project lint: repo-specific AST rules for the serving stack.
+
+Generic linters cannot know that a bare ``assert`` in the page
+allocator is a latent double-free under ``python -O``, or that an
+unsorted ``set`` iteration in the fleet scheduler silently breaks
+byte-identical replay.  This pass encodes the project's own invariants
+as five rules:
+
+====  ==============================================================
+R001  invariant-by-``assert`` in allocator/lifecycle code -- must be
+      an always-on :func:`repro.analysis.invariants.invariant` raise
+R002  host-sync calls (``.item()``, ``np.asarray``,
+      ``block_until_ready``, ``float()``) inside jit/scan dispatch
+      regions -- each one is a device round-trip per dispatch
+R003  unseeded randomness or wall-clock (``random.*``,
+      ``time.time``/``monotonic``/``perf_counter``,
+      ``np.random.<fn>`` module-level) in the deterministic sim and
+      faults layers
+R004  bare ``RuntimeError``/``Exception`` raised in serving paths --
+      use structured exceptions (``AdmissionRejected``,
+      ``InvariantError``) the fleet can route on
+R005  unsorted iteration over sets (scheduling layers) or dict views
+      (``FleetSim``) that feeds sim event order or lane scheduling
+====  ==============================================================
+
+Suppression: append ``# lint: ok R003 <reason>`` to the flagged line
+(or the line above).  A suppression without a reason is itself a
+finding.  Run::
+
+    python -m repro.analysis.lint src/ [--json]
+
+Exit status is 0 iff there are no unsuppressed findings.  The JSON
+report (``--json``) is machine-readable: one object per finding with
+``rule``, ``path``, ``line``, ``message``, ``suppressed``, ``reason``.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+import sys
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Set
+
+__all__ = ["Finding", "lint_source", "lint_paths", "main", "RULES"]
+
+RULES = {
+    "R001": "bare assert in allocator/lifecycle code (stripped by -O)",
+    "R002": "host sync inside a jit/scan dispatch region",
+    "R003": "unseeded randomness or wall-clock in deterministic layers",
+    "R004": "bare RuntimeError/Exception raised in a serving path",
+    "R005": "unsorted set/dict iteration feeding event order",
+}
+
+# Which files each rule patrols, by path suffix (POSIX, relative or
+# absolute).  Synthetic test snippets opt in via lint_source(rules=...).
+RULE_PATHS = {
+    "R001": ("serving/engine.py", "serving/prefix_cache.py",
+             "serving/modelpool.py"),
+    "R002": ("serving/engine.py",),
+    "R003": ("fleet/",),
+    "R004": ("serving/", "fleet/execution.py"),
+    "R005": ("fleet/", "serving/engine.py", "serving/modelpool.py",
+             "serving/prefix_cache.py"),
+}
+# R005's dict-view half (.keys()/.values()/.items() iteration) only
+# matters where dict order feeds a global event heap:
+R005_DICTVIEW_PATHS = ("fleet/sim.py",)
+
+_SUPPRESS_RE = re.compile(r"#\s*lint:\s*ok\s+(R\d{3})\b\s*(.*)")
+
+_HOST_SYNC_ATTRS = {"item", "block_until_ready"}
+_WALLCLOCK_TIME = {"time", "monotonic", "perf_counter", "time_ns",
+                   "monotonic_ns", "perf_counter_ns"}
+_SORT_WRAPPERS = {"sorted", "list", "tuple", "min", "max", "len", "sum",
+                  "any", "all", "set", "frozenset", "enumerate"}
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+    suppressed: bool = False
+    reason: str = ""
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message, "suppressed": self.suppressed,
+                "reason": self.reason}
+
+
+def _rule_applies(rule: str, path: str) -> bool:
+    posix = Path(path).as_posix()
+    return any(pat in posix for pat in RULE_PATHS[rule])
+
+
+def _call_name(node: ast.Call) -> str:
+    """Dotted name of a call target, best effort ('' if dynamic)."""
+    return _dotted(node.func)
+
+
+def _dotted(node: ast.AST) -> str:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, source: str, rules: Sequence[str]):
+        self.path = path
+        self.lines = source.splitlines()
+        self.rules = set(rules)
+        self.findings: List[Finding] = []
+        # R002: names of functions fed to jax.jit / jax.lax.scan
+        self._dispatch_fns: Set[str] = set()
+        self._dispatch_lambdas: List[ast.Lambda] = []
+        # R005: names statically known to be sets
+        self._set_names: Set[str] = set()
+        self._fn_stack: List[str] = []
+
+    # ------------------------------------------------------------------
+    def _flag(self, rule: str, line: int, message: str) -> None:
+        if rule not in self.rules:
+            return
+        sup, reason = self._suppression(rule, line)
+        self.findings.append(Finding(rule=rule, path=self.path, line=line,
+                                     message=message, suppressed=sup,
+                                     reason=reason))
+
+    def _suppression(self, rule: str, line: int):
+        for ln in (line, line - 1):
+            if 1 <= ln <= len(self.lines):
+                m = _SUPPRESS_RE.search(self.lines[ln - 1])
+                if m and m.group(1) == rule:
+                    reason = m.group(2).strip()
+                    if not reason:
+                        # reasonless suppression: keep it a finding
+                        return False, ""
+                    return True, reason
+        return False, ""
+
+    # ------------------------------------------------------------------
+    # two-pass drive: collect dispatch targets + set names, then visit
+    # ------------------------------------------------------------------
+    def run(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                self._collect_dispatch(node)
+            self._collect_set_name(node)
+        self.visit(tree)
+        for lam in self._dispatch_lambdas:
+            self._check_host_sync(lam)
+
+    def _collect_dispatch(self, node: ast.Call) -> None:
+        name = _call_name(node)
+        if name.endswith("jax.jit") or name == "jit" \
+                or name.endswith("lax.scan"):
+            for arg in node.args[:1]:
+                self._note_dispatch_target(arg)
+            for kw in node.keywords:
+                if kw.arg in ("fun", "f"):
+                    self._note_dispatch_target(kw.value)
+
+    def _note_dispatch_target(self, arg: ast.AST) -> None:
+        if isinstance(arg, ast.Lambda):
+            self._dispatch_lambdas.append(arg)
+        elif isinstance(arg, (ast.Name, ast.Attribute)):
+            self._dispatch_fns.add(_dotted(arg).split(".")[-1])
+        elif isinstance(arg, ast.Call) and \
+                _call_name(arg).endswith("partial") and arg.args:
+            self._note_dispatch_target(arg.args[0])
+
+    def _collect_set_name(self, node: ast.AST) -> None:
+        target: Optional[ast.AST] = None
+        value: Optional[ast.AST] = None
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            target, value = node.targets[0], node.value
+        elif isinstance(node, ast.AnnAssign):
+            target = node.target
+            ann = _dotted(node.annotation)
+            if ann in ("set", "Set", "typing.Set", "FrozenSet",
+                       "frozenset"):
+                self._set_names.add(_dotted(target))
+                return
+            if isinstance(node.annotation, ast.Subscript) and \
+                    _dotted(node.annotation.value) in (
+                        "set", "Set", "typing.Set", "FrozenSet",
+                        "frozenset"):
+                self._set_names.add(_dotted(target))
+                return
+            value = node.value
+        if target is None or value is None:
+            return
+        is_set = isinstance(value, (ast.Set, ast.SetComp)) or (
+            isinstance(value, ast.Call)
+            and _call_name(value) in ("set", "frozenset"))
+        if is_set:
+            self._set_names.add(_dotted(target))
+
+    # ------------------------------------------------------------------
+    # R001: bare assert
+    # ------------------------------------------------------------------
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._flag("R001", node.lineno,
+                   "bare assert (stripped under -O); use "
+                   "repro.analysis.invariants.invariant(...)")
+        self.generic_visit(node)
+
+    # ------------------------------------------------------------------
+    # R002: host sync inside dispatch regions
+    # ------------------------------------------------------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._fn_stack.append(node.name)
+        if node.name in self._dispatch_fns:
+            self._check_host_sync(node)
+        self.generic_visit(node)
+        self._fn_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def _check_host_sync(self, fn: ast.AST) -> None:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            leaf = name.split(".")[-1]
+            if leaf in _HOST_SYNC_ATTRS and "." in name:
+                self._flag("R002", node.lineno,
+                           f"host sync `{name}()` inside a dispatch "
+                           "region")
+            elif name in ("np.asarray", "numpy.asarray", "float"):
+                self._flag("R002", node.lineno,
+                           f"host transfer `{name}()` inside a "
+                           "dispatch region")
+
+    # ------------------------------------------------------------------
+    # R003 / R004: call + raise checks
+    # ------------------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _call_name(node)
+        if name.startswith("random.") or name in ("random",):
+            self._flag("R003", node.lineno,
+                       f"unseeded stdlib randomness `{name}()` in a "
+                       "deterministic layer")
+        elif name.startswith("np.random.") or \
+                name.startswith("numpy.random."):
+            leaf = name.split(".")[-1]
+            if leaf not in ("default_rng", "Generator", "SeedSequence",
+                            "PCG64"):
+                self._flag("R003", node.lineno,
+                           f"module-level numpy randomness `{name}()`; "
+                           "thread a seeded default_rng instead")
+        elif name.startswith("time.") and \
+                name.split(".")[-1] in _WALLCLOCK_TIME:
+            self._flag("R003", node.lineno,
+                       f"wall-clock `{name}()` in a deterministic layer")
+        self.generic_visit(node)
+
+    def visit_Raise(self, node: ast.Raise) -> None:
+        exc = node.exc
+        name = ""
+        if isinstance(exc, ast.Call):
+            name = _call_name(exc)
+        elif exc is not None:
+            name = _dotted(exc)
+        if name in ("RuntimeError", "Exception"):
+            self._flag("R004", node.lineno,
+                       f"bare `{name}` raised in a serving path; use a "
+                       "structured exception (AdmissionRejected, "
+                       "InvariantError, ...)")
+        self.generic_visit(node)
+
+    # ------------------------------------------------------------------
+    # R005: unsorted set/dict-view iteration
+    # ------------------------------------------------------------------
+    def visit_For(self, node: ast.For) -> None:
+        self._check_iteration(node.iter)
+        self.generic_visit(node)
+
+    def visit_comprehension(self, node: ast.comprehension) -> None:
+        self._check_iteration(node.iter)
+        self.generic_visit(node)
+
+    def _check_iteration(self, it: ast.AST) -> None:
+        # sorted(...)/list(...)/... wrappers neutralize the hazard
+        if isinstance(it, ast.Call) and _call_name(it) in _SORT_WRAPPERS:
+            return
+        name = _dotted(it)
+        if name and name in self._set_names:
+            self._flag("R005", it.lineno,
+                       f"iteration over set `{name}` feeds event/lane "
+                       "order; wrap in sorted(...)")
+            return
+        if isinstance(it, ast.Call) and \
+                _call_name(it).split(".")[-1] in ("keys", "values",
+                                                  "items"):
+            posix = Path(self.path).as_posix()
+            if any(pat in posix for pat in R005_DICTVIEW_PATHS) or \
+                    self.path == "<snippet>":
+                self._flag("R005", it.lineno,
+                           f"iteration over dict view "
+                           f"`{_call_name(it)}()` feeds event order; "
+                           "wrap in sorted(...)")
+
+
+def lint_source(source: str, path: str = "<snippet>",
+                rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint one source string.  ``rules=None`` applies each rule iff
+    ``path`` matches its patrol list (``<snippet>`` matches all)."""
+    if rules is None:
+        if path == "<snippet>":
+            rules = list(RULES)
+        else:
+            rules = [r for r in RULES if _rule_applies(r, path)]
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(rule="PARSE", path=path, line=e.lineno or 0,
+                        message=f"syntax error: {e.msg}")]
+    linter = _Linter(path=path, source=source, rules=rules)
+    linter.run(tree)
+    linter.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return linter.findings
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    """Lint every ``*.py`` under the given files/directories."""
+    files: List[Path] = []
+    for p in paths:
+        pp = Path(p)
+        if pp.is_dir():
+            files.extend(sorted(pp.rglob("*.py")))
+        elif pp.suffix == ".py":
+            files.append(pp)
+    findings: List[Finding] = []
+    for f in files:
+        findings.extend(lint_source(f.read_text(), path=str(f)))
+    return findings
+
+
+def report(findings: List[Finding], as_json: bool = False) -> str:
+    if as_json:
+        return json.dumps({
+            "rules": RULES,
+            "n_findings": len(findings),
+            "n_unsuppressed": sum(not f.suppressed for f in findings),
+            "findings": [f.as_dict() for f in findings],
+        }, indent=2)
+    lines = []
+    for f in findings:
+        mark = f" [suppressed: {f.reason}]" if f.suppressed else ""
+        lines.append(f"{f.path}:{f.line}: {f.rule} {f.message}{mark}")
+    open_n = sum(not f.suppressed for f in findings)
+    lines.append(f"{len(findings)} finding(s), {open_n} unsuppressed")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    as_json = "--json" in argv
+    paths = [a for a in argv if not a.startswith("--")] or ["src/"]
+    findings = lint_paths(paths)
+    print(report(findings, as_json=as_json))
+    return 1 if any(not f.suppressed for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

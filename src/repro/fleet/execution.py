@@ -184,6 +184,7 @@ def _run_with_preemption(engine: ServeEngine, reqs, every: int) -> None:
                     break
                 pending.pop(0)
         if not engine.live_lanes():
+            # lint: ok R004 harness deadlock guard, not a serving path
             raise RuntimeError("preemption replay made no progress")
         engine.decode_n()
         blocks += 1
@@ -337,6 +338,7 @@ def run_trace_with_faults(trace: Sequence[FleetRequest],
                     break
                 pending.pop(0)
         if not engine.live_lanes():
+            # lint: ok R004 harness deadlock guard, not a serving path
             raise RuntimeError("fault replay made no progress")
         if dispatch in transient_set:
             # transient dispatch error: the dispatch fails and is

@@ -580,10 +580,11 @@ class FleetSim:
         first (deterministic: ties break on uid)."""
         cap = (self.preemption.max_migrations_per_request
                if self.preemption else 0)
-        slots = [s for s in node.decode_active.values()
-                 if self._migrations.get(s.uid, 0) < cap]
-        return sorted(slots, key=lambda s: (-(s.gen_len - s.tokens_done),
-                                            s.uid))
+        eligible = sorted(node.decode_active.values(),
+                          key=lambda s: (-(s.gen_len - s.tokens_done),
+                                         s.uid))
+        return [s for s in eligible
+                if self._migrations.get(s.uid, 0) < cap]
 
     def _maybe_preempt(self, node: SimNode, now: float) -> None:
         """Apply the preemption policy to ``node`` after its decode
@@ -851,6 +852,7 @@ class FleetSim:
                 self._finish(node, finished, now)
                 self._schedule_decode(node, now)
                 self._maybe_reap(node, now)
+            # lint: ok R005 per-slot snapshot write, order-free
             for slot in node.decode_active.values():
                 slot.ckpt_tokens = int(slot.tokens_done)
         self.checkpoints += 1
@@ -994,6 +996,7 @@ class FleetSim:
             derate_detected=tuple(self.derate_detected))
         # publish the aggregate report under the fleet.* namespace so
         # the sim's numbers sit next to the engines' in one exposition
+        # lint: ok R005 dataclass field order, deterministic by construction
         for key, val in report.metrics().items():
             self.registry.gauge(f"fleet.{key}").set(float(val))
         return report

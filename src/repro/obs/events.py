@@ -74,6 +74,22 @@ class EventLog:
     def to_json(self) -> str:
         return json.dumps([e.as_dict() for e in self._events])
 
+    def to_jsonl(self) -> str:
+        """One JSON object per line -- the ``pages.jsonl`` format the
+        offline sanitizer replay consumes."""
+        return "\n".join(json.dumps(e.as_dict()) for e in self._events)
+
+    def dump(self, path, prefix: Optional[str] = None) -> int:
+        """Write the log (optionally filtered to a dotted ``prefix``,
+        e.g. ``"page"`` for the allocator op stream) as JSONL.  Returns
+        the number of records written."""
+        events = (self.records_prefix(prefix) if prefix is not None
+                  else self._events)
+        with open(path, "w") as f:
+            for e in events:
+                f.write(json.dumps(e.as_dict()) + "\n")
+        return len(events)
+
 
 #: process-global default log -- what the validators emit into
 DEFAULT_LOG = EventLog()

@@ -49,6 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.invariants import invariant
+from repro.analysis.sanitizer import PageSanitizer
 from repro.models.common import ModelConfig
 from repro.models.registry import Model, build_model
 from repro.models.transformer import (init_cache, init_paged_cache,
@@ -146,6 +148,10 @@ class PagePool:
         self.free_count = 0
         self.share_count = 0
         self.cow_count = 0
+        # optional lifecycle monitor (repro.analysis.sanitizer): every
+        # mutator forwards its op through ONE attribute check -- the
+        # entire cost of running unsanitized
+        self.monitor = None
 
     @property
     def n_free(self) -> int:
@@ -170,59 +176,87 @@ class PagePool:
 
     def reserve(self, n: int) -> bool:
         """Promise ``n`` pages to a request; False if over-committed."""
-        if n > self.available():
-            return False
-        self._reserved += n
-        self.hwm = max(self.hwm, self.n_in_use + self._reserved)
-        return True
+        ok = n <= self.available()
+        if ok:
+            self._reserved += n
+            self.hwm = max(self.hwm, self.n_in_use + self._reserved)
+        m = self.monitor
+        if m is not None:
+            m.record("reserve", n=n, ok=ok)
+        return ok
 
     def unreserve(self, n: int) -> None:
-        assert 0 <= n <= self._reserved, "unreserve exceeds reservation"
+        invariant(0 <= n <= self._reserved,
+                  "unreserve exceeds reservation",
+                  n=n, reserved=self._reserved)
         self._reserved -= n
+        m = self.monitor
+        if m is not None:
+            m.record("unreserve", n=n)
 
-    def alloc(self, n: int) -> List[int]:
-        """Take ``n`` previously reserved pages off the free list."""
-        assert n <= self._reserved, "alloc without reservation"
-        assert n <= len(self._free), "free list underflow"
+    def alloc(self, n: int, holder: Any = None) -> List[int]:
+        """Take ``n`` previously reserved pages off the free list.
+        ``holder`` is an opaque owner tag (a lane index, the prefix
+        cache ...) forwarded to the lifecycle monitor when one is
+        attached."""
+        invariant(n <= self._reserved, "alloc without reservation",
+                  n=n, reserved=self._reserved)
+        invariant(n <= len(self._free), "free list underflow",
+                  n=n, n_free=len(self._free))
         self._reserved -= n
         pages = [self._free.pop() for _ in range(n)]
         self._in_use.update(pages)
         for p in pages:
             self._refcount[p] = 1
         self.alloc_count += n
+        m = self.monitor
+        if m is not None:
+            m.record("alloc", pages=list(pages), holder=holder)
         return pages
 
-    def free(self, pages: List[int]) -> None:
+    def free(self, pages: List[int], holder: Any = None) -> None:
         """Drop one reference per page; a page returns to the free list
         only when its LAST holder releases it (``free_count`` counts
         physical returns, not reference drops)."""
         for p in pages:
-            assert p in self._in_use, f"double free of page {p}"
+            invariant(p in self._in_use, f"double free of page {p}",
+                      page=p)
             self._refcount[p] -= 1
             if self._refcount[p] == 0:
                 del self._refcount[p]
                 self._in_use.remove(p)
                 self._free.append(p)
                 self.free_count += 1
+        m = self.monitor
+        if m is not None and pages:
+            m.record("free", pages=list(pages), holder=holder)
 
-    def share(self, pages: List[int]) -> None:
+    def share(self, pages: List[int], holder: Any = None) -> None:
         """Add one reference per page: a second holder (another lane's
         block table, or the prefix cache) now maps the same bytes."""
         for p in pages:
-            assert p in self._in_use, f"share of unallocated page {p}"
+            invariant(p in self._in_use,
+                      f"share of unallocated page {p}", page=p)
             self._refcount[p] += 1
         self.share_count += len(pages)
+        m = self.monitor
+        if m is not None and pages:
+            m.record("share", pages=list(pages), holder=holder)
 
-    def cow(self, page: int) -> int:
+    def cow(self, page: int, holder: Any = None) -> int:
         """Copy-on-write split: the caller gives up its reference on a
         SHARED ``page`` and receives a fresh exclusive page in exchange,
         drawn from its admission-time reservation (which is sized for
         the lane's full footprint, so the split cannot fail mid-flight).
         The caller copies the page contents and rewrites its block-table
         entry; the other holders keep the original."""
-        assert page in self._in_use, f"cow of unallocated page {page}"
-        assert self._refcount[page] >= 2, "cow of an exclusively owned page"
-        assert self._reserved >= 1, "cow without a reservation"
+        invariant(page in self._in_use,
+                  f"cow of unallocated page {page}", page=page)
+        invariant(self._refcount[page] >= 2,
+                  "cow of an exclusively owned page", page=page,
+                  refcount=self._refcount[page])
+        invariant(self._reserved >= 1, "cow without a reservation",
+                  page=page)
         self._reserved -= 1
         new = self._free.pop()
         self._in_use.add(new)
@@ -230,6 +264,9 @@ class PagePool:
         self._refcount[page] -= 1
         self.alloc_count += 1
         self.cow_count += 1
+        m = self.monitor
+        if m is not None:
+            m.record("cow", old=page, new=new, holder=holder)
         return new
 
     def refcount(self, page: int) -> int:
@@ -254,18 +291,24 @@ class PagePool:
         weight-residency trade: HBM bytes leave the KV pool).  Returns
         the number actually retired -- never a page a lane holds or a
         reservation has promised."""
-        take = min(int(n), self.available())
-        for _ in range(max(take, 0)):
-            self._disabled.append(self._free.pop())
-        return max(take, 0)
+        take = max(min(int(n), self.available()), 0)
+        pages = [self._free.pop() for _ in range(take)]
+        self._disabled.extend(pages)
+        m = self.monitor
+        if m is not None and pages:
+            m.record("shrink", pages=pages)
+        return take
 
     def grow(self, n: int) -> int:
         """Return up to ``n`` previously retired pages to the free list
         (weights left the board; the KV pool gets its bytes back)."""
-        back = min(int(n), len(self._disabled))
-        for _ in range(max(back, 0)):
-            self._free.append(self._disabled.pop())
-        return max(back, 0)
+        back = max(min(int(n), len(self._disabled)), 0)
+        pages = [self._disabled.pop() for _ in range(back)]
+        self._free.extend(pages)
+        m = self.monitor
+        if m is not None and pages:
+            m.record("grow", pages=pages)
+        return back
 
     def bind_registry(self, registry: MetricsRegistry,
                       prefix: str = "pool") -> None:
@@ -299,17 +342,29 @@ class PagePool:
                        help="cumulative copy-on-write page splits")
 
     def check(self) -> None:
-        """Assert the conservation invariant (test hook)."""
-        assert (len(self._free) + len(self._in_use)
-                + len(self._disabled) == self.n_pages)
-        assert len(set(self._free)) == len(self._free)
-        assert len(set(self._disabled)) == len(self._disabled)
-        assert not self._in_use.intersection(self._free)
-        assert not self._in_use.intersection(self._disabled)
-        assert not set(self._free).intersection(self._disabled)
-        assert 0 <= self._reserved <= len(self._free)
-        assert set(self._refcount) == self._in_use
-        assert all(c >= 1 for c in self._refcount.values())
+        """Raise unless the conservation invariants hold (test hook)."""
+        invariant(len(self._free) + len(self._in_use)
+                  + len(self._disabled) == self.n_pages,
+                  "page conservation broken", n_free=len(self._free),
+                  n_in_use=len(self._in_use),
+                  n_disabled=len(self._disabled), n_pages=self.n_pages)
+        invariant(len(set(self._free)) == len(self._free),
+                  "duplicate page on the free list")
+        invariant(len(set(self._disabled)) == len(self._disabled),
+                  "duplicate page on the disabled list")
+        invariant(not self._in_use.intersection(self._free),
+                  "page both in use and free")
+        invariant(not self._in_use.intersection(self._disabled),
+                  "page both in use and disabled")
+        invariant(not set(self._free).intersection(self._disabled),
+                  "page both free and disabled")
+        invariant(0 <= self._reserved <= len(self._free),
+                  "reservation exceeds the free list",
+                  reserved=self._reserved, n_free=len(self._free))
+        invariant(set(self._refcount) == self._in_use,
+                  "refcounts out of sync with the in-use set")
+        invariant(all(c >= 1 for c in self._refcount.values()),
+                  "in-use page with zero refcount")
 
 
 # ----------------------------------------------------------------------
@@ -475,7 +530,7 @@ class ServeEngine:
                  rng_seed: int = 0, dispatch_n: int = 8,
                  prefill_bucketing: bool = True, paged: bool = False,
                  page_size: int = 16, n_pages: Optional[int] = None,
-                 prefix_sharing: bool = False,
+                 prefix_sharing: bool = False, sanitize: bool = False,
                  tracer: Optional[SpanTracer] = None,
                  registry: Optional[MetricsRegistry] = None,
                  name: str = "serve",
@@ -498,17 +553,21 @@ class ServeEngine:
         self.prefill_bucketing = prefill_bucketing
         self.paged = bool(paged)
         self.page_size = int(page_size)
+        self._sanitizer: Optional[PageSanitizer] = None
         if self.paged:
-            assert not cfg.is_encdec, "paged cache: decoder-only families"
+            invariant(not cfg.is_encdec,
+                      "paged cache: decoder-only families",
+                      family=cfg.family)
             if cfg.attn_free:
                 self._bt_width = 0      # O(1) recurrent state, no pages
             else:
                 self._bt_width = paged_capacity(max_len, cfg) // page_size
             if n_pages is None:
                 n_pages = n_lanes * self._bt_width
-            assert n_pages >= self._bt_width, (
+            invariant(n_pages >= self._bt_width, (
                 "page pool smaller than one full context: no request "
-                "could ever be admitted")
+                "could ever be admitted"), n_pages=n_pages,
+                bt_width=self._bt_width)
             self.pool = PagePool(n_pages, page_size)
             # one extra physical page the allocator never hands out: a
             # DEAD lane still steps inside the jitted batch and writes
@@ -516,6 +575,12 @@ class ServeEngine:
             # rows at the scratch page keeps that write off pages the
             # allocator may have re-issued to a live lane
             self._scratch_page = n_pages
+            if sanitize:
+                self._sanitizer = PageSanitizer(strict=True)
+                self.pool.monitor = self._sanitizer
+                self._sanitizer.record(
+                    "init", n_pages=n_pages, page_size=page_size,
+                    scratch=self._scratch_page)
             self.cache = init_paged_cache(cfg, n_lanes, max_len,
                                           page_size=page_size,
                                           n_pages=n_pages + 1)
@@ -527,12 +592,13 @@ class ServeEngine:
             self._blocked_uids: set = set()
             self.prefix_cache: Optional[PrefixCache] = None
             if prefix_sharing:
-                assert prefix_sharing_supported(cfg), (
+                invariant(prefix_sharing_supported(cfg), (
                     "prefix sharing needs the whole prompt context "
                     "page-resident and append-only (no sliding window, "
-                    "no recurrent state)")
-                assert "ssm_h" not in self.cache, \
-                    "prefix sharing: attention-backed paged caches only"
+                    "no recurrent state)"), family=cfg.family)
+                invariant("ssm_h" not in self.cache,
+                          "prefix sharing: attention-backed paged "
+                          "caches only")
                 self.prefix_cache = PrefixCache(self.pool, page_size)
         else:
             self.pool = None
@@ -738,12 +804,15 @@ class ServeEngine:
         have = len(self._lane_pages[lane])
         if target <= have:
             return
-        new = self.pool.alloc(target - have)
+        new = self.pool.alloc(target - have, holder=lane)
         self._lane_reserved[lane] -= len(new)
         self._lane_pages[lane].extend(new)
         self.cache["block_tables"] = (
             self.cache["block_tables"].at[lane, have:target]
             .set(jnp.asarray(new, jnp.int32)))
+        s = self._sanitizer
+        if s is not None:
+            s.record("map", lane=lane, pages=list(new))
         self.stats["kv_pages_hwm"] = max(self.stats["kv_pages_hwm"],
                                          self.pool.hwm)
 
@@ -811,11 +880,14 @@ class ServeEngine:
         # the lane takes its own reference on every matched page; the
         # block-table row is written in logical order, so evict's
         # position-ordered gather needs no special case
-        self.pool.share(shared)
+        self.pool.share(shared, holder=lane)
         self._lane_pages[lane] = list(shared)
         self.cache["block_tables"] = (
             self.cache["block_tables"].at[lane, :len(shared)]
             .set(jnp.asarray(shared, jnp.int32)))
+        s = self._sanitizer
+        if s is not None:
+            s.record("map", lane=lane, pages=list(shared))
         if hit.partial is not None:
             self._cow_lane_page(lane, len(hit.pages))
         self._map_pages(lane, self._pages_needed(plen + 1))
@@ -841,7 +913,7 @@ class ServeEngine:
         old = self._lane_pages[lane][idx]
         with self.tracer.span("prefix.cow", track=self.lane_track(lane),
                               page=old):
-            new = self.pool.cow(old)
+            new = self.pool.cow(old, holder=lane)
             self._lane_reserved[lane] -= 1
             self._lane_pages[lane][idx] = new
             for key in _POOL_KEYS:
@@ -850,6 +922,10 @@ class ServeEngine:
                         self.cache[key][:, old])
             self.cache["block_tables"] = (
                 self.cache["block_tables"].at[lane, idx].set(new))
+            s = self._sanitizer
+            if s is not None:
+                s.record("write", lane=lane, pages=[new],
+                         kind="cow_copy")
         self.stats["prefix_cow_copies"] += 1
         self.stats["kv_pages_hwm"] = max(self.stats["kv_pages_hwm"],
                                          self.pool.hwm)
@@ -862,7 +938,17 @@ class ServeEngine:
         prefill is pinned by the prefix exactness tests."""
         tail = np.asarray(prompt[matched_len:], np.int32)
         tlen = int(tail.shape[0])
-        assert tlen >= 1, "prefix match must leave a tail token"
+        invariant(tlen >= 1, "prefix match must leave a tail token",
+                  plen=plen, matched_len=matched_len)
+        s = self._sanitizer
+        if s is not None:
+            # the streamed tail writes positions [matched_len, plen)
+            # plus the frozen write slot at plen (pad steps)
+            pages = self._lane_pages[lane][matched_len // self.page_size:
+                                           self._pages_needed(plen + 1)]
+            if pages:
+                s.record("write", lane=lane, pages=list(pages),
+                         kind="prefill")
         lane_cache = self._slice_lane_cache(lane)
         lane_cache["len"] = jnp.full((1,), matched_len, jnp.int32)
         bucket = _bucket_len(tlen) if self.prefill_bucketing else tlen
@@ -997,6 +1083,12 @@ class ServeEngine:
                 self.cache[pk] = jax.lax.dynamic_update_slice(
                     self.cache[pk], seg.astype(self.cache[pk].dtype),
                     (0, page, 0, 0, 0))
+        s = self._sanitizer
+        if s is not None:
+            written = self._lane_pages[lane][first_block:n_pg]
+            if written:
+                s.record("write", lane=lane, pages=list(written),
+                         kind="prefill")
 
     def _set_first_token(self, logits: jnp.ndarray, lane: int) -> None:
         key = jax.random.fold_in(self._rng_prefill, self._admit_count)
@@ -1086,6 +1178,12 @@ class ServeEngine:
             jnp.asarray(plen, jnp.int32))
         self._merge_lane_cache(lane_cache, lane)
         self._set_first_token(logits, lane)
+        s = self._sanitizer
+        if s is not None and self.paged and self._lane_pages[lane]:
+            # hybrid lanes stream the whole prompt through the decode
+            # path; every mapped page is exclusively this lane's
+            s.record("write", lane=lane,
+                     pages=list(self._lane_pages[lane]), kind="prefill")
 
     # -- stepping ----------------------------------------------------------
     def _dispatch_size(self, n: Optional[int]) -> int:
@@ -1117,6 +1215,21 @@ class ServeEngine:
                     steps = min(n, int(self._remaining_host[lane]))
                     self._map_pages(lane, self._pages_needed(
                         int(self._len_host[lane]) + steps + 1))
+                s = self._sanitizer
+                if s is not None:
+                    for lane in live:
+                        steps = min(n, int(self._remaining_host[lane]))
+                        start = int(self._len_host[lane])
+                        if self.cfg.sliding_window is not None:
+                            # ring writes rotate within the fixed set
+                            pages = list(self._lane_pages[lane])
+                        else:
+                            pages = self._lane_pages[lane][
+                                start // self.page_size:
+                                self._pages_needed(start + steps + 1)]
+                        if pages:
+                            s.record("write", lane=lane, pages=pages,
+                                     kind="decode")
             (toks, valid, self._next_token, self.cache, self._remaining,
              self._tok_idx) = self._decode_n(
                 self.params, self.cache, self._next_token,
@@ -1145,6 +1258,9 @@ class ServeEngine:
                                     track=self.lane_track(lane),
                                     uid=req.uid)
                 self._release_lane(lane)
+        if self._sanitizer is not None:
+            # dispatch boundary: shadow state must equal the real pool
+            self._sanitizer.crosscheck(self.pool)
         return out
 
     def _release_lane(self, lane: int) -> None:
@@ -1161,7 +1277,7 @@ class ServeEngine:
         self.cache["len"] = self.cache["len"].at[lane].set(0)
         self._len_host[lane] = 0
         if self.paged:
-            self.pool.free(self._lane_pages[lane])
+            self.pool.free(self._lane_pages[lane], holder=lane)
             self.pool.unreserve(self._lane_reserved[lane])
             self._lane_pages[lane] = []
             self._lane_reserved[lane] = 0
@@ -1202,15 +1318,20 @@ class ServeEngine:
         exclusively-owned pages.  Cross-engine restore of a prefix-hit
         lane is pinned bit-exact by the prefix test tier.
         """
-        assert self.paged, "evict/restore: paged engines only"
+        invariant(self.paged, "evict/restore: paged engines only")
         req = self.lane_req[lane]
-        assert req is not None, f"evict of idle lane {lane}"
+        invariant(req is not None, f"evict of idle lane {lane}",
+                  lane=lane)
         with self.tracer.span("preempt.evict",
                               track=self.lane_track(lane), uid=req.uid,
                               n_pages=len(self._lane_pages[lane])):
             pages = list(self._lane_pages[lane])
-            assert self._scratch_page not in pages, \
-                "scratch page leaked into a live block table"
+            invariant(self._scratch_page not in pages,
+                      "scratch page leaked into a live block table",
+                      lane=lane)
+            s = self._sanitizer
+            if s is not None:
+                s.record("capture", lane=lane, pages=pages)
             idx = jnp.asarray(pages, jnp.int32)
             kv = {key: jnp.take(self.cache[key], idx, axis=1)
                   for key in _POOL_KEYS if key in self.cache}
@@ -1259,9 +1380,11 @@ class ServeEngine:
         resumed step consumes the checkpoint's pre-sampled token
         instead of re-sampling from a prefill.
         """
-        assert self.paged, "evict/restore: paged engines only"
-        assert ckpt.page_size == self.page_size, \
-            "checkpoint page size does not match this engine"
+        invariant(self.paged, "evict/restore: paged engines only")
+        invariant(ckpt.page_size == self.page_size,
+                  "checkpoint page size does not match this engine",
+                  ckpt_page_size=ckpt.page_size,
+                  page_size=self.page_size)
         lanes = self.free_lanes()
         if not lanes:
             return False
@@ -1291,12 +1414,17 @@ class ServeEngine:
                 for key, val in ckpt.ssm_state.items():
                     self.cache[key] = self.cache[key].at[:, lane].set(
                         jnp.asarray(val))
+                s = self._sanitizer
+                if s is not None and self._lane_pages[lane]:
+                    s.record("write", lane=lane,
+                             pages=list(self._lane_pages[lane]),
+                             kind="restore")
         except Exception:
             # scatter failure (e.g. a checkpoint whose payload does not
             # match this engine's cache layout): the reservation and any
             # already-mapped pages MUST return to the pool, or they leak
             # -- the lane looks free but its pages stay in-use forever
-            self.pool.free(self._lane_pages[lane])
+            self.pool.free(self._lane_pages[lane], holder=lane)
             self.pool.unreserve(self._lane_reserved[lane])
             self._lane_pages[lane] = []
             self._lane_reserved[lane] = 0
@@ -1396,8 +1524,10 @@ class ServeEngine:
                     # every live lane was shed and none can restore:
                     # force the head checkpoint back in (it fit before,
                     # so it fits an empty engine)
-                    assert self.restore(shed[0]), \
-                        "shed checkpoint no longer fits an empty engine"
+                    restored = self.restore(shed[0])
+                    invariant(restored, "shed checkpoint no longer "
+                              "fits an empty engine",
+                              uid=shed[0].uid)
                     shed.popleft()
                     continue
                 raise self._never_admissible(pending[0])

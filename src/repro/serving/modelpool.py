@@ -42,6 +42,7 @@ import dataclasses
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Sequence
 
+from repro.analysis.invariants import invariant
 from repro.core.device_profile import DeviceProfile, get_profile
 from repro.models.common import ModelConfig
 from repro.obs.metrics import MetricsRegistry, StatsView
@@ -50,6 +51,7 @@ from repro.quant.quantize import QTensor
 from repro.serving.engine import (Request, ServeEngine,
                                   prefix_sharing_supported)
 from repro.serving.phase_model import link_transfer_seconds
+from repro.serving.resilience import AdmissionRejected
 
 
 def params_nbytes(params) -> int:
@@ -158,14 +160,16 @@ class ModelPool:
     # -- registry -------------------------------------------------------
     def register(self, model_id: str, cfg: ModelConfig, params,
                  spec=None) -> ModelEntry:
-        assert model_id not in self.entries, f"duplicate model {model_id}"
+        invariant(model_id not in self.entries,
+                  f"duplicate model {model_id}")
         entry = ModelEntry(model_id=model_id, cfg=cfg, params=params,
                            weight_bytes=params_nbytes(params),
                            page_bytes=kv_page_bytes(cfg, self.page_size),
                            spec=spec)
-        assert entry.weight_bytes <= self.hbm_bytes, (
+        invariant(entry.weight_bytes <= self.hbm_bytes, (
             f"{model_id} weights ({entry.weight_bytes}B) exceed the board "
-            f"budget ({self.hbm_bytes}B)")
+            f"budget ({self.hbm_bytes}B)"),
+            weight_bytes=entry.weight_bytes, hbm_bytes=self.hbm_bytes)
         self.entries[model_id] = entry
         return entry
 
@@ -201,7 +205,8 @@ class ModelPool:
         """Record the KV bytes ``model_id``'s page pool currently pins
         (active pages x page bytes; the engine calls this after every
         shrink/grow/build)."""
-        assert self.is_resident(model_id), model_id
+        invariant(self.is_resident(model_id),
+                  f"kv charge for non-resident model {model_id}")
         self._kv_charge[model_id] = int(nbytes)
 
     # -- swaps ----------------------------------------------------------
@@ -212,9 +217,10 @@ class ModelPool:
         if self.is_resident(model_id):
             self.touch(model_id)
             return 0.0
-        assert entry.weight_bytes <= self.free_bytes(), (
+        invariant(entry.weight_bytes <= self.free_bytes(), (
             f"load({model_id}): {entry.weight_bytes}B of weights do not "
-            f"fit in {self.free_bytes()}B free -- evict or shrink first")
+            f"fit in {self.free_bytes()}B free -- evict or shrink first"),
+            weight_bytes=entry.weight_bytes, free_bytes=self.free_bytes())
         self.touch(model_id)
         self._kv_charge[model_id] = 0
         entry.loads += 1
@@ -228,10 +234,11 @@ class ModelPool:
         """Drop ``model_id`` from residency.  Weights are read-only (the
         master copy lives in host RAM), so nothing writes back: the cost
         of an unload is paid later, by the reload."""
-        assert self.is_resident(model_id), model_id
-        assert self._kv_charge.get(model_id, 0) == 0, (
+        invariant(self.is_resident(model_id),
+                  f"unload of non-resident model {model_id}")
+        invariant(self._kv_charge.get(model_id, 0) == 0, (
             f"unload({model_id}) with live KV charge -- release pages "
-            "first")
+            "first"), kv_charge=self._kv_charge.get(model_id, 0))
         del self._resident[model_id]
         del self._kv_charge[model_id]
         self.stats["unloads"] += 1
@@ -270,7 +277,7 @@ class MultiModelServeEngine:
                  max_len: int = 64, temperature: float = 0.0,
                  rng_seed: int = 0, dispatch_n: int = 8,
                  prefill_bucketing: bool = True,
-                 prefix_sharing: bool = False,
+                 prefix_sharing: bool = False, sanitize: bool = False,
                  tracer: Optional[SpanTracer] = None,
                  registry: Optional[MetricsRegistry] = None,
                  name: str = "mm"):
@@ -285,6 +292,9 @@ class MultiModelServeEngine:
         # (prefixes never match across models), dropped whole when the
         # model's weights unload
         self.prefix_sharing = bool(prefix_sharing)
+        # forwarded to every inner engine: each gets its own strict
+        # PageSanitizer over its own PagePool
+        self.sanitize = bool(sanitize)
         self.engines: Dict[str, ServeEngine] = {}
         # one registry for the whole board: the byte pool, this engine,
         # and every inner per-model ServeEngine (namespaced by model id)
@@ -340,7 +350,9 @@ class MultiModelServeEngine:
 
     def _unload(self, model_id: str) -> None:
         eng = self.engines.pop(model_id)
-        assert not eng.live_lanes(), f"unload of live model {model_id}"
+        invariant(not eng.live_lanes(),
+                  f"unload of live model {model_id}",
+                  live_lanes=eng.live_lanes())
         if eng.prefix_cache is not None:
             # cache invalidation on weight unload: cached pages index
             # KV this model computed -- a reload gets a cold cache, and
@@ -348,8 +360,9 @@ class MultiModelServeEngine:
             # (and the byte budget) would see phantom in-use pages
             eng.prefix_cache.flush()
             eng.pool.check()
-            assert eng.pool.n_in_use == 0, \
-                f"unload of {model_id} with pages still referenced"
+            invariant(eng.pool.n_in_use == 0,
+                      f"unload of {model_id} with pages still referenced",
+                      n_in_use=eng.pool.n_in_use)
         entry = self.pool.entries[model_id]
         # preserve the sampling lineage and accumulate stats so a
         # reload continues exactly where this residency stopped
@@ -465,6 +478,7 @@ class MultiModelServeEngine:
                               prefix_sharing=(
                                   self.prefix_sharing
                                   and prefix_sharing_supported(entry.cfg)),
+                              sanitize=self.sanitize,
                               tracer=self.tracer, registry=self.registry,
                               name=model_id)
             # physical array at the dense target, pool shrunk to the
@@ -520,20 +534,24 @@ class MultiModelServeEngine:
         head request can never be admitted and nothing is in flight.
         """
         for r in requests:
-            assert r.model_id in self.pool.entries, (
+            invariant(r.model_id in self.pool.entries, (
                 f"request uid={r.uid} names unregistered model "
-                f"{r.model_id!r}")
+                f"{r.model_id!r}"), uid=r.uid, model_id=r.model_id)
         pending: Deque[Request] = deque(requests)
         while pending or self.live_models():
             while pending and self.admit(pending[0]):
                 pending.popleft()
             if not self.live_models():
                 head = pending[0]
-                raise RuntimeError(
-                    f"request uid={head.uid} (model {head.model_id!r}) "
-                    f"can never be admitted: hbm={self.pool.hbm_bytes}B, "
-                    f"resident={self.resident_models} and nothing is in "
-                    "flight to retire")
+                raise AdmissionRejected(
+                    uid=head.uid, reason="never_admissible",
+                    retry_after_s=None,
+                    message=(
+                        f"request uid={head.uid} (model "
+                        f"{head.model_id!r}) can never be admitted: "
+                        f"hbm={self.pool.hbm_bytes}B, "
+                        f"resident={self.resident_models} and nothing "
+                        "is in flight to retire"))
             self.decode_n(dispatch_n)
         return list(requests)
 

@@ -189,7 +189,7 @@ class PrefixCache:
         if self.max_pages is not None:
             while self._n_pages >= self.max_pages and self.evict_lru():
                 pass
-        self.pool.share([page])          # the cache's own reference
+        self.pool.share([page], holder="cache")   # the cache's own ref
         child = _Node(key, page, parent)
         parent.children[key] = child
         self._n_pages += 1
@@ -220,7 +220,7 @@ class PrefixCache:
         if leaf is None:
             return False
         del leaf.parent.children[leaf.tokens]
-        self.pool.free([leaf.page])
+        self.pool.free([leaf.page], holder="cache")
         self._n_pages -= 1
         self.evictions += 1
         return True
@@ -234,7 +234,7 @@ class PrefixCache:
         while stack:
             node = stack.pop()
             stack.extend(node.children.values())
-            self.pool.free([node.page])
+            self.pool.free([node.page], holder="cache")
             released += 1
         self._root.children.clear()
         self._n_pages = 0

@@ -1,0 +1,643 @@
+"""Static analysis & sanitizer layer: lint rules, page-lifecycle
+sanitizer, lane-lifecycle interleaving checker.
+
+Four layers of pins:
+
+* lint -- each rule R001-R005 fires on a minimal synthetic snippet and
+  stays quiet on the idiomatic fix; suppressions need a reason; the
+  JSON report is machine-readable; and the REPO'S OWN ``src/`` tree is
+  clean (zero unsuppressed findings) -- the ``make lint`` gate;
+* invariants -- :class:`InvariantError` subclasses ``AssertionError``
+  (pre-existing ``pytest.raises(AssertionError)`` sites keep working)
+  but carries structured context, and the allocator's promoted checks
+  still fire under ``python -O`` (subprocess pin);
+* sanitizer -- every violation class is detected from a scripted op
+  stream with the RIGHT code (seeded-mutation tests), strict mode
+  raises at the faulting op while replay collects, a real sanitized
+  engine run (prefill / prefix hits / CoW / evict / restore) is clean
+  and token-exact vs the unsanitized engine, and the recorded
+  ``pages.jsonl`` stream round-trips through the offline replay;
+* interleave -- the bounded explorer sweeps the admit / hit / cow /
+  evict / restore / retire / flush lifecycle exhaustively without a
+  violation against the real :class:`PagePool`, and CATCHES the seeded
+  refcount-blind allocator with a deterministic op-trace reproducer.
+
+Plus the determinism satellite: the fleet report is byte-identical
+across ``PYTHONHASHSEED`` values (subprocess pin) now that every
+set/dict-view iteration feeding event order is sorted.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.invariants import InvariantError, invariant
+from repro.analysis.lint import (RULES, lint_paths, lint_source, report,
+                                 main as lint_main)
+from repro.analysis.sanitizer import (VIOLATIONS, PageSanitizer,
+                                      SanitizerError, load_jsonl)
+
+pytestmark = pytest.mark.analysis
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+def _src_env(**extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.update(extra)
+    return env
+
+
+def _open_rules(findings):
+    return [f.rule for f in findings if not f.suppressed]
+
+
+# ----------------------------------------------------------------------
+# lint: one positive + one negative snippet per rule
+# ----------------------------------------------------------------------
+
+def test_r001_bare_assert_flagged_invariant_clean():
+    bad = "def f(x):\n    assert x > 0, 'positive'\n"
+    assert _open_rules(lint_source(bad)) == ["R001"]
+    good = ("from repro.analysis.invariants import invariant\n"
+            "def f(x):\n    invariant(x > 0, 'positive', x=x)\n")
+    assert lint_source(good) == []
+
+
+def test_r002_host_sync_inside_dispatch_region():
+    bad = textwrap.dedent("""
+        import jax
+        def _step(carry, x):
+            return carry, float(x.item())
+        step = jax.jit(_step)
+    """)
+    assert _open_rules(lint_source(bad)) == ["R002", "R002"]
+    # a lambda handed to lax.scan is a dispatch region too
+    lam = textwrap.dedent("""
+        import jax
+        out = jax.lax.scan(lambda c, x: (c, x.block_until_ready()), 0, xs)
+    """)
+    assert _open_rules(lint_source(lam)) == ["R002"]
+    # the same sync OUTSIDE any dispatch region is host-side bookkeeping
+    good = "def summarize(x):\n    return x.item()\n"
+    assert lint_source(good) == []
+
+
+def test_r003_unseeded_randomness_and_wallclock():
+    bad = textwrap.dedent("""
+        import random, time
+        import numpy as np
+        def jitter():
+            a = random.random()
+            b = np.random.rand(3)
+            t = time.perf_counter()
+            return a, b, t
+    """)
+    assert _open_rules(lint_source(bad)) == ["R003", "R003", "R003"]
+    good = textwrap.dedent("""
+        import numpy as np
+        def jitter(seed):
+            rng = np.random.default_rng(seed)
+            return rng.random(3)
+    """)
+    assert lint_source(good) == []
+
+
+def test_r004_bare_runtime_error_raise():
+    bad = "def admit(q):\n    raise RuntimeError('queue deadlocked')\n"
+    assert _open_rules(lint_source(bad)) == ["R004"]
+    good = textwrap.dedent("""
+        from repro.serving.resilience import AdmissionRejected
+        def admit(q):
+            raise AdmissionRejected(uid=1, reason='never_admissible')
+    """)
+    assert lint_source(good) == []
+    # a bare re-raise inside a handler is not a bare RuntimeError
+    assert lint_source("try:\n    f()\nexcept ValueError:\n    raise\n") == []
+
+
+def test_r005_unsorted_set_and_dictview_iteration():
+    bad = textwrap.dedent("""
+        pending = {3, 1, 2}
+        def drain(heap):
+            for uid in pending:
+                heap.push(uid)
+    """)
+    assert _open_rules(lint_source(bad)) == ["R005"]
+    # comprehensions are iteration sites too
+    comp = "live = set()\nout = [x for x in live]\n"
+    assert _open_rules(lint_source(comp)) == ["R005"]
+    # dict views feed the event heap in FleetSim
+    view = "def tick(node):\n    for s in node.items():\n        s.step()\n"
+    assert _open_rules(lint_source(view)) == ["R005"]
+    good = textwrap.dedent("""
+        pending = {3, 1, 2}
+        def drain(heap, node):
+            for uid in sorted(pending):
+                heap.push(uid)
+            eligible = sorted(node.values(), key=lambda s: s.uid)
+            for s in eligible:
+                s.step()
+    """)
+    assert lint_source(good) == []
+
+
+def test_suppression_requires_reason():
+    reasoned = ("def f(x):\n"
+                "    assert x  # lint: ok R001 tier-0 scaffolding\n")
+    (f,) = lint_source(reasoned)
+    assert f.suppressed and f.reason == "tier-0 scaffolding"
+    # the line ABOVE carries the suppression too
+    above = ("# lint: ok R001 tier-0 scaffolding\n"
+             "assert True\n")
+    (f,) = lint_source(above)
+    assert f.suppressed
+    # a reasonless suppression stays an unsuppressed finding
+    bare = "def f(x):\n    assert x  # lint: ok R001\n"
+    (f,) = lint_source(bare)
+    assert not f.suppressed
+    # a suppression for a DIFFERENT rule does not apply
+    wrong = "def f(x):\n    assert x  # lint: ok R003 not this rule\n"
+    (f,) = lint_source(wrong)
+    assert not f.suppressed
+
+
+def test_json_report_is_machine_readable():
+    doc = json.loads(report(lint_source("assert True\n"), as_json=True))
+    assert doc["n_findings"] == doc["n_unsuppressed"] == 1
+    (f,) = doc["findings"]
+    assert f["rule"] == "R001" and f["line"] == 1
+    assert set(f) == {"rule", "path", "line", "message", "suppressed",
+                      "reason"}
+    assert set(doc["rules"]) == set(RULES)
+    # a syntax error is reported, not raised
+    (f,) = lint_source("def broken(:\n")
+    assert f.rule == "PARSE"
+
+
+def test_repo_src_is_lint_clean():
+    """The ``make lint`` gate: zero unsuppressed findings over src/,
+    and every suppression that holds the line carries a reason."""
+    findings = lint_paths([str(SRC)])
+    assert _open_rules(findings) == [], report(findings)
+    assert all(f.reason for f in findings if f.suppressed)
+
+
+def test_lint_cli_exit_status(capsys):
+    assert lint_main([str(SRC), "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["n_unsuppressed"] == 0
+
+
+# ----------------------------------------------------------------------
+# invariants: structured, always-on
+# ----------------------------------------------------------------------
+
+def test_invariant_error_is_structured_assertion_error():
+    invariant(True, "holds")                 # truthy: no raise
+    with pytest.raises(AssertionError) as ei:
+        invariant(False, "refcount out of sync", page=3, ref=0)
+    err = ei.value
+    assert isinstance(err, InvariantError)
+    assert err.message == "refcount out of sync"
+    assert err.context == {"page": 3, "ref": 0}
+    assert "page=3" in str(err)
+
+
+def test_pagepool_misuse_raises_invariant_error():
+    from repro.serving import PagePool
+
+    pool = PagePool(4, 8)
+    with pytest.raises(InvariantError):
+        pool.alloc(1)                        # no reservation
+    assert pool.reserve(1)
+    (p,) = pool.alloc(1)
+    pool.free([p])
+    with pytest.raises(InvariantError) as ei:
+        pool.free([p])                       # double free
+    assert ei.value.context.get("page") == p
+    with pytest.raises(InvariantError):
+        pool.unreserve(1)                    # nothing outstanding
+
+
+@pytest.mark.slow
+def test_invariants_survive_assertions_disabled():
+    """The promoted allocator checks fire under ``python -O`` (where a
+    bare assert is stripped to nothing)."""
+    code = textwrap.dedent("""
+        assert False, "-O is not active"   # stripped: proves -O mode
+        from repro.analysis.invariants import InvariantError
+        from repro.serving.engine import PagePool
+        pool = PagePool(2, 8)
+        try:
+            pool.alloc(1)
+        except InvariantError:
+            pass
+        else:
+            raise SystemExit("alloc without reservation not caught")
+        assert pool.reserve(1) or True
+        pool.reserve(1)
+        (p,) = pool.alloc(1)
+        pool.free([p])
+        try:
+            pool.free([p])
+        except InvariantError:
+            print("INVARIANTS_ON")
+        else:
+            raise SystemExit("double free not caught under -O")
+    """)
+    r = subprocess.run([sys.executable, "-O", "-c", code],
+                       capture_output=True, text=True, env=_src_env())
+    assert r.returncode == 0, r.stderr
+    assert "INVARIANTS_ON" in r.stdout
+
+
+# ----------------------------------------------------------------------
+# sanitizer: seeded mutations, one per violation class
+# ----------------------------------------------------------------------
+
+def _shadow(n_pages=4, strict=False):
+    san = PageSanitizer(strict=strict)
+    san.record("init", n_pages=n_pages, page_size=8, scratch=n_pages)
+    return san
+
+
+def _codes(san):
+    return [v.code for v in san.violations]
+
+
+def test_sanitizer_detects_double_free():
+    san = _shadow()
+    san.record("reserve", n=1, ok=True)
+    san.record("alloc", pages=[0], holder=0)
+    san.record("free", pages=[0], holder=0)
+    assert san.clean
+    san.record("free", pages=[0], holder=0)
+    assert _codes(san) == ["DOUBLE_FREE"]
+
+
+def test_sanitizer_detects_scratch_page_use():
+    san = _shadow(n_pages=4)                 # scratch id is 4
+    san.record("reserve", n=1, ok=True)
+    san.record("alloc", pages=[4], holder=0)     # allocator hands it out
+    san.record("write", lane=0, pages=[4], kind="decode")
+    san.record("capture", lane=0, pages=[1, 4])
+    san.record("free", pages=[4], holder=0)
+    assert _codes(san) == ["SCRATCH_PAGE"] * 4
+
+
+def test_sanitizer_detects_missing_cow_write():
+    """The donor may append to its shared partial page; any OTHER
+    holder must split first.  The cow + cow_copy path stays clean."""
+    san = _shadow()
+    san.record("reserve", n=2, ok=True)
+    san.record("alloc", pages=[0, 1], holder=0)
+    san.record("share", pages=[0], holder=1)
+    san.record("map", lane=1, pages=[0])
+    san.record("write", lane=0, pages=[0], kind="decode")   # the donor
+    assert san.clean
+    san.record("write", lane=1, pages=[0], kind="decode")   # no CoW!
+    assert _codes(san) == ["WRITE_SHARED_NO_COW"]
+    # the legal sequence: reserve -> cow split -> write the fresh copy
+    san.record("reserve", n=1, ok=True)
+    san.record("cow", old=0, new=2, holder=1)
+    san.record("write", lane=1, pages=[2], kind="cow_copy")
+    assert _codes(san) == ["WRITE_SHARED_NO_COW"]           # no new ones
+
+
+def test_sanitizer_detects_unshared_map_and_write():
+    san = _shadow()
+    san.record("reserve", n=1, ok=True)
+    san.record("alloc", pages=[0], holder=0)
+    san.record("map", lane=1, pages=[0])     # lane 1 holds no reference
+    san.record("write", lane=1, pages=[0], kind="decode")
+    assert _codes(san) == ["ALIAS_EXCLUSIVE", "ALIAS_EXCLUSIVE"]
+
+
+def test_sanitizer_detects_accounting_misuse():
+    san = _shadow()
+    san.record("unreserve", n=1)             # nothing promised
+    san.record("alloc", pages=[0], holder=0)     # never reserved
+    san.record("share", pages=[3], holder=1)     # page 3 is free
+    san.record("reserve", n=1, ok=True)
+    san.record("cow", old=0, new=1, holder=0)    # ref 1: nothing shared
+    san.record("write", lane=0, pages=[2], kind="decode")  # unallocated
+    assert _codes(san) == ["RESERVE_UNDERFLOW", "ALLOC_UNRESERVED",
+                           "SHARE_FREE", "COW_EXCLUSIVE", "UNKNOWN_PAGE"]
+    assert all(code in VIOLATIONS for code in _codes(san))
+
+
+def test_sanitizer_strict_raises_at_faulting_op():
+    san = _shadow(strict=True)
+    san.record("reserve", n=1, ok=True)
+    san.record("alloc", pages=[0], holder=0)
+    san.record("free", pages=[0], holder=0)
+    with pytest.raises(SanitizerError) as ei:
+        san.record("free", pages=[0], holder=0)
+    assert ei.value.violation.code == "DOUBLE_FREE"
+    assert isinstance(ei.value, AssertionError)   # InvariantError family
+    assert ei.value.violation.as_dict()["op"]["op"] == "free"
+
+
+def test_sanitizer_replay_collects_instead_of_raising():
+    ops = [
+        {"op": "init", "n_pages": 4, "page_size": 8, "scratch": 4},
+        {"op": "reserve", "n": 1, "ok": True},
+        {"op": "alloc", "pages": [0], "holder": 0},
+        {"op": "free", "pages": [0], "holder": 0},
+        {"op": "free", "pages": [0], "holder": 0},
+        {"op": "free", "pages": [0], "holder": 0},
+    ]
+    san = PageSanitizer.replay(ops)          # no raise despite 2 faults
+    assert _codes(san) == ["DOUBLE_FREE", "DOUBLE_FREE"]
+    assert san.ops_seen == len(ops)
+
+
+def test_sanitizer_crosscheck_catches_shadow_pool_divergence():
+    from repro.serving import PagePool
+
+    pool = PagePool(4, 8)
+    san = PageSanitizer(strict=False)
+    pool.monitor = san
+    san.record("init", n_pages=4, page_size=8, scratch=4)
+    pool.reserve(2)
+    pages = pool.alloc(2, holder=0)
+    san.crosscheck(pool)
+    assert san.clean                         # mirror agrees
+    pool._free.append(pages[0])              # tamper behind the monitor
+    san.crosscheck(pool)
+    assert "CONSERVATION" in _codes(san)
+
+
+def test_sanitizer_jsonl_round_trip(tmp_path):
+    from repro.obs.events import EventLog
+
+    log = EventLog(clock=lambda: 0.0)
+    live = PageSanitizer(strict=True, log=log)
+    live.record("init", n_pages=4, page_size=8, scratch=4)
+    live.record("reserve", n=2, ok=True)
+    live.record("alloc", pages=[0, 1], holder=0)
+    live.record("share", pages=[0], holder="cache")
+    live.record("free", pages=[0, 1], holder=0)
+    live.record("free", pages=[0], holder="cache")
+    path = tmp_path / "pages.jsonl"
+    n = log.dump(path, prefix="page")
+    assert n == live.ops_seen == 6
+    replayed = PageSanitizer.replay(load_jsonl(path))
+    assert replayed.clean and replayed.ops_seen == n
+    # corrupting the stream localizes the fault on replay
+    records = load_jsonl(path)
+    records.append({"op": "free", "pages": [1], "holder": 0})
+    bad = PageSanitizer.replay(records)
+    assert _codes(bad) == ["DOUBLE_FREE"]
+
+
+# ----------------------------------------------------------------------
+# sanitizer inline: a real engine run must be clean AND exact
+# ----------------------------------------------------------------------
+
+PAGE = 8
+ENGINE_KW = dict(n_lanes=2, max_len=32, dispatch_n=4, paged=True,
+                 page_size=PAGE, rng_seed=7)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("qwen2.5-1.5b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _family(cfg, head_len=2 * PAGE, tails=(4, 6), seed=11):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, cfg.vocab_size, head_len, dtype=np.int32)
+    return [np.concatenate(
+                [head, rng.integers(0, cfg.vocab_size, t, dtype=np.int32)])
+            for t in tails]
+
+
+def _serve(cfg, params, prompts, max_new, **kw):
+    from repro.serving import Request, ServeEngine
+
+    reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    eng = ServeEngine(cfg, params, **kw)
+    eng.run(reqs)
+    return [tuple(r.generated) for r in reqs], eng
+
+
+def test_engine_sanitize_off_is_one_attr_check(small_model):
+    """OFF is the default and costs one attribute: no sanitizer object,
+    no pool monitor."""
+    from repro.serving import ServeEngine
+
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, **ENGINE_KW)
+    assert eng._sanitizer is None and eng.pool.monitor is None
+
+
+def test_engine_sanitized_run_clean_and_token_exact(small_model):
+    """Prefill + prefix hits + CoW under ``sanitize=True``: zero
+    violations, streams identical to the unsanitized engine."""
+    cfg, params = small_model
+    prompts = _family(cfg, tails=(4, 6, 8))
+    kw = dict(ENGINE_KW, prefix_sharing=True)
+    base, _ = _serve(cfg, params, prompts, 6, **kw)
+    shared, eng = _serve(cfg, params, prompts, 6, sanitize=True, **kw)
+    assert shared == base
+    san = eng._sanitizer
+    assert san is not None and eng.pool.monitor is san
+    assert san.clean and san.ops_seen > 0
+    assert eng.stats["prefix_hits"] >= 1     # CoW path actually ran
+    eng.prefix_cache.flush()
+    eng.pool.check()
+    san.crosscheck(eng.pool)
+    assert san.clean and eng.pool.n_in_use == 0
+
+
+def test_engine_sanitized_evict_restore_clean(small_model):
+    """Mid-decode evict -> restore of a prefix-hit lane under the
+    strict sanitizer: capture/restore ops all legal, mirror still in
+    lockstep at the end."""
+    from repro.serving import Request, ServeEngine
+
+    cfg, params = small_model
+    donor, consumer = _family(cfg)
+    eng = ServeEngine(cfg, params, prefix_sharing=True, sanitize=True,
+                      **ENGINE_KW)
+    dreq = Request(uid=0, prompt=donor.copy(), max_new_tokens=10)
+    eng.run([dreq])                          # retire donor, warm cache
+    creq = Request(uid=1, prompt=consumer.copy(), max_new_tokens=10)
+    assert eng.admit(creq)
+    assert eng.stats["prefix_hits"] == 1
+    eng.decode_n()
+    lane = next(i for i, r in enumerate(eng.lane_req) if r is creq)
+    ckpt = eng.evict(lane)
+    assert eng.restore(ckpt)
+    while eng.live_lanes():
+        eng.decode_n()
+    san = eng._sanitizer
+    assert san.clean
+    eng.prefix_cache.flush()
+    eng.pool.check()
+    san.crosscheck(eng.pool)
+    assert san.clean and eng.pool.n_in_use == 0
+
+
+def test_engine_offline_replay_of_recorded_run(small_model, tmp_path):
+    """The inline op stream dumped as ``pages.jsonl`` replays clean
+    offline; a corrupted record is localized to its violation."""
+    from repro.obs.events import EventLog
+    from repro.serving import Request, ServeEngine
+
+    cfg, params = small_model
+    log = EventLog(clock=lambda: 0.0)
+    eng = ServeEngine(cfg, params, prefix_sharing=True, sanitize=True,
+                      **ENGINE_KW)
+    eng._sanitizer.log = log
+    log.emit("page.init", n_pages=eng.pool.n_pages, page_size=PAGE,
+             scratch=eng._scratch_page)
+    reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=6)
+            for i, p in enumerate(_family(cfg))]
+    eng.run(reqs)
+    eng.prefix_cache.flush()
+
+    path = tmp_path / "pages.jsonl"
+    n = log.dump(path, prefix="page")
+    assert n == len(log) > 0
+    records = load_jsonl(path)
+    san = PageSanitizer.replay(records)
+    assert san.clean and san.ops_seen == n
+    # every page went back: one more free of ANY page is a double free
+    records.append({"op": "free", "pages": [0], "holder": 0})
+    bad = PageSanitizer.replay(records)
+    assert _codes(bad) == ["DOUBLE_FREE"]
+
+
+# ----------------------------------------------------------------------
+# interleaving checker
+# ----------------------------------------------------------------------
+
+def test_interleave_exhaustive_sweep_is_clean():
+    """Every legal admit/hit/cow/decode/evict/restore/retire/flush
+    interleaving to depth 4 holds the pool + shadow invariants."""
+    from repro.analysis import interleave
+
+    visited = interleave.explore(
+        lambda: interleave.LifecycleHarness(), depth=4)
+    assert visited > 100                     # a real state space
+
+
+@pytest.mark.slow
+def test_interleave_exhaustive_sweep_depth5_is_clean():
+    from repro.analysis import interleave
+
+    assert interleave.explore(
+        lambda: interleave.LifecycleHarness(), depth=5) > 500
+
+
+def test_interleave_catches_refcount_blind_allocator():
+    """The seeded bug double -- ``free`` ignores refcounts -- is legal
+    in share-free orderings and must be caught the moment an
+    interleaving shares a page and one holder releases.  The raised
+    trace is the reproducer."""
+    from repro.analysis import interleave
+
+    with pytest.raises(interleave.InterleavingBug) as ei:
+        interleave.explore(
+            lambda: interleave.LifecycleHarness(
+                pool_cls=interleave.RefcountBlindPool),
+            depth=4)
+    bug = ei.value
+    assert len(bug.trace) >= 2               # needs a share first
+    names = [name for name, _ in bug.trace]
+    assert names[0] in ("admit", "hit")      # something shared a page
+    assert "->" in str(bug)                  # human-readable trace
+
+
+def test_interleave_trace_replays_deterministically():
+    """Re-applying the reproducer trace on a fresh harness hits the
+    same violation -- it is a reproducer, not a flake."""
+    from repro.analysis import interleave
+
+    with pytest.raises(interleave.InterleavingBug) as ei:
+        interleave.explore(
+            lambda: interleave.LifecycleHarness(
+                pool_cls=interleave.RefcountBlindPool),
+            depth=4)
+    trace = ei.value.trace
+    h = interleave.LifecycleHarness(
+        pool_cls=interleave.RefcountBlindPool)
+    with pytest.raises(AssertionError):      # InvariantError family
+        for op in trace:
+            h.apply(op)
+            h.verify()
+
+
+def test_interleave_hypothesis_random_walks():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.analysis import interleave
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.integers(min_value=0, max_value=63), max_size=12))
+    def walk(indices):
+        h = interleave.LifecycleHarness()
+        h.apply_indices(indices)             # verifies after every op
+
+    walk()
+
+
+# ----------------------------------------------------------------------
+# determinism satellite: fleet report invariant under PYTHONHASHSEED
+# ----------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fleet_report_byte_identical_across_hash_seeds():
+    """Same seed => byte-identical serialized report even when set/dict
+    hash order differs (the R005 fixes in ``fleet/sim.py``)."""
+    script = textwrap.dedent("""
+        import json
+        from repro.fleet import (FleetSim, NodeSpec, PreemptionPolicy,
+                                 poisson_trace)
+        from repro.fleet.workload import LengthDist
+
+        fleet = [NodeSpec("a100-40g", 1, "prefill"),
+                 NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                          kv_pool_pages=40, page_size=16),
+                 NodeSpec("cmp-170hx-nofma", 1, "decode", decode_lanes=8,
+                          kv_pool_pages=512, page_size=16)]
+        trace = poisson_trace(3.0, 40.0, seed=2,
+                              prompt=LengthDist(256, cv=0.3),
+                              gen=LengthDist(128, cv=0.5))
+        rep = FleetSim(fleet, trace, fmt="q8_0",
+                       preemption=PreemptionPolicy()).run()
+        print(json.dumps({"metrics": rep.metrics(),
+                          "preempts": [str(e) for e in rep.preempt_events]},
+                         sort_keys=True, default=str))
+    """)
+    outs = []
+    for seed in ("1", "2"):
+        r = subprocess.run(
+            [sys.executable, "-c", script], capture_output=True,
+            text=True, env=_src_env(PYTHONHASHSEED=seed))
+        assert r.returncode == 0, r.stderr
+        outs.append(r.stdout)
+    assert outs[0] == outs[1]
+    assert '"preempts": ["' in outs[0]       # churn actually happened
