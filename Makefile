@@ -41,7 +41,15 @@
 # effective admission must reach >= 2x the no-sharing baseline at the
 # bench's 50% overlap point), or the sanitize section fails (a fully
 # sanitized shared-prefix run must report zero lifecycle violations,
-# identical streams, and < 5% steady-state decode overhead).
+# identical streams, and < 5% steady-state decode overhead), or the
+# slo_tracing section fails (full observability stack -- tracing +
+# flight recorder + SLO burn-rate controller -- must keep bit-identical
+# streams at < 5% decode overhead; a crash replay must yield gap-free
+# cross-engine RequestTimelines, one flight dump, and a ladder
+# escalation; the FleetSim fault scenario must escalate AND de-escalate
+# back to normal).  Each run also appends a row (tokens/s, percentiles,
+# git sha, section verdicts) to BENCH_history.jsonl and FAILS on a >10%
+# tokens/s regression vs the previous row.
 
 PYTEST := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest
 PYRUN  := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python

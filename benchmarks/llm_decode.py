@@ -64,6 +64,21 @@ crash + transient) and requires zero lost requests, >= 90% of the
 fault-free goodput, and at least one straggler-monitor flag -- while
 the same scenario WITHOUT a recovery policy must visibly lose requests
 (``make bench-smoke`` gates on all of it).
+
+The ``slo_tracing`` section pins the request-scoped observability
+stack: full stack on (tracing + flight ring + SLO controller) must keep
+bit-identical streams at <5% steady-state decode overhead; a crash
+replay under one shared tracer must yield a gap-free
+``RequestTimeline`` for every request (checkpointed lanes spanning both
+engines), exactly one flight-recorder dump, and a demonstrable ladder
+escalation; and a seeded ``FleetSim`` fault scenario must drive the
+burn-rate controller through a full escalate -> de-escalate cycle back
+to ``normal`` (``make bench-smoke`` gates on all of it).
+
+Every run also appends one row (tokens/s, TTFT/dispatch percentiles,
+git sha, per-section verdicts) to ``BENCH_history.jsonl`` next to the
+``--out`` file and FAILS on a >10% tokens/s regression against the
+previous row.
 """
 
 from __future__ import annotations
@@ -736,33 +751,50 @@ def sanitize_metrics(cfg, params, prompts, *, n_lanes: int, max_len: int,
                                            dtype=np.int32)])
               for i in range(len(prompts))]
 
-    def serve(sanitize):
-        # warm and time the SAME engine (see decode_path_metrics)
+    def build(sanitize):
+        # warm the engine once so timed passes measure steady state
         eng = ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
                           dispatch_n=dispatch_n, paged=True,
                           page_size=ps, prefix_sharing=True,
                           sanitize=sanitize)
         eng.run([Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
                  for i, p in enumerate(family)])
+        return eng
+
+    def timed_pass(eng):
         eng.stats = {k: 0 for k in eng.stats}
         reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
                 for i, p in enumerate(family)]
         t0 = time.perf_counter()
         eng.run(reqs)
         dt = time.perf_counter() - t0
-        streams = [tuple(r.generated) for r in reqs]
-        hits = eng.stats["prefix_hits"]
-        tps = eng.stats["generated_tokens"] / dt
-        eng.prefix_cache.flush()
-        eng.pool.check()
-        leak_free = eng.pool.n_in_use == 0
-        san = eng._sanitizer
-        if san is not None:
-            san.crosscheck(eng.pool)
-        return streams, tps, hits, leak_free, eng, san
+        return ([tuple(r.generated) for r in reqs],
+                eng.stats["generated_tokens"] / dt,
+                eng.stats["prefix_hits"])
 
-    base_streams, base_tps, _, base_leak, base_eng, _ = serve(False)
-    streams, tps, hits, leak_free, eng, san = serve(True)
+    # the sanitizer delta is small against run-to-run jitter and slow
+    # machine drift over the full bench, so interleave best-of-3 timed
+    # passes off/on (same scheme as the slo_tracing overhead arm)
+    base_eng, eng = build(False), build(True)
+    base_streams = streams = None
+    base_tps = tps = hits = 0.0
+    for _ in range(3):
+        base_streams, t, _ = timed_pass(base_eng)
+        base_tps = max(base_tps, t)
+        streams, t, hits = timed_pass(eng)
+        tps = max(tps, t)
+
+    def wind_down(e):
+        e.prefix_cache.flush()
+        e.pool.check()
+        leak_free = e.pool.n_in_use == 0
+        if e._sanitizer is not None:
+            e._sanitizer.crosscheck(e.pool)
+        return leak_free
+
+    base_leak = wind_down(base_eng)
+    leak_free = wind_down(eng)
+    san = eng._sanitizer
 
     return {
         "page_size": ps,
@@ -776,6 +808,190 @@ def sanitize_metrics(cfg, params, prompts, *, n_lanes: int, max_len: int,
         "tokens_per_s_off": round(base_tps, 2),
         "tokens_per_s_on": round(tps, 2),
         "overhead_frac": round(1.0 - tps / base_tps, 4),
+    }
+
+
+def slo_tracing_metrics(cfg, params, prompts, *, n_lanes: int,
+                        max_len: int, max_new: int, dispatch_n: int,
+                        page_size: int) -> dict:
+    """SLO-tracing section of BENCH_decode.json.
+
+    Three claims about the request-scoped observability layer
+    (``repro.obs.requests`` / ``flight`` / ``slo``):
+
+    * **overhead budget** -- the SAME paged workload served with the
+      full stack on (tracing, flight ring tapped into the tracer, SLO
+      controller stepped every dispatch) vs everything off must keep
+      bit-identical token streams and steady-state decode overhead
+      under 5% (warm-then-timed on one engine, like the sanitizer
+      gate);
+    * **crash-replay timelines** -- the recovery-oracle trace replayed
+      with a node crash under ONE shared tracer: every request
+      reconstructs a GAP-FREE :class:`~repro.obs.RequestTimeline`,
+      checkpointed lanes span BOTH engines (the migration hop), the
+      dying engine leaves exactly one flight dump, the tight-objective
+      burn-rate controller escalates the ladder, and the streams still
+      match an unobserved replay bit for bit;
+    * **burn-rate control loop** -- a seeded :class:`FleetSim` scenario
+      (board crash, then a bounded thermal derate) drives the monitor
+      through a full escalate -> de-escalate cycle back to ``normal``,
+      with the crash dumping the sim's flight ring.
+    """
+    import tempfile
+
+    from repro.fleet import (FaultEvent, FaultPlan, FleetSim, NodeSpec,
+                             RecoveryPolicy)
+    from repro.fleet.execution import run_trace_with_faults
+    from repro.fleet.workload import LengthDist, poisson_trace
+    from repro.obs import (BurnRateMonitor, FlightRecorder,
+                           MetricsRegistry, SLOController, SLOObjective,
+                           SpanTracer, request_timelines)
+    from repro.serving import DegradationLadder, Request, ServeEngine
+
+    # -- overhead budget: the full stack changes nothing observable ---
+    def build(observed: bool) -> ServeEngine:
+        registry = MetricsRegistry()
+        tracer = SpanTracer(enabled=observed, registry=registry)
+        flight = FlightRecorder(name="bench") if observed else None
+        slo = None
+        if observed:
+            # loose objectives: the controller runs its full per-dispatch
+            # path (clock reads, window maintenance, update) but never
+            # alerts, so the ladder stays at normal
+            monitor = BurnRateMonitor(
+                SLOObjective(ttft_s=60.0, tpot_s=1.0), registry=registry)
+            slo = SLOController(monitor, DegradationLadder())
+        eng = ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
+                          dispatch_n=dispatch_n, paged=True,
+                          page_size=page_size, tracer=tracer,
+                          registry=registry, flight=flight, slo=slo)
+        # warm pass: compile once so timed passes measure steady state
+        eng.run([Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+                 for i, p in enumerate(prompts)])
+        return eng
+
+    def timed_pass(eng: ServeEngine):
+        eng.stats = {k: 0 for k in eng.stats}
+        reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
+        return ([tuple(r.generated) for r in reqs],
+                eng.stats["generated_tokens"] / dt)
+
+    # the obs delta is small against run-to-run jitter AND against slow
+    # machine-state drift (thermal, background load) over the bench, so:
+    # warm both engines up front, then INTERLEAVE best-of-3 timed passes
+    # off/on -- drift hits both arms equally instead of biasing whichever
+    # arm happens to run last
+    eng_off, eng_on = build(False), build(True)
+    off_streams = on_streams = None
+    off_tps = on_tps = 0.0
+    for _ in range(3):
+        off_streams, tps = timed_pass(eng_off)
+        off_tps = max(off_tps, tps)
+        on_streams, tps = timed_pass(eng_on)
+        on_tps = max(on_tps, tps)
+
+    # -- crash replay: gap-free cross-engine timelines ----------------
+    trace = poisson_trace(2.0, 6.0, seed=3, prompt=LengthDist(12, cv=0.3),
+                          gen=LengthDist(14, cv=0.4))
+    replay_kw = dict(crash_at_dispatch=10, checkpoint_every=3,
+                     transient_dispatches=(2,), n_lanes=2, max_len=32,
+                     dispatch_n=4, page_size=8, seed=5)
+    base = run_trace_with_faults(trace, cfg, params, **replay_kw)
+    registry = MetricsRegistry()
+    tracer = SpanTracer(enabled=True, registry=registry)
+    # a tpot objective no real dispatch can meet: every sample violates,
+    # both burn windows saturate, the controller MUST escalate
+    ctl = SLOController(
+        BurnRateMonitor(SLOObjective(tpot_s=1e-9, error_budget=0.05),
+                        registry=registry),
+        DegradationLadder())
+    with tempfile.TemporaryDirectory() as tmp:
+        obs = run_trace_with_faults(trace, cfg, params, tracer=tracer,
+                                    registry=registry, flight_dir=tmp,
+                                    slo=ctl, **replay_kw)
+        dump_headers = [FlightRecorder.load(p)[0]
+                        for p in obs.flight_dumps]
+    tls = request_timelines(tracer)
+    incomplete = {uid: tl.gaps() for uid, tl in tls.items()
+                  if not tl.complete}
+    migrated = [uid for uid, tl in tls.items() if tl.hops >= 1]
+
+    # -- fleet sim: full escalate -> de-escalate cycle ----------------
+    # crash one of three boards at 6s, then derate a survivor 8x for a
+    # bounded 10s window: the tpot objective burns hard while the derate
+    # holds, then recovers -- so the controller must walk the ladder up
+    # AND back down to normal before the trace drains
+    sim_trace = poisson_trace(2.0, 40.0, seed=3,
+                              prompt=LengthDist(128, cv=0.3),
+                              gen=LengthDist(64, cv=0.4))
+    plan = FaultPlan(events=(
+        FaultEvent("crash", node=1, at_s=6.0),
+        FaultEvent("derate", node=0, at_s=8.0, factor=8.0,
+                   duration_s=10.0)))
+    sim_registry = MetricsRegistry()
+    sim_tracer = SpanTracer(enabled=True, registry=sim_registry)
+    sim_ladder = DegradationLadder()
+    sim_ctl = SLOController(
+        BurnRateMonitor(SLOObjective(tpot_s=0.008, error_budget=0.05),
+                        short_window_s=4.0, long_window_s=15.0,
+                        registry=sim_registry),
+        sim_ladder, escalate_every_s=2.0, relax_every_s=3.0)
+    cwd = os.getcwd()
+    with tempfile.TemporaryDirectory() as tmp:
+        os.chdir(tmp)            # the sim dumps its flight ring to CWD
+        try:
+            report = FleetSim([NodeSpec("cmp-170hx-nofma", 3, "both")],
+                              sim_trace, faults=plan,
+                              recovery=RecoveryPolicy(),
+                              tracer=sim_tracer, registry=sim_registry,
+                              slo=sim_ctl,
+                              flight=FlightRecorder(name="fleet")).run()
+            sim_dumps = sorted(os.listdir(tmp))
+        finally:
+            os.chdir(cwd)
+    sim_tls = request_timelines(sim_tracer)
+
+    return {
+        "overhead": {
+            "token_exact_vs_unobserved": on_streams == off_streams,
+            "tokens_per_s_off": round(off_tps, 2),
+            "tokens_per_s_on": round(on_tps, 2),
+            "overhead_frac": round(1.0 - on_tps / off_tps, 4),
+        },
+        "crash_replay": {
+            "token_exact_vs_unobserved": obs.streams == base.streams,
+            "crashes": obs.crashes,
+            "flight_dumps": len(obs.flight_dumps),
+            "flight_dump_reason": (dump_headers[0].get("reason", "")
+                                   if dump_headers else ""),
+            "requests": len(tls),
+            "complete_timelines": sum(1 for tl in tls.values()
+                                      if tl.complete),
+            "incomplete": {str(u): g for u, g in incomplete.items()},
+            "migrated_requests": len(migrated),
+            "max_hops": max((tl.hops for tl in tls.values()), default=0),
+            "controller_escalated": ctl.escalated,
+            "alerts_fired": ctl.monitor.alerts_fired,
+        },
+        "fleet_sim": {
+            "offered": report.offered,
+            "completed": report.completed,
+            "requests_lost": report.requests_lost,
+            "timelines": len(sim_tls),
+            "complete_timelines": sum(1 for tl in sim_tls.values()
+                                      if tl.complete),
+            "flight_dumps": len(sim_dumps),
+            "escalated": sim_ctl.escalated,
+            "deescalated": sim_ctl.deescalated,
+            "final_level": sim_ladder.level_name,
+            "actions": [[round(t, 3), a, lvl]
+                        for t, a, lvl in sim_ctl.actions],
+            "alerts_fired": sim_ctl.monitor.alerts_fired,
+        },
     }
 
 
@@ -911,7 +1127,37 @@ def decode_path_metrics(arch: str = "qwen2.5-1.5b", n_lanes: int = 4,
                                      max_new=max_new,
                                      dispatch_n=dispatch_n,
                                      page_size=bk),
+        "slo_tracing": slo_tracing_metrics(cfg, params, prompts,
+                                           n_lanes=n_lanes,
+                                           max_len=max_len,
+                                           max_new=max_new,
+                                           dispatch_n=dispatch_n,
+                                           page_size=bk),
     }
+
+
+def _git_sha():
+    """Short HEAD sha for the bench-history row, or None outside git."""
+    import subprocess
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or None
+    except Exception:
+        return None
+
+
+def _last_history_row(path: str):
+    """Last JSON row of BENCH_history.jsonl, or None."""
+    import json
+    try:
+        with open(path) as f:
+            lines = [ln for ln in f if ln.strip()]
+        return json.loads(lines[-1]) if lines else None
+    except (OSError, ValueError):
+        return None
 
 
 def main(argv=None) -> int:
@@ -1033,6 +1279,36 @@ def main(argv=None) -> int:
         # steady-state decode overhead sanitize-on stays under 5%
         and san["overhead_frac"] < 0.05)
     ok = ok and san_ok
+    slt = rec.get("slo_tracing", {})
+    ov = slt.get("overhead", {})
+    cr = slt.get("crash_replay", {})
+    fs = slt.get("fleet_sim", {})
+    slo_ok = (
+        bool(slt)
+        # the observability stack is a mirror, not a model change
+        and ov["token_exact_vs_unobserved"]
+        and ov["overhead_frac"] < 0.05
+        and cr["token_exact_vs_unobserved"]
+        # crash replay: one crash, one flight dump, every request's
+        # timeline gap-free, checkpointed lanes spanning both engines,
+        # and the tight-objective controller demonstrably escalated
+        and cr["crashes"] == 1
+        and cr["flight_dumps"] == 1
+        and "crash" in cr["flight_dump_reason"]
+        and cr["requests"] > 0
+        and cr["complete_timelines"] == cr["requests"]
+        and cr["migrated_requests"] >= 1
+        and cr["controller_escalated"]
+        # fleet sim: the burn-rate loop walks the ladder up AND back
+        # down to normal, losing nothing, with the crash dumped
+        and fs["escalated"]
+        and fs["deescalated"]
+        and fs["final_level"] == "normal"
+        and fs["requests_lost"] == 0
+        and fs["timelines"] > 0
+        and fs["complete_timelines"] == fs["timelines"]
+        and fs["flight_dumps"] == 1)
+    ok = ok and slo_ok
     print("BENCH_decode paged section:", "PASS" if paged_ok else "FAIL")
     print("BENCH_decode prefix section:", "PASS" if pfx_ok else "FAIL")
     print("BENCH_decode migration section:", "PASS" if mig_ok else "FAIL")
@@ -1040,6 +1316,48 @@ def main(argv=None) -> int:
     print("BENCH_decode telemetry section:", "PASS" if tel_ok else "FAIL")
     print("BENCH_decode faults section:", "PASS" if flt_ok else "FAIL")
     print("BENCH_decode sanitize section:", "PASS" if san_ok else "FAIL")
+    print("BENCH_decode slo_tracing section:", "PASS" if slo_ok else "FAIL")
+
+    # -- bench history: append one row per run, gate on regression ----
+    hist_path = os.path.join(os.path.dirname(os.path.abspath(args.out)),
+                             "BENCH_history.jsonl")
+    prev = _last_history_row(hist_path)
+    row = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "git_sha": _git_sha(),
+        "arch": rec["arch"],
+        "tokens_per_s": rec["tokens_per_s"],
+        "baseline_tokens_per_s": rec["baseline_tokens_per_s"],
+        "dispatch_reduction_x": rec["dispatch_reduction_x"],
+        "ttft_hit_ms": rec["prefix"]["ttft"]["hit_ms"],
+        "ttft_miss_ms": rec["prefix"]["ttft"]["miss_ms"],
+        "decode_dispatch_p50_s": rec["telemetry"]["phase_durations_s"]
+        .get("span.decode.dispatch.seconds", {}).get("p50"),
+        "decode_dispatch_p99_s": rec["telemetry"]["phase_durations_s"]
+        .get("span.decode.dispatch.seconds", {}).get("p99"),
+        "slo_overhead_frac": ov.get("overhead_frac"),
+        "sections": {"paged": paged_ok, "prefix": pfx_ok,
+                     "migration": mig_ok, "multimodel": mm_ok,
+                     "telemetry": tel_ok, "faults": flt_ok,
+                     "sanitize": san_ok, "slo_tracing": slo_ok},
+        "pass": ok,
+    }
+    if prev is not None and prev.get("tokens_per_s"):
+        delta = row["tokens_per_s"] / prev["tokens_per_s"] - 1.0
+        print(f"BENCH_history tokens/s: {row['tokens_per_s']:.2f} "
+              f"vs {prev['tokens_per_s']:.2f} "
+              f"({prev.get('git_sha') or 'prev'}): {delta:+.1%}")
+        if delta < -0.10:
+            print("BENCH_decode history section: FAIL "
+                  "(>10% tokens/s regression)")
+            ok = False
+        else:
+            print("BENCH_decode history section: PASS")
+    else:
+        print("BENCH_history: first run, no baseline to compare")
+    with open(hist_path, "a") as f:
+        f.write(json.dumps(row) + "\n")
+
     print("BENCH_decode:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -13,18 +13,27 @@ kills a decode board outright at t=20.1s:
 * the training-loop straggler monitor, re-used on the sim clock, flags
   the derated board from its s/token EWMA alone.
 
-The run leaves a Perfetto-loadable trace (``fault_drill_trace.json``,
-open at https://ui.perfetto.dev) with the fault windows, the crash
-instant, the recovery transfers and the straggler flag on their nodes'
-tracks.
+The recovery run also carries the full observability stack: a flight
+recorder whose ring the crash dumps to ``flight_<node>.jsonl``, and an
+SLO burn-rate controller that walks the degradation ladder while the
+derate window burns the tpot budget.  The run leaves a
+Perfetto-loadable trace (``fault_drill_trace.json``, open at
+https://ui.perfetto.dev) with the fault windows, the crash instant,
+the recovery transfers and the straggler flag on their nodes' tracks,
+then renders every artifact through ``python -m repro.obs.dump``.
 
 Run:  PYTHONPATH=src python examples/fault_drill.py
 """
 
+import glob
+import os
+
 from repro.fleet import (FaultEvent, FaultPlan, FleetSim, LengthDist,
                          NodeSpec, RecoveryPolicy, RetryPolicy,
                          poisson_trace)
-from repro.obs import MetricsRegistry, SpanTracer
+from repro.obs import (BurnRateMonitor, FlightRecorder, MetricsRegistry,
+                       SLOController, SLOObjective, SpanTracer, dump)
+from repro.serving import DegradationLadder
 
 SLO = dict(ttft_slo_s=2.0, tpot_slo_s=0.08)
 
@@ -69,10 +78,22 @@ def main():
     base = FleetSim(fleet(), trace, **SLO).run()
     show("fault-free", base)
 
+    for stale in glob.glob("flight_*.jsonl"):
+        os.remove(stale)                  # fresh drill, fresh dumps
     registry = MetricsRegistry()
     tracer = SpanTracer(enabled=True, registry=registry)
+    ladder = DegradationLadder()
+    # tighter objective than the report SLO: the x3 derate pushes tpot
+    # past 3 ms while healthy boards stay under 2 ms, so the burn-rate
+    # loop visibly walks the ladder up during the window and back down
+    ctl = SLOController(
+        BurnRateMonitor(SLOObjective(tpot_s=0.003, error_budget=0.05),
+                        short_window_s=4.0, long_window_s=15.0,
+                        registry=registry),
+        ladder, escalate_every_s=2.0, relax_every_s=3.0)
     rep = FleetSim(fleet(), trace, faults=plan, recovery=recovery,
-                   tracer=tracer, registry=registry, **SLO).run()
+                   tracer=tracer, registry=registry, slo=ctl,
+                   flight=FlightRecorder(name="fleet"), **SLO).run()
     show("with recovery", rep)
     norec = FleetSim(fleet(), trace, faults=plan, **SLO).run()
     show("no recovery", norec)
@@ -92,12 +113,27 @@ def main():
     assert rep.requests_lost == 0, "recovery drill lost requests"
     assert norec.requests_lost > 0, "no-recovery arm should lose work"
 
+    obj = ctl.monitor.objective
+    print("SLO burn-rate controller (tpot objective "
+          f"{obj.tpot_s * 1e3:.0f} ms, budget "
+          f"{obj.error_budget:.0%}):")
+    for t, action, level in ctl.actions or []:
+        print(f"  t={t:5.1f}s  {action:10s} -> {level}")
+    if not ctl.actions:
+        print("  (no ladder moves)")
+
     tracer.save("fault_drill_trace.json")
     n_recover = len(tracer.spans_named("sim.recover"))
     print(f"\nwrote fault_drill_trace.json ({len(tracer.spans)} spans, "
           f"{n_recover} recovery transfers, "
           f"{len(tracer.instants_named('sim.fault.crash'))} crash "
           f"instant) -- open at https://ui.perfetto.dev")
+
+    # render every artifact the drill produced through the dump CLI
+    artifacts = ["fault_drill_trace.json"] + sorted(
+        glob.glob("flight_*.jsonl"))
+    print(f"\npython -m repro.obs.dump {' '.join(artifacts)}")
+    dump.main(artifacts)
 
 
 if __name__ == "__main__":

@@ -15,7 +15,9 @@ R002  host-sync calls (``.item()``, ``np.asarray``,
 R003  unseeded randomness or wall-clock (``random.*``,
       ``time.time``/``monotonic``/``perf_counter``,
       ``np.random.<fn>`` module-level) in the deterministic sim and
-      faults layers
+      faults layers; also a MISMATCHED obs clock -- ``time.time`` or
+      ``time.monotonic`` injected as a ``clock=`` (tracer spans read
+      ``time.perf_counter``; mixing bases skews merged timelines)
 R004  bare ``RuntimeError``/``Exception`` raised in serving paths --
       use structured exceptions (``AdmissionRejected``,
       ``InvariantError``) the fleet can route on
@@ -60,7 +62,7 @@ RULE_PATHS = {
     "R001": ("serving/engine.py", "serving/prefix_cache.py",
              "serving/modelpool.py"),
     "R002": ("serving/engine.py",),
-    "R003": ("fleet/",),
+    "R003": ("fleet/", "obs/", "serving/"),
     "R004": ("serving/", "fleet/execution.py"),
     "R005": ("fleet/", "serving/engine.py", "serving/modelpool.py",
              "serving/prefix_cache.py"),
@@ -68,6 +70,11 @@ RULE_PATHS = {
 # R005's dict-view half (.keys()/.values()/.items() iteration) only
 # matters where dict order feeds a global event heap:
 R005_DICTVIEW_PATHS = ("fleet/sim.py",)
+# R003's wall-clock-CALL half stays scoped to the deterministic sim
+# layer; the obs-clock-MISMATCH half patrols the whole R003 list:
+R003_WALLCLOCK_PATHS = ("fleet/",)
+# clock bases that skew against the tracer's time.perf_counter
+_MISMATCHED_CLOCKS = ("time.time", "time.monotonic")
 
 _SUPPRESS_RE = re.compile(r"#\s*lint:\s*ok\s+(R\d{3})\b\s*(.*)")
 
@@ -220,6 +227,7 @@ class _Linter(ast.NodeVisitor):
         self._fn_stack.append(node.name)
         if node.name in self._dispatch_fns:
             self._check_host_sync(node)
+        self._check_clock_defaults(node)
         self.generic_visit(node)
         self._fn_stack.pop()
 
@@ -259,9 +267,36 @@ class _Linter(ast.NodeVisitor):
                            "thread a seeded default_rng instead")
         elif name.startswith("time.") and \
                 name.split(".")[-1] in _WALLCLOCK_TIME:
-            self._flag("R003", node.lineno,
-                       f"wall-clock `{name}()` in a deterministic layer")
+            posix = Path(self.path).as_posix()
+            if any(pat in posix for pat in R003_WALLCLOCK_PATHS) or \
+                    self.path == "<snippet>":
+                self._flag("R003", node.lineno,
+                           f"wall-clock `{name}()` in a deterministic "
+                           "layer")
+        for kw in node.keywords:
+            if kw.arg == "clock" and \
+                    _dotted(kw.value) in _MISMATCHED_CLOCKS:
+                self._flag("R003", node.lineno,
+                           f"obs clock mismatch: `{_dotted(kw.value)}` "
+                           "injected as clock= (tracer spans read "
+                           "time.perf_counter; share one clock base)")
         self.generic_visit(node)
+
+    def _check_clock_defaults(self, node: ast.FunctionDef) -> None:
+        args = node.args
+        params = args.posonlyargs + args.args
+        defaults = args.defaults
+        bound = params[len(params) - len(defaults):]
+        for param, default in list(zip(bound, defaults)) + [
+                (p, d) for p, d in zip(args.kwonlyargs, args.kw_defaults)
+                if d is not None]:
+            if param.arg == "clock" and \
+                    _dotted(default) in _MISMATCHED_CLOCKS:
+                self._flag("R003", default.lineno,
+                           f"obs clock mismatch: parameter default "
+                           f"`clock={_dotted(default)}` (tracer spans "
+                           "read time.perf_counter; share one clock "
+                           "base)")
 
     def visit_Raise(self, node: ast.Raise) -> None:
         exc = node.exc

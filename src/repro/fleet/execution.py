@@ -17,6 +17,7 @@ simulated served-token totals must equal the engine's exactly.
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import deque
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -27,6 +28,7 @@ from repro.fleet.sim import FleetReport, FleetSim
 from repro.fleet.workload import FleetRequest
 from repro.models.common import ModelConfig
 from repro.obs import events as obs_events
+from repro.obs.flight import FlightRecorder
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import SpanTracer
 from repro.serving.engine import LaneCheckpoint, Request, ServeEngine
@@ -270,6 +272,9 @@ class FaultReplayResult:
     retry_attempts: int
     transients: int
     checkpoints: int
+    #: flight-recorder dumps written during the replay (one per crash
+    #: when a ``flight_dir`` was given), in the order they were written
+    flight_dumps: Tuple[str, ...] = ()
 
 
 def run_trace_with_faults(trace: Sequence[FleetRequest],
@@ -283,8 +288,11 @@ def run_trace_with_faults(trace: Sequence[FleetRequest],
                           dispatch_n: int = 8, page_size: int = 16,
                           n_pages: Optional[int] = None,
                           temperature: float = 0.0,
-                          prefix_sharing: bool = False
-                          ) -> FaultReplayResult:
+                          prefix_sharing: bool = False,
+                          tracer: Optional[SpanTracer] = None,
+                          registry: Optional[MetricsRegistry] = None,
+                          flight_dir: Optional[str] = None,
+                          slo=None) -> FaultReplayResult:
     """Replay ``trace`` through the real paged engine while injecting a
     node crash (plus optional transient dispatch errors) and recovering.
 
@@ -298,6 +306,15 @@ def run_trace_with_faults(trace: Sequence[FleetRequest],
     stream rolled back to the tick), the rest replay from the prompt.
     Greedy streams must come out bit-identical to an undisturbed run
     (``validate_recovery_exactness`` pins this).
+
+    Observability: pass ONE shared ``tracer``/``registry`` and both
+    engines emit onto it, so ``repro.obs.requests`` reconstructs
+    gap-free per-request timelines ACROSS the migration hop.  With a
+    ``flight_dir``, each engine gets a flight recorder tapped into the
+    tracer and the dying engine's ring is dumped to
+    ``<flight_dir>/flight_<node>.jsonl`` at the crash (paths land in
+    ``FaultReplayResult.flight_dumps``).  An ``slo`` controller is
+    threaded into the engines and stepped at every dispatch drain.
     """
     if plan is not None:
         if crash_at_dispatch is None:
@@ -308,13 +325,18 @@ def run_trace_with_faults(trace: Sequence[FleetRequest],
     final_req: Dict[int, Request] = {r.uid: r for r in reqs}
 
     def mk_engine(node: str) -> ServeEngine:
+        flight = (FlightRecorder(name=node)
+                  if flight_dir is not None else None)
         return ServeEngine(cfg, params, n_lanes=n_lanes, max_len=max_len,
                            dispatch_n=dispatch_n, paged=True,
                            page_size=page_size, n_pages=n_pages,
                            temperature=temperature,
-                           prefix_sharing=prefix_sharing, name=node)
+                           prefix_sharing=prefix_sharing, name=node,
+                           tracer=tracer, registry=registry,
+                           flight=flight, slo=slo)
 
     engine = mk_engine("node0")
+    flight_dumps: list = []
     pending = list(reqs)
     held: deque = deque()                  # checkpoints awaiting restore
     #: uid -> (checkpoint, generated-length at the tick); the request
@@ -359,6 +381,14 @@ def run_trace_with_faults(trace: Sequence[FleetRequest],
             # node0 dies fail-stop: its lanes (and their pages) are gone
             crashes += 1
             casualties = [engine.lane_req[i] for i in engine.live_lanes()]
+            if engine.flight is not None:
+                # black box first: dump the dying engine's ring at the
+                # faulting op, before the survivor takes over
+                flight_dumps.append(engine.flight.dump(
+                    os.path.join(flight_dir,
+                                 f"flight_{engine.name}.jsonl"),
+                    reason=f"crash at dispatch {dispatch}",
+                    registry=engine.registry, dispatch=dispatch))
             engine = mk_engine("node1")
             for req in casualties:
                 snap = snapshots.get(req.uid)
@@ -392,7 +422,8 @@ def run_trace_with_faults(trace: Sequence[FleetRequest],
         checkpointed_uids=tuple(checkpointed),
         replayed_uids=tuple(replayed),
         retry_attempts=engine.stats["retry_attempts"],
-        transients=transients, checkpoints=checkpoints)
+        transients=transients, checkpoints=checkpoints,
+        flight_dumps=tuple(flight_dumps))
 
 
 def validate_recovery_exactness(trace: Sequence[FleetRequest],

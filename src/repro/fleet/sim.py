@@ -200,7 +200,8 @@ class FleetSim:
                  registry: Optional[MetricsRegistry] = None,
                  faults: Optional[FaultPlan] = None,
                  recovery: Optional[RecoveryPolicy] = None,
-                 detect_stragglers: bool = False):
+                 detect_stragglers: bool = False,
+                 slo=None, flight=None):
         self.fmt = fmt
         self.spec = spec
         # deterministic SIM-CLOCK telemetry: spans carry simulated
@@ -209,6 +210,13 @@ class FleetSim:
         self.registry = registry if registry is not None else MetricsRegistry()
         self.tracer = tracer if tracer is not None else SpanTracer(
             enabled=False, registry=self.registry)
+        # SLO burn-rate control loop (an SLOController) fed with SIM
+        # seconds at every request completion, and a flight recorder
+        # tapped into the tracer (dumped on simulated crashes)
+        self.slo = slo
+        self.flight = flight
+        if flight is not None:
+            flight.attach(tracer=self.tracer)
         self.model_specs = model_specs
         self.router = router or LeastLoadedRouter()
         self.ttft_slo_s = ttft_slo_s
@@ -693,6 +701,17 @@ class FleetSim:
                                      track=f"{node.node_id}/u{slot.uid}",
                                      uid=slot.uid,
                                      gen_len=rec.req.gen_len)
+            if slot.t_first_token is not None:
+                self.tracer.add_instant(
+                    "sim.first_token", slot.t_first_token,
+                    track=f"{node.node_id}/u{slot.uid}", uid=slot.uid)
+            if self.slo is not None:
+                mon = self.slo.monitor
+                if rec.ttft_s is not None:
+                    mon.observe_ttft(rec.ttft_s, t=now)
+                if rec.tpot_s is not None:
+                    mon.observe_tpot(rec.tpot_s, t=now)
+                self.slo.step(now)
 
     # -- fault injection & recovery ------------------------------------
     def _on_fault(self, ev: FaultEvent, now: float) -> None:
@@ -772,6 +791,13 @@ class FleetSim:
         self.fault_events.append(f"t={now:.2f}s {node.node_id} CRASH")
         self.tracer.add_instant("sim.fault.crash", now,
                                 track=node.node_id)
+        if self.flight is not None:
+            # black box: the ring holds the telemetry leading up to the
+            # crash; dump it named for the dying board
+            self.flight.dump(
+                f"flight_{node.node_id.replace('/', '_')}.jsonl",
+                reason=f"sim crash of {node.node_id} at t={now:.3f}s",
+                registry=self.registry, t=now)
         if self.straggler_monitor is not None:
             host = self._host_idx.get(node.node_id)
             if host is not None:        # dead host must not skew the median

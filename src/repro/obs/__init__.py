@@ -8,6 +8,14 @@ Chrome-trace/Perfetto and Prometheus-style exports, an append-only
 :class:`EventLog` for validator verdicts, and a sim-to-real calibration
 gate (:func:`predict_replay` / :func:`calibrate_replay`) that fits the
 scheduling model against ``fleet.execution`` replay telemetry.
+
+On top of those primitives: request-scoped timelines reconstructed
+from the span stream (:class:`RequestTimeline`), a bounded
+:class:`FlightRecorder` dumped at faulting ops, and an SLO burn-rate
+control loop (:class:`BurnRateMonitor` / :class:`SLOController`)
+closing the loop into the degradation ladder.  ``repro.obs.schema``
+catalogs the full namespace; ``python -m repro.obs.dump`` summarizes
+the artifacts.
 """
 
 from repro.obs.calibration import (
@@ -21,6 +29,7 @@ from repro.obs.calibration import (
     rel_err,
 )
 from repro.obs.events import DEFAULT_LOG, Event, EventLog, emit
+from repro.obs.flight import FlightRecorder, flight_guard
 from repro.obs.metrics import (
     Counter,
     Gauge,
@@ -28,27 +37,47 @@ from repro.obs.metrics import (
     MetricsRegistry,
     StatsView,
 )
+from repro.obs.requests import (
+    RequestTimeline,
+    export_request_tracks,
+    request_ids,
+    request_timelines,
+    save_request_tracks,
+    spans_from_chrome,
+)
+from repro.obs.slo import BurnRateMonitor, SLOController, SLOObjective
 from repro.obs.trace import Instant, Span, SpanTracer
 
 __all__ = [
+    "BurnRateMonitor",
     "CalibrationReport",
     "Counter",
     "DEFAULT_LOG",
     "Event",
     "EventLog",
+    "FlightRecorder",
     "GATED_METRICS",
     "Gauge",
     "Histogram",
     "Instant",
     "MetricsRegistry",
     "PredictedReplay",
+    "RequestTimeline",
+    "SLOController",
+    "SLOObjective",
     "Span",
     "SpanTracer",
     "StatsView",
     "calibrate_replay",
     "emit",
+    "export_request_tracks",
     "fit_dispatch_time_model",
     "fit_linear",
+    "flight_guard",
     "predict_replay",
     "rel_err",
+    "request_ids",
+    "request_timelines",
+    "save_request_tracks",
+    "spans_from_chrome",
 ]

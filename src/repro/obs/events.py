@@ -12,6 +12,14 @@ exported alongside the trace.
 The log is deliberately dumb: timestamped dicts, no levels, no
 handlers.  ``clear()`` between test cases; the default instance is
 process-global so validators need no plumbing.
+
+Clock discipline: the default clock is ``time.perf_counter`` -- the
+SAME clock :class:`~repro.obs.trace.SpanTracer` stamps spans with, so
+a merged span/event timeline lines up without translation.  (It used
+to be ``time.time``, which skewed merged timelines by the wall-clock
+epoch; lint rule R003 now flags an obs constructor handed a wall
+clock.)  An engine that owns both a tracer and a log injects ONE
+shared clock into both.
 """
 
 from __future__ import annotations
@@ -24,7 +32,7 @@ from typing import Dict, List, Optional
 
 @dataclasses.dataclass(frozen=True)
 class Event:
-    """One audit record: wall-clock time, name, free-form fields."""
+    """One audit record: timestamp (span-clock seconds), name, fields."""
 
     t: float
     name: str
@@ -37,13 +45,23 @@ class Event:
 class EventLog:
     """Append-only list of :class:`Event` with name filtering."""
 
-    def __init__(self, clock=time.time):
+    def __init__(self, clock=time.perf_counter):
         self._clock = clock
         self._events: List[Event] = []
+        #: optional tap (e.g. a flight recorder's ring buffer): called
+        #: with each Event right after it is appended
+        self.on_emit = None
+
+    @property
+    def clock(self):
+        """The clock this log stamps events with (shared-clock checks)."""
+        return self._clock
 
     def emit(self, name: str, **fields) -> Event:
         ev = Event(t=self._clock(), name=name, fields=fields)
         self._events.append(ev)
+        if self.on_emit is not None:
+            self.on_emit(ev)
         return ev
 
     def records(self, name: Optional[str] = None) -> List[Event]:

@@ -78,6 +78,10 @@ class SpanTracer:
         self.spans: List[Span] = []
         self.instants: List[Instant] = []
         self._stacks: Dict[str, List[Span]] = {}
+        #: optional taps (e.g. a flight recorder's ring buffer), called
+        #: with each closed Span / recorded Instant
+        self.on_span: Optional[Callable[[Span], None]] = None
+        self.on_instant: Optional[Callable[[Instant], None]] = None
 
     # -- recording ------------------------------------------------------
     def span(self, name: str, track: str = "main", **args):
@@ -117,6 +121,8 @@ class SpanTracer:
             return None
         ev = Instant(name=name, track=track, t=self.clock(), args=args)
         self.instants.append(ev)
+        if self.on_instant is not None:
+            self.on_instant(ev)
         return ev
 
     def add_instant(self, name: str, t: float, track: str = "main",
@@ -127,6 +133,8 @@ class SpanTracer:
             return None
         ev = Instant(name=name, track=track, t=t, args=args)
         self.instants.append(ev)
+        if self.on_instant is not None:
+            self.on_instant(ev)
         return ev
 
     def instants_named(self, name: str) -> List[Instant]:
@@ -138,6 +146,8 @@ class SpanTracer:
                 f"{self.span_metric_prefix}.{sp.name}.seconds",
                 help=f"host seconds inside {sp.name!r} spans",
             ).observe(sp.duration_s)
+        if self.on_span is not None:
+            self.on_span(sp)
 
     # -- queries --------------------------------------------------------
     def spans_named(self, name: str) -> List[Span]:

@@ -43,7 +43,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +56,7 @@ from repro.models.registry import Model, build_model
 from repro.models.transformer import (init_cache, init_paged_cache,
                                       lm_prefill_batched, paged_capacity,
                                       sample_tokens)
+from repro.obs.flight import FlightRecorder, flight_guard
 from repro.obs.metrics import MetricsRegistry, StatsView
 from repro.obs.trace import SpanTracer
 from repro.quant.quantize import QTensor, dequantize, quantize
@@ -534,7 +535,10 @@ class ServeEngine:
                  tracer: Optional[SpanTracer] = None,
                  registry: Optional[MetricsRegistry] = None,
                  name: str = "serve",
-                 ladder: Optional[DegradationLadder] = None):
+                 ladder: Optional[DegradationLadder] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 flight: Optional[FlightRecorder] = None,
+                 slo=None):
         self.cfg = cfg
         # graceful-degradation ladder (None = legacy behavior: run()
         # never sheds, and only raises in the never-admissible case)
@@ -626,7 +630,21 @@ class ServeEngine:
         self.name = name
         self.registry = registry if registry is not None else MetricsRegistry()
         self.tracer = tracer if tracer is not None else SpanTracer(
-            enabled=False, registry=self.registry)
+            enabled=False, clock=clock, registry=self.registry)
+        # one shared clock per engine: spans, SLO observations, and any
+        # request timestamps all read THIS callable, so a timeline mixing
+        # tracer spans with admit/first-token marks is skew-free (the
+        # EventLog default matches; lint R003 patrols regressions)
+        self.clock = clock if clock is not None else self.tracer.clock
+        # flight recorder: taps the tracer's span/instant hooks; dumped
+        # by flight_guard when a sanitizer/invariant error escapes an op
+        self.flight = flight
+        if flight is not None:
+            flight.attach(tracer=self.tracer)
+        # SLO burn-rate control loop (an SLOController); fed per-lane
+        # TTFT/tpot at dispatch drain, stepped once per dispatch
+        self.slo = slo
+        self._admit_t: Dict[int, float] = {}
         keymap = {k: f"{name}.{suffix}"
                   for k, suffix in self.STATS_SCHEMA.items()}
         for metric_name in keymap.values():
@@ -767,8 +785,14 @@ class ServeEngine:
                                             uid=req.uid, need_pages=need)
                     return False
             self._blocked_uids.discard(req.uid)
-        with self.tracer.span("admit", track=self.lane_track(lane),
-                              uid=req.uid):
+        if self.slo is not None and req.uid not in self._admit_t:
+            # TTFT starts at first successful admission (re-admission
+            # after evict/restore keeps the original mark)
+            self._admit_t[req.uid] = self.clock()
+        with flight_guard(self.flight, op="admit",
+                          registry=self.registry), \
+                self.tracer.span("admit", track=self.lane_track(lane),
+                                 uid=req.uid):
             if self.paged:
                 self._lane_reserved[lane] = reserve
                 self._lane_pages[lane] = []
@@ -1204,8 +1228,13 @@ class ServeEngine:
         if not live:
             return {}
         n = self._dispatch_size(n)
-        with self.tracer.span("decode.dispatch", track=self.name,
-                              n_steps=n, n_live=len(live)):
+        t_disp0 = self.clock() if self.slo is not None else 0.0
+        with flight_guard(self.flight, op="decode.dispatch",
+                          registry=self.registry), \
+                self.tracer.span(
+                    "decode.dispatch", track=self.name, n_steps=n,
+                    n_live=len(live),
+                    uids=tuple(self.lane_req[i].uid for i in live)):
             if self.paged:
                 # map the pages this block can write into BEFORE the
                 # jitted dispatch (the scan itself never touches the
@@ -1241,10 +1270,15 @@ class ServeEngine:
             toks_h, valid_h, rem_h = jax.device_get(
                 (toks, valid, self._remaining))
         self._remaining_host = np.asarray(rem_h, np.int64)
+        slo = self.slo
+        if slo is not None:
+            now = self.clock()
+            disp_s = now - t_disp0
         out: Dict[int, List[int]] = {}
         for lane in live:
             req = self.lane_req[lane]
             seq = [int(t) for t in toks_h[valid_h[:, lane], lane]]
+            first = not req.generated and bool(seq)
             req.generated.extend(seq)
             out[req.uid] = seq
             self.stats["generated_tokens"] += len(seq)
@@ -1252,15 +1286,30 @@ class ServeEngine:
             # sample (exhausted lanes freeze it), so the host mirror
             # tracks it without an extra transfer
             self._len_host[lane] += len(seq)
+            if first:
+                self.tracer.instant("first_token",
+                                    track=self.lane_track(lane),
+                                    uid=req.uid)
+                if slo is not None:
+                    t_admit = self._admit_t.pop(req.uid, None)
+                    if t_admit is not None:
+                        slo.monitor.observe_ttft(now - t_admit, t=now)
+            if slo is not None and seq:
+                slo.monitor.observe_tpot(disp_s / len(seq), t=now)
             if self._remaining_host[lane] <= 0:
                 req.done = True
                 self.tracer.instant("retire",
                                     track=self.lane_track(lane),
-                                    uid=req.uid)
+                                    uid=req.uid,
+                                    gen=len(req.generated))
                 self._release_lane(lane)
+        if slo is not None:
+            slo.step(now)
         if self._sanitizer is not None:
             # dispatch boundary: shadow state must equal the real pool
-            self._sanitizer.crosscheck(self.pool)
+            with flight_guard(self.flight, op="sanitizer.crosscheck",
+                              registry=self.registry):
+                self._sanitizer.crosscheck(self.pool)
         return out
 
     def _release_lane(self, lane: int) -> None:
@@ -1322,9 +1371,11 @@ class ServeEngine:
         req = self.lane_req[lane]
         invariant(req is not None, f"evict of idle lane {lane}",
                   lane=lane)
-        with self.tracer.span("preempt.evict",
-                              track=self.lane_track(lane), uid=req.uid,
-                              n_pages=len(self._lane_pages[lane])):
+        with flight_guard(self.flight, op="preempt.evict",
+                          registry=self.registry), \
+                self.tracer.span("preempt.evict",
+                                 track=self.lane_track(lane), uid=req.uid,
+                                 n_pages=len(self._lane_pages[lane])):
             pages = list(self._lane_pages[lane])
             invariant(self._scratch_page not in pages,
                       "scratch page leaked into a live block table",

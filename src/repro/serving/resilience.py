@@ -188,6 +188,26 @@ class DegradationLadder:
         """One clear signal (admission succeeded / pressure is low)."""
         self._relax()
 
+    def escalate(self, reason: str) -> bool:
+        """Force one rung UP (an external controller's call -- e.g. the
+        SLO burn-rate monitor paging on latency, not page pressure).
+        Bypasses the strike counter; returns True if the level moved."""
+        if self.level >= 3:
+            return False
+        self._move(self.level + 1, reason)
+        self._strikes = 0
+        return True
+
+    def deescalate(self, reason: str) -> bool:
+        """Force one rung DOWN (external controller's all-clear).
+        Bypasses the cooldown counter; returns True if the level
+        moved."""
+        if self.level <= 0:
+            return False
+        self._move(self.level - 1, reason)
+        self._clear = 0
+        return True
+
     # -- queries --------------------------------------------------------
     @property
     def level_name(self) -> str:

@@ -1,0 +1,501 @@
+"""Request-scoped observability: timelines, flight recorder, SLO loop.
+
+Five layers of invariants:
+
+* timelines -- :class:`~repro.obs.RequestTimeline` selects one uid's
+  records (scalar ``uid`` and batch ``uids``), orders them causally,
+  derives TTFT/tpot/pages/hops, and its ``gaps()`` contract calls a
+  clean life complete, tolerates the one unmatched restore a crash
+  migration legitimately produces per engine hop, and flags real gaps;
+* exporters -- Chrome-trace round-trip (``spans_from_chrome`` inverts
+  ``export_chrome_trace`` with exact durations), per-request track
+  re-projection, and Prometheus text exposition;
+* flight recorder -- bounded ring with honest drop accounting, hook
+  chaining on attach, dump/load round-trip, and ``flight_guard``
+  dumping on ``AssertionError`` subclasses only;
+* SLO -- burn-rate arithmetic, the both-windows alert rule with
+  short-window-clears hysteresis, None-objective sample dropping (no
+  dilution), and the controller's one-move-per-step pacing;
+* integration -- the full stack on a real engine is exactness-neutral,
+  every request reconstructs a gap-free timeline, the clock-skew fix
+  holds (one monotonic clock everywhere), lint R003 flags a wall clock
+  handed to an obs constructor, the schema snapshot matches
+  ``docs/observability.md``, and the dump CLI sniffs all three
+  artifact shapes.
+"""
+
+import json
+import os
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.lint import lint_source
+from repro.configs import get_config
+from repro.models import build_model
+from repro.obs import (BurnRateMonitor, EventLog, FlightRecorder,
+                       MetricsRegistry, RequestTimeline, SLOController,
+                       SLOObjective, SpanTracer, export_request_tracks,
+                       flight_guard, request_ids, request_timelines,
+                       spans_from_chrome)
+from repro.obs import dump as obs_dump
+from repro.obs import schema as obs_schema
+from repro.serving import DegradationLadder, Request, ServeEngine
+
+pytestmark = pytest.mark.obs
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen2.5-1.5b", smoke=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs(prompts, max_new):
+    return [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+
+
+ENGINE_KW = dict(n_lanes=2, max_len=64, dispatch_n=4, paged=True,
+                 page_size=8, n_pages=10)
+
+
+# ----------------------------------------------------------------------
+# timelines from hand-built records (sim clock, no engine)
+# ----------------------------------------------------------------------
+
+def _clean_life(tr, uid, t0, track="node0"):
+    """One gap-free request life starting at t0; returns retire time."""
+    tr.add_span("admit", t0, t0 + 0.2, track=track, uid=uid, n_pages=3)
+    tr.add_span("decode.dispatch", t0 + 0.2, t0 + 0.6, track=track,
+                n_steps=4, uids=(uid, 99))
+    tr.add_instant("first_token", t0 + 0.3, track=track, uid=uid)
+    tr.add_span("decode.dispatch", t0 + 0.6, t0 + 1.0, track=track,
+                n_steps=4, uids=(uid,))
+    tr.add_instant("retire", t0 + 1.0, track=track, uid=uid, gen=8)
+    return t0 + 1.0
+
+
+def test_timeline_selection_and_derived_fields():
+    tr = SpanTracer(enabled=True)
+    _clean_life(tr, uid=7, t0=10.0)
+    # unrelated request: must not leak into uid 7's view
+    tr.add_span("admit", 0.0, 0.1, track="node0", uid=3)
+
+    tl = RequestTimeline.from_tracer(tr, 7)
+    assert [s.name for s in tl.spans] == ["admit", "decode.dispatch",
+                                          "decode.dispatch"]
+    assert tl.t_admit == 10.0
+    assert tl.t_first_token == 10.3
+    assert tl.t_retire == 11.0
+    assert tl.ttft_s == pytest.approx(0.3)
+    # two dispatches, 0.4 s / 4 steps each
+    assert tl.tpot_mean_s == pytest.approx(0.1)
+    assert tl.pages_touched == 3
+    assert tl.engines == ("node0",)
+    assert tl.hops == 0
+    assert tl.complete and tl.gaps() == []
+    assert set(tl.as_dict()) == set(obs_schema.TIMELINE_KEYS)
+    # batch membership counts for uid 99 too (first dispatch only)
+    assert len(RequestTimeline.from_tracer(tr, 99).spans) == 1
+    assert sorted(request_ids(tr)) == [3, 7, 99]
+
+
+def test_timeline_gap_rules():
+    # no first token
+    tr = SpanTracer(enabled=True)
+    tr.add_span("admit", 0.0, 0.1, track="node0", uid=1)
+    tl = RequestTimeline.from_tracer(tr, 1)
+    gaps = tl.gaps()
+    assert any("first_token" in g for g in gaps)
+    assert any("retire" in g for g in gaps)
+    assert not tl.complete
+
+    # an evict that never came back is a gap
+    tr = SpanTracer(enabled=True)
+    _clean_life(tr, uid=1, t0=0.0)
+    tr.add_span("preempt.evict", 0.4, 0.5, track="node0", uid=1,
+                n_pages=2)
+    assert any("imbalance" in g
+               for g in RequestTimeline.from_tracer(tr, 1).gaps())
+
+    # a crash migration's unmatched restore is allowed, one per hop
+    tr = SpanTracer(enabled=True)
+    tr.add_span("admit", 0.0, 0.2, track="node0", uid=1)
+    tr.add_instant("first_token", 0.3, track="node0", uid=1)
+    tr.add_span("preempt.restore", 0.5, 0.6, track="node1", uid=1,
+                n_pages=2)
+    tr.add_span("decode.dispatch", 0.6, 0.8, track="node1", uids=(1,))
+    tr.add_instant("retire", 0.8, track="node1", uid=1, gen=4)
+    tl = RequestTimeline.from_tracer(tr, 1)
+    assert tl.engines == ("node0", "node1") and tl.hops == 1
+    assert tl.complete, tl.gaps()
+    # ...but a SECOND unmatched restore on the same hop is a gap
+    tr.add_span("preempt.restore", 0.9, 1.0, track="node1", uid=1)
+    assert not RequestTimeline.from_tracer(tr, 1).complete
+
+    # decode work before admission is causally impossible
+    tr = SpanTracer(enabled=True)
+    _clean_life(tr, uid=1, t0=5.0)
+    tr.add_span("decode.dispatch", 1.0, 1.5, track="node0", uids=(1,))
+    assert any("before admission" in g
+               for g in RequestTimeline.from_tracer(tr, 1).gaps())
+
+
+# ----------------------------------------------------------------------
+# exporters
+# ----------------------------------------------------------------------
+
+def test_chrome_trace_round_trip_preserves_durations():
+    tr = SpanTracer(enabled=True)
+    _clean_life(tr, uid=4, t0=2.0)
+    spans, instants = spans_from_chrome(tr.export_chrome_trace())
+    assert len(spans) == len(tr.spans)
+    assert len(instants) == len(tr.instants)
+    by_name = sorted(spans, key=lambda s: s.t0)
+    orig = sorted(tr.spans, key=lambda s: s.t0)
+    for a, b in zip(by_name, orig):
+        assert a.name == b.name and a.track == b.track
+        assert a.duration_s == pytest.approx(b.duration_s, abs=1e-9)
+    # args survive, so timelines rebuild from the exported file alone
+    tl = RequestTimeline.from_tracer(spans, 4, instants=instants)
+    assert tl.complete and tl.ttft_s == pytest.approx(0.3)
+
+
+def test_request_track_reprojection():
+    tr = SpanTracer(enabled=True)
+    _clean_life(tr, uid=4, t0=2.0)
+    _clean_life(tr, uid=5, t0=3.0, track="node1")
+    obj = export_request_tracks(request_timelines(tr))
+    names = {e["args"]["name"] for e in obj["traceEvents"]
+             if e.get("ph") == "M"}
+    # one Perfetto track per request (uid 99 rides the uids batch)
+    assert {"req/4", "req/5", "req/99"} <= names
+    # each re-projected event keeps its origin engine track in args
+    tracks = {e["args"].get("src_track") for e in obj["traceEvents"]
+              if e.get("ph") == "X"}
+    assert {"node0", "node1"} <= tracks
+
+
+def test_prometheus_exposition():
+    reg = MetricsRegistry()
+    reg.counter("slo.alerts").inc(3)
+    reg.gauge("slo.burn_rate.short", help="short burn").set(2.5)
+    reg.histogram("span.admit.seconds").observe(0.25)
+    text = reg.to_prometheus()
+    assert "slo_alerts 3" in text
+    assert "slo_burn_rate_short 2.5" in text
+    assert "# HELP slo_burn_rate_short short burn" in text
+    assert "span_admit_seconds" in text
+
+
+# ----------------------------------------------------------------------
+# flight recorder
+# ----------------------------------------------------------------------
+
+def test_flight_ring_is_bounded_and_honest():
+    fr = FlightRecorder(name="t", capacity=4)
+    for i in range(10):
+        fr.record("span", name=f"s{i}")
+    assert len(fr) == 4
+    assert fr.n_seen == 10 and fr.n_dropped == 6
+    assert [r["name"] for r in fr.records()] == ["s6", "s7", "s8", "s9"]
+
+
+def test_flight_attach_chains_existing_hooks():
+    tr = SpanTracer(enabled=True)
+    log = EventLog(clock=lambda: 0.0)
+    seen = []
+    tr.on_span = lambda s: seen.append(("hook", s.name))
+    fr = FlightRecorder(name="t").attach(tracer=tr, log=log)
+    with tr.span("admit", track="e", uid=1):
+        pass
+    tr.instant("retire", track="e", uid=1)
+    log.emit("slo.alert", short_burn=3.0)
+    # the pre-existing tap still fired AND the ring captured everything
+    assert ("hook", "admit") in seen
+    kinds = [r["kind"] for r in fr.records()]
+    assert kinds == ["span", "instant", "event"]
+
+
+def test_flight_dump_load_round_trip(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("serve.decode_dispatches").inc(5)
+    fr = FlightRecorder(name="node0", capacity=8)
+    fr.record("instant", name="first_token", track="node0/lane0",
+              t=1.0, args={"uid": 3})
+    path = fr.dump(str(tmp_path / "flight_node0.jsonl"),
+                   reason="crash at dispatch 10", registry=reg,
+                   dispatch=10)
+    header, records = FlightRecorder.load(path)
+    assert header["flight"] == "node0"
+    assert header["reason"] == "crash at dispatch 10"
+    assert header["dispatch"] == 10
+    assert header["n_records"] == 2 and header["n_dropped"] == 0
+    # the registry snapshot is appended last, so the dump carries the
+    # counters at the faulting op
+    assert records[-1]["kind"] == "metrics"
+    assert records[0]["name"] == "first_token"
+    assert all(r["kind"] in obs_schema.FLIGHT_RECORD_KINDS
+               for r in records)
+
+
+def test_flight_guard_dumps_on_invariant_errors_only(tmp_path,
+                                                     monkeypatch):
+    monkeypatch.chdir(tmp_path)
+
+    class FakeInvariantError(AssertionError):
+        pass
+
+    fr = FlightRecorder(name="g")
+    fr.record("span", name="admit")
+    with pytest.raises(FakeInvariantError):
+        with flight_guard(fr, op="admit"):
+            raise FakeInvariantError("page leak")
+    assert fr.dump_paths == [os.path.join("flight_g.jsonl")]
+    header, _ = FlightRecorder.load("flight_g.jsonl")
+    assert header["op"] == "admit"
+    assert "FakeInvariantError" in header["reason"]
+
+    # a non-lifecycle error passes through without dumping
+    with pytest.raises(ValueError):
+        with flight_guard(fr, op="admit"):
+            raise ValueError("not a lifecycle fault")
+    assert fr.n_dumps == 1
+    # and a None recorder is a no-op guard
+    with flight_guard(None, op="x"):
+        pass
+
+
+# ----------------------------------------------------------------------
+# SLO burn-rate monitor + controller
+# ----------------------------------------------------------------------
+
+def test_burn_rate_math_and_hysteresis():
+    reg = MetricsRegistry()
+    mon = BurnRateMonitor(SLOObjective(tpot_s=0.01, error_budget=0.25),
+                          short_window_s=2.0, long_window_s=10.0,
+                          burn_threshold=2.0, clear_threshold=1.0,
+                          registry=reg)
+    # 50% violations everywhere: burn = 0.5 / 0.25 = 2.0 -> alert
+    for i in range(10):
+        mon.observe_tpot(0.02 if i % 2 else 0.005, t=float(i) * 0.2)
+    assert mon.burn_rates(2.0) == (pytest.approx(2.0),
+                                   pytest.approx(2.0))
+    assert mon.update(2.0) is True
+    assert mon.alerts_fired == 1
+    assert reg["slo.violations.tpot"].value == 5
+    # short window recovers -> alert clears, long window still burning
+    for i in range(10):
+        mon.observe_tpot(0.005, t=2.0 + float(i) * 0.2)
+    short, long_ = mon.burn_rates(4.0)
+    assert short == 0.0 and long_ > 0.0
+    assert mon.update(4.0) is False
+    # re-fire needs BOTH windows again (long alone is not enough)
+    assert mon.alerts_fired == 1
+
+
+def test_none_objective_drops_samples_entirely():
+    mon = BurnRateMonitor(SLOObjective(tpot_s=0.01),
+                          short_window_s=2.0, long_window_s=10.0)
+    # TTFT carries no budget: these must NOT dilute the tpot burn rate
+    for i in range(50):
+        assert mon.observe_ttft(0.0, t=float(i) * 0.01) is False
+    for i in range(4):
+        mon.observe_tpot(0.02, t=1.0 + i * 0.01)
+    short, _ = mon.burn_rates(1.1)
+    assert short == pytest.approx(1.0 / 0.1)  # 100% violations / budget
+
+
+def test_controller_paces_one_move_per_step():
+    mon = BurnRateMonitor(SLOObjective(tpot_s=1e-9, error_budget=0.5),
+                          short_window_s=2.0, long_window_s=10.0)
+    ladder = DegradationLadder()
+    ctl = SLOController(mon, ladder, escalate_every_s=1.0,
+                        relax_every_s=2.0)
+    for i in range(31):                   # violations through t=3.0
+        mon.observe_tpot(0.01, t=float(i) * 0.1)
+    assert ctl.step(1.0) == "escalate" and ladder.level == 1
+    assert ctl.step(1.5) is None          # not due yet
+    assert ctl.step(2.0) == "escalate" and ladder.level == 2
+    assert ctl.step(3.0) == "escalate" and ladder.level == 3
+    assert ctl.step(4.0) is None          # ladder already at the top
+    # windows drain after t=13+ -> alert clears -> walk back down
+    for t in (14.0, 16.0, 18.0, 20.0):
+        ctl.step(t)
+    assert ladder.level == 0
+    assert ctl.escalated and ctl.deescalated
+    assert [a for _, a, _ in ctl.actions] == ["escalate"] * 3 + \
+        ["deescalate"] * 3
+
+
+# ----------------------------------------------------------------------
+# clock discipline + lint
+# ----------------------------------------------------------------------
+
+def test_obs_layers_share_one_monotonic_clock():
+    import time
+    # the clock-skew fix: EventLog used to default to time.time, which
+    # skewed merged span/event timelines by the wall-clock epoch
+    assert EventLog().clock is time.perf_counter
+    assert SpanTracer(enabled=False).clock is time.perf_counter
+
+
+def test_lint_r003_flags_obs_clock_mismatch():
+    bad_kwarg = "t = SpanTracer(enabled=True, clock=time.time)\n"
+    assert any(f.rule == "R003" and "clock mismatch" in f.message
+               for f in lint_source(bad_kwarg))
+    bad_default = textwrap.dedent("""
+        def make_log(clock=time.monotonic):
+            return EventLog(clock=clock)
+    """)
+    assert any(f.rule == "R003" and "clock mismatch" in f.message
+               for f in lint_source(bad_default))
+    good = textwrap.dedent("""
+        def make_log(clock=time.perf_counter):
+            return EventLog(clock=clock)
+    """)
+    assert lint_source(good) == []
+    # the clock check patrols serving/ and obs/ paths too...
+    assert any(f.rule == "R003" for f in lint_source(
+        bad_kwarg, path="src/repro/obs/custom.py"))
+    # ...but bare wall-clock CALLS stay a fleet/-only concern (benches
+    # and engines legitimately read wall time for throughput numbers)
+    call_only = "t0 = time.time()\n"
+    assert lint_source(call_only, path="src/repro/obs/custom.py") == []
+    assert any(f.rule == "R003" for f in lint_source(
+        call_only, path="src/repro/fleet/custom.py"))
+
+
+def test_schema_snapshot_matches_docs():
+    doc_path = os.path.join(os.path.dirname(__file__), os.pardir,
+                            "docs", "observability.md")
+    doc = open(doc_path).read()
+    missing = [n for n in obs_schema.all_names() if n not in doc]
+    assert not missing, (
+        f"undocumented observability names: {missing}; "
+        "add them to docs/observability.md (schema snapshot)")
+    assert len(obs_schema.all_names()) == len(set(obs_schema.all_names()))
+
+
+# ----------------------------------------------------------------------
+# dump CLI
+# ----------------------------------------------------------------------
+
+def test_dump_cli_sniffs_all_artifact_shapes(tmp_path, capsys):
+    tr = SpanTracer(enabled=True)
+    _clean_life(tr, uid=2, t0=1.0)
+    trace_path = str(tmp_path / "trace.json")
+    tr.save(trace_path)
+
+    fr = FlightRecorder(name="node0")
+    fr.record("span", name="admit", track="node0", t0=0.0, t1=0.1,
+              args={"uid": 2})
+    flight_path = fr.dump(str(tmp_path / "flight_node0.jsonl"),
+                          reason="sanity")
+
+    pages_path = str(tmp_path / "pages.jsonl")
+    with open(pages_path, "w") as f:
+        f.write(json.dumps({"op": "alloc", "page": 1}) + "\n")
+        f.write(json.dumps({"op": "free", "page": 1}) + "\n")
+
+    assert obs_dump.sniff(trace_path) == "trace"
+    assert obs_dump.sniff(flight_path) == "flight"
+    assert obs_dump.sniff(pages_path) == "pages"
+
+    assert obs_dump.main([trace_path, flight_path, pages_path]) == 0
+    out = capsys.readouterr().out
+    assert "1 request(s)" in out or "2 request(s)" in out
+    assert "flight dump of engine 'node0'" in out
+    assert "alloc=1" in out and "free=1" in out
+
+    bogus = str(tmp_path / "bogus.txt")
+    open(bogus, "w").write("not telemetry")
+    assert obs_dump.main([bogus]) == 1
+
+
+# ----------------------------------------------------------------------
+# engine integration: full stack on, nothing observable changes
+# ----------------------------------------------------------------------
+
+def test_engine_full_stack_exactness_and_gap_free_timelines(
+        small_model, tmp_path, monkeypatch):
+    cfg, params = small_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+               for _ in range(4)]
+
+    plain = _reqs(prompts, 6)
+    ServeEngine(cfg, params, **ENGINE_KW).run(plain)
+
+    monkeypatch.chdir(tmp_path)   # any flight dump lands here
+    reg = MetricsRegistry()
+    tracer = SpanTracer(enabled=True, registry=reg)
+    mon = BurnRateMonitor(SLOObjective(ttft_s=60.0, tpot_s=1.0),
+                          registry=reg)
+    ctl = SLOController(mon, DegradationLadder())
+    flight = FlightRecorder(name="serve")
+    observed = _reqs(prompts, 6)
+    eng = ServeEngine(cfg, params, tracer=tracer, registry=reg,
+                      flight=flight, slo=ctl, **ENGINE_KW)
+    eng.run(observed)
+
+    # the stack is a mirror: streams identical, ladder untouched
+    assert [r.generated for r in observed] == [r.generated
+                                               for r in plain]
+    assert ctl.ladder.level == 0 and not ctl.escalated
+
+    # every request reconstructs a gap-free timeline with real latencies
+    tls = request_timelines(tracer)
+    assert sorted(tls) == [0, 1, 2, 3]
+    for uid, tl in sorted(tls.items()):
+        assert tl.complete, (uid, tl.gaps())
+        assert tl.ttft_s is not None and tl.ttft_s > 0
+        assert tl.tpot_series, "dispatch spans must carry uids"
+    # SLO observations happened on the engine's own clock
+    assert len(mon.short) > 0
+    assert eng._admit_t == {}     # every TTFT mark was consumed
+    # the flight ring shadowed the tracer the whole run
+    assert any(r["kind"] == "span" and r["name"] == "decode.dispatch"
+               for r in flight.records())
+    # retire instants carry the generated-token count
+    retires = [e for e in tracer.instants if e.name == "retire"]
+    assert retires and all(e.args.get("gen") == 6 for e in retires)
+
+
+@pytest.mark.slow
+def test_crash_replay_produces_cross_engine_timelines(small_model,
+                                                      tmp_path):
+    from repro.fleet.execution import run_trace_with_faults
+    from repro.fleet.workload import LengthDist, poisson_trace
+
+    cfg, params = small_model
+    trace = poisson_trace(2.0, 6.0, seed=3,
+                          prompt=LengthDist(12, cv=0.3),
+                          gen=LengthDist(14, cv=0.4))
+    reg = MetricsRegistry()
+    tracer = SpanTracer(enabled=True, registry=reg)
+    ctl = SLOController(
+        BurnRateMonitor(SLOObjective(tpot_s=1e-9, error_budget=0.05),
+                        registry=reg),
+        DegradationLadder())
+    res = run_trace_with_faults(
+        trace, cfg, params, crash_at_dispatch=10, checkpoint_every=3,
+        transient_dispatches=(2,), n_lanes=2, max_len=32, dispatch_n=4,
+        page_size=8, seed=5, tracer=tracer, registry=reg,
+        flight_dir=str(tmp_path), slo=ctl)
+
+    assert res.crashes == 1 and len(res.flight_dumps) == 1
+    header, records = FlightRecorder.load(res.flight_dumps[0])
+    assert "crash" in header["reason"] and records
+
+    tls = request_timelines(tracer)
+    assert tls and all(tl.complete for tl in tls.values()), {
+        u: tl.gaps() for u, tl in tls.items() if not tl.complete}
+    # checkpointed lanes span the dead board AND the survivor
+    for uid in res.checkpointed_uids:
+        assert tls[uid].engines == ("node0", "node1")
+    assert ctl.escalated          # the impossible objective paged
